@@ -1,0 +1,96 @@
+"""Table 1 hallucination columns (POPE/CHAIR analog).
+
+The paper reports >5-pt hallucination reductions from CAMD. Mechanism:
+the S_align evidence term down-weights candidates whose content is not
+grounded in the visual evidence, so the coverage posterior (and the final
+selection) shifts away from hallucinated clusters. We simulate exactly
+that causal chain: wrong candidates are "hallucinated" with probability
+h; hallucinated candidates have depressed alignment observables; we
+measure the hallucination rate of the SELECTED answer with the evidence
+term off (λ_g=0 — plain confidence decoding) vs on (λ_g=0.9 — CAMD).
+
+The inner loop is the CAMD coverage rule in closed form: candidates carry
+exact answer ids, so clustering-by-answer and the Eq. 14 posterior are
+computed directly in numpy (equivalent to the jitted controller for this
+observable model; the controller itself is exercised by bench_fig2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.tasks import SimulatedDecoder
+
+
+class HallucinationSim(SimulatedDecoder):
+    def __init__(self, lambda_g: float, h_rate: float = 0.6, **kw):
+        super().__init__(**kw)
+        self.lg = lambda_g
+        self.h_rate = h_rate
+
+    def trial(self, s, k=1):
+        out = super().trial(s, k)
+        c = out["correct"].astype(np.float64)
+        halluc = (~out["correct"]) & (self.rng.random(k) < self.h_rate)
+        out["halluc"] = halluc
+        s_gen = 0.5 * c + 0.6 * self.rng.standard_normal(k)
+        # alignment: high when grounded, strongly depressed if hallucinated
+        s_align = 0.8 * c - 1.4 * halluc + 0.6 * self.rng.standard_normal(k)
+        out["score"] = s_gen + self.lg * s_align
+        return out
+
+
+def _run(lambda_g: float, n: int, seed: int, *, delta=0.05, scale=1.2,
+         max_samples=24, R=2):
+    sim = HallucinationSim(lambda_g, tail="heavy", alpha=0.5, seed=seed)
+    diffs = np.concatenate([
+        sim.rng.uniform(0.5, 0.9, n // 2),
+        sim.sample_difficulty(n - n // 2)])
+    chosen_halluc, acc, spent = [], [], []
+    for s in diffs:
+        scores, answers, hallucs, corrects = [], [], [], []
+        stop = False
+        while not stop and len(scores) < max_samples:
+            o = sim.trial(float(s), R)
+            scores += list(o["score"] * scale)
+            answers += list(o["answer"])
+            hallucs += list(o["halluc"])
+            corrects += list(o["correct"])
+            # Eq. 14 posterior over answer clusters (exact clustering)
+            sc = np.asarray(scores)
+            ans = np.asarray(answers)
+            w = np.exp(sc - sc.max())
+            mass = {a: w[ans == a].sum() for a in set(ans)}
+            p_star = max(mass.values()) / w.sum()
+            stop = p_star >= 1 - delta and len(scores) >= 2
+        j = int(np.argmax(scores))
+        chosen_halluc.append(bool(hallucs[j]))
+        acc.append(bool(corrects[j]))
+        spent.append(len(scores) * sim.tokens_per_sample)
+    return float(np.mean(chosen_halluc)), float(np.mean(acc)), \
+        float(np.mean(spent))
+
+
+def run(n_instances: int = 400, seed: int = 0, verbose: bool = True):
+    h_off, acc_off, t_off = _run(0.0, n_instances, seed)
+    h_on, acc_on, t_on = _run(0.9, n_instances, seed)
+    claims = {
+        "halluc_rate_no_align": h_off,
+        "halluc_rate_with_align": h_on,
+        "reduction_pts": (h_off - h_on) * 100,
+        "accuracy_no_align": acc_off,
+        "accuracy_with_align": acc_on,
+        "align_reduces_hallucination": bool(h_on < h_off - 0.02),
+    }
+    if verbose:
+        print(f"  selected-answer hallucination: λ_g=0 → {h_off:.3f}, "
+              f"λ_g=0.9 → {h_on:.3f} ({claims['reduction_pts']:.1f} pt "
+              f"reduction; paper: >5 pt on POPE/CHAIR)")
+        print(f"  accuracy: {acc_off:.3f} → {acc_on:.3f}; "
+              f"tokens {t_off:.0f} → {t_on:.0f}")
+        print(f"  claim[evidence weighting reduces hallucination]: "
+              f"{claims['align_reduces_hallucination']}")
+    return claims
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks — name,us_per_call,derived CSV.
+
+On CPU the Pallas kernels run against the jnp-reference path (interpret
+mode is a correctness harness, not a perf one), so the numbers here time
+the XLA oracle path; derived column reports achieved GFLOP/s.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(verbose: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    B, L, H, hd = 1, 1024, 4, 64
+    q = jax.random.normal(key, (B, L, H, hd), jnp.float32)
+    fa = jax.jit(lambda q: ref.flash_attention_ref(q, q, q, causal=True))
+    us = _time(fa, q)
+    flops = 4 * B * H * L * L * hd / 2  # causal half
+    rows.append(("flash_attention_ref_1k", us, f"{flops/us/1e3:.1f}GFLOPs"))
+
+    S, Hkv = 8192, 2
+    qd = jax.random.normal(key, (B, 1, H, hd), jnp.float32)
+    kd = jax.random.normal(key, (B, S, Hkv, hd), jnp.float32)
+    mask = jnp.ones((B, S), bool)
+    da = jax.jit(lambda q, k, m: ref.decode_attention_ref(q, k, k, m))
+    us = _time(da, qd, kd, mask)
+    bytes_moved = 2 * B * S * Hkv * hd * 4
+    rows.append(("decode_attention_ref_8k", us,
+                 f"{bytes_moved/us/1e3:.1f}GBps"))
+
+    Lx, Nv, Nt, d = 512, 256, 128, 256
+    tok = jax.random.normal(key, (B, Lx, d))
+    vis = jax.random.normal(key, (B, Nv, d))
+    txt = jax.random.normal(key, (B, Nt, d))
+    m = jnp.ones((B, Lx))
+    xm = jax.jit(lambda t, m, v, x: ref.xmodal_score_ref(t, m, v, x))
+    us = _time(xm, tok, m, vis, txt)
+    flops = 2 * B * (Lx * Nv + Nt * Nv) * d
+    rows.append(("xmodal_score_ref", us, f"{flops/us/1e3:.1f}GFLOPs"))
+
+    if verbose:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,142 @@
+"""Shared simulation harness: CAMD + baselines on the heavy-tailed oracle.
+
+Drives ``repro.core.controller`` (the real CAMD math, jit+vmap over all
+instances in lockstep) against ``SimulatedDecoder`` trials — the
+large-scale stand-in for the paper's MathVista motivating experiment
+(DESIGN.md §6.5). All rules see the same per-candidate observables
+(score, embedding, answer id); the oracle label is used only for final
+accuracy accounting.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CAMDConfig
+from repro.core import controller as ctrl
+from repro.data.tasks import SimulatedDecoder
+
+
+def run_camd(sim: SimulatedDecoder, difficulties: np.ndarray,
+             cfg: CAMDConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Batched CAMD over n instances. Returns accuracy/tokens/samples."""
+    n = len(difficulties)
+    R = cfg.samples_per_round
+    vocab = sim.n_wrong + 1
+    states = ctrl.batched_init(cfg, n, sim.emb_dim, vocab)
+    update = ctrl.batched_round_update(cfg)
+    correct_by_uid = np.zeros((n, cfg.max_rounds * R), bool)
+
+    for rnd in range(cfg.max_rounds):
+        stopped = np.asarray(states.stopped)
+        if stopped.all():
+            break
+        scores = np.zeros((n, R), np.float32)
+        embs = np.zeros((n, R, sim.emb_dim), np.float32)
+        counts = np.zeros((n, R, vocab), np.float32)
+        lengths = np.full((n, R), sim.tokens_per_sample, np.int32)
+        valid = np.zeros((n, R), bool)
+        uids = np.tile(np.arange(rnd * R, (rnd + 1) * R), (n, 1)).astype(np.int32)
+        for i in range(n):
+            if stopped[i]:
+                continue
+            out = sim.trial(float(difficulties[i]), R)
+            scores[i] = out["score"]
+            embs[i] = out["emb"]
+            counts[i, np.arange(R), out["answer"]] = 1.0
+            valid[i] = True
+            correct_by_uid[i, uids[i]] = out["correct"]
+        inp = ctrl.RoundInputs(
+            scores=jnp.asarray(scores), embs=jnp.asarray(embs),
+            token_counts=jnp.asarray(counts), lengths=jnp.asarray(lengths),
+            valid=jnp.asarray(valid), uids=jnp.asarray(uids))
+        states, _bias = update(states, inp)
+
+    best_uid = np.asarray(states.best_uid)
+    acc = correct_by_uid[np.arange(n), np.clip(best_uid, 0, None)]
+    return {
+        "accuracy": acc.astype(np.float64),
+        "tokens": np.asarray(states.tokens_spent, np.float64),
+        "samples": np.asarray(states.k_t, np.float64),
+        "p_star": np.asarray(states.p_star, np.float64),
+        "stopped_early": np.asarray(states.p_star) >= 1 - cfg.delta,
+    }
+
+
+def run_fixed_n(sim: SimulatedDecoder, difficulties: np.ndarray, N: int,
+                select: str = "best") -> Dict[str, np.ndarray]:
+    """Fixed best-of-N / self-consistency baselines."""
+    n = len(difficulties)
+    acc = np.zeros(n, bool)
+    for i, s in enumerate(difficulties):
+        out = sim.trial(float(s), N)
+        if select == "best":
+            j = int(np.argmax(out["score"]))
+            acc[i] = out["correct"][j]
+        elif select == "majority":
+            ans, cnt = np.unique(out["answer"], return_counts=True)
+            top = ans[np.argmax(cnt)]
+            members = np.nonzero(out["answer"] == top)[0]
+            j = members[np.argmax(out["score"][members])]
+            acc[i] = out["correct"][j]
+        else:  # oracle upper bound: pass@N
+            acc[i] = out["correct"].any()
+    tokens = np.full(n, N * sim.tokens_per_sample, np.float64)
+    return {"accuracy": acc.astype(np.float64), "tokens": tokens,
+            "samples": np.full(n, N, np.float64)}
+
+
+def run_adaptive_rule(sim: SimulatedDecoder, difficulties: np.ndarray,
+                      rule: str, *, max_samples: int = 32,
+                      tau: float = 0.9, patience: int = 3,
+                      delta: float = 0.25,
+                      cost_per_token: float = 2e-4) -> Dict[str, np.ndarray]:
+    """§3.2 sequential stopping rules (threshold / bayes / EI) — one sample
+    at a time, stop decision from model-derived proxies only."""
+    n = len(difficulties)
+    acc = np.zeros(n, bool)
+    samples = np.zeros(n, np.float64)
+    for i, s in enumerate(difficulties):
+        best, best_correct = -np.inf, False
+        seen: List[float] = []
+        no_improve = 0
+        succ = 0
+        k = 0
+        while k < max_samples:
+            out = sim.trial(float(s), 1)
+            k += 1
+            sc = float(out["score"][0])
+            seen.append(sc)
+            # confidence proxy in [0,1] (logistic of evidence score)
+            conf = 1.0 / (1.0 + np.exp(-sc))
+            succ += conf > 0.6
+            if sc > best + 1e-9:
+                best, best_correct = sc, bool(out["correct"][0])
+                no_improve = 0
+            else:
+                no_improve += 1
+            bconf = 1.0 / (1.0 + np.exp(-best))
+            if rule == "threshold":
+                if bconf >= tau or no_improve >= patience:
+                    break
+            elif rule == "bayes":
+                a, b = 1 + succ, 1 + k - succ
+                if (b / (a + b)) < delta and k >= 2:
+                    break
+            elif rule == "ei":
+                if k >= 3:
+                    mu, sd = np.mean(seen), np.std(seen) + 1e-6
+                    z = (mu - best) / sd
+                    phi = np.exp(-0.5 * z * z) / np.sqrt(2 * np.pi)
+                    Phi = 0.5 * (1 + math.erf(z / np.sqrt(2)))
+                    ei = sd * (z * Phi + phi)
+                    if ei < cost_per_token * sim.tokens_per_sample:
+                        break
+        acc[i] = best_correct
+        samples[i] = k
+    return {"accuracy": acc.astype(np.float64),
+            "tokens": samples * sim.tokens_per_sample, "samples": samples}

@@ -1,0 +1,64 @@
+"""Roofline report (deliverable g): reads the dry-run JSONs and emits the
+per-(arch × shape) three-term roofline table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+COLS = ("arch", "shape", "mesh", "bottleneck")
+
+
+def load(mesh: str = "pod16x16", results_dir: str = RESULTS) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(f"{results_dir}/dryrun_{mesh}_*.json")):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_table(recs: List[Dict]) -> str:
+    header = ("| arch | shape | compute_ms | memory_ms | collective_ms | "
+              "bottleneck | useful_flops | fits 16GB | note |")
+    sep = "|" + "---|" * 9
+    lines = [header, sep]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        note = "windowed-variant" if r.get("window_variant") else ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"{r['bottleneck'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{'yes' if r['fits_16gb_hbm'] else 'NO'} | {note} |")
+    return "\n".join(lines)
+
+
+def summarize(recs: List[Dict]) -> Dict:
+    out = {"n": len(recs)}
+    bn = {}
+    for r in recs:
+        bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+    out["bottlenecks"] = bn
+    out["fits"] = sum(1 for r in recs if r["fits_16gb_hbm"])
+    return out
+
+
+def run(verbose: bool = True):
+    recs = load()
+    if not recs:
+        if verbose:
+            print("  (no dry-run results yet — run repro.launch.dryrun)")
+        return {"n": 0}
+    if verbose:
+        print(fmt_table(recs))
+        print(summarize(recs))
+    return {"records": recs, "summary": summarize(recs)}
+
+
+if __name__ == "__main__":
+    run()

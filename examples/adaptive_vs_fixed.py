@@ -1,0 +1,18 @@
+"""Reproduce the paper's Fig. 2 motivating experiment in one minute.
+
+Runs the CAMD controller (the real Eq. 7-16 math) against the simulated
+heavy-tailed decoder population and prints the accuracy/token Pareto
+table vs fixed best-of-N and the §3.2 adaptive stopping rules.
+
+    PYTHONPATH=src:. python examples/adaptive_vs_fixed.py
+"""
+from benchmarks import bench_fig2
+
+
+def main():
+    out = bench_fig2.run(n_instances=400)
+    print("\nclaims:", out["claims"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Train a ~100M-parameter model on the synthetic pipeline.
+
+Defaults are CPU-sized (a ~7M model for a quick demo); pass --full for
+the ~100M-parameter qwen3-family configuration used on real hardware
+(the config is the same class the dry-run lowers onto the 256-chip mesh).
+
+    PYTHONPATH=src python examples/train_small.py --steps 100
+    PYTHONPATH=src python examples/train_small.py --full --steps 300
+"""
+import argparse
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.configs import get_config
+from repro.data import lm_batches
+from repro.models import build_model
+from repro.training import save_checkpoint, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params (slow on CPU)")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt/train_small")
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = get_config("qwen3-0.6b").with_overrides(
+            num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+            d_ff=2048, vocab_size=32768, head_dim=64, dtype="float32")
+    else:
+        cfg = get_config("qwen3-0.6b").reduced().with_overrides(
+            num_layers=4, dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    print(f"arch={cfg.name} params={cfg.num_params()/1e6:.1f}M")
+
+    data = ({"tokens": jnp.asarray(b["tokens"]),
+             "labels": jnp.asarray(b["labels"])}
+            for b in lm_batches(cfg.vocab_size, args.batch, args.seq, seed=0))
+    params, opt, hist = train(
+        model,
+        TrainConfig(total_steps=args.steps, warmup_steps=args.steps // 10,
+                    learning_rate=1e-3, remat=True),
+        data, steps=args.steps, log_every=max(args.steps // 10, 1),
+        callback=lambda m: print(
+            f"  step {m['step']:>4}: loss={m['loss']:.3f} "
+            f"acc={m['accuracy']:.3f} gnorm={m['grad_norm']:.2f} "
+            f"lr={m['lr']:.2e}"))
+    save_checkpoint(args.ckpt, params, step=args.steps)
+    print(f"checkpoint written to {args.ckpt}.npz")
+
+
+if __name__ == "__main__":
+    main()

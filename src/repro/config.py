@@ -1,0 +1,274 @@
+"""Configuration system for the repro framework.
+
+Every architecture in the assigned pool is expressed as a ``ModelConfig``.
+Configs are plain frozen dataclasses so they hash, compare, and serialize
+cleanly, and can be passed through jit as static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Block kinds understood by the model builder.
+# ---------------------------------------------------------------------------
+ATTN = "attn"            # full (optionally windowed) self-attention block
+LOCAL_ATTN = "local"     # sliding-window-only self-attention block
+SSM = "ssm"              # Mamba2 SSD block
+RGLRU = "rglru"          # RecurrentGemma RG-LRU recurrent block
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings for the MLP sub-block."""
+    num_experts: int
+    top_k: int
+    # d_ff of each expert (per-expert hidden width).
+    expert_d_ff: int
+    # weight of the auxiliary load-balance loss during training.
+    aux_loss_weight: float = 0.01
+    # expert capacity factor (GShard); tokens beyond capacity are dropped.
+    capacity_factor: float = 1.25
+    # token group size for the dispatch einsum (bounds the one-hot temp).
+    group_size: int = 256
+    # router jitter noise (training only)
+    router_noise: float = 0.0
+    # number of shared (always-on) experts, e.g. DeepSeek/Kimi style.
+    num_shared_experts: int = 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) settings."""
+    state_dim: int = 128          # N — SSM state size
+    head_dim: int = 64            # P — channels per SSD head
+    expand: int = 2               # inner dim = expand * d_model
+    chunk_size: int = 64          # SSD block-diagonal chunk length
+    conv_width: int = 4           # depthwise causal conv width
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU settings."""
+    lru_width: int = 0            # 0 => same as d_model
+    conv_width: int = 4
+    block_pattern: Tuple[str, ...] = (RGLRU, RGLRU, LOCAL_ATTN)  # 1:2 attn:rglru
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A single architecture. All assigned archs + the paper's own models."""
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                # query heads (0 for attn-free archs)
+    num_kv_heads: int             # kv heads (GQA); 1 => MQA
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 => d_model // num_heads
+    # --- attention options -------------------------------------------------
+    qkv_bias: bool = False        # qwen2.5-style QKV bias
+    qk_norm: bool = False         # qwen3-style RMSNorm on q/k
+    rope_theta: float = 10000.0
+    attn_window: int = 0          # 0 => full causal; >0 => sliding window
+    local_window: int = 2048      # window of LOCAL_ATTN blocks (hybrids)
+    # --- block structure ----------------------------------------------------
+    block_pattern: Tuple[str, ...] = (ATTN,)   # tiled over num_layers
+    mlp_activation: str = "swiglu"             # swiglu | gelu | relu
+    tie_embeddings: bool = False
+    # --- optional sub-configs ------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # --- encoder-decoder ------------------------------------------------------
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    # --- multimodal frontend stub ---------------------------------------------
+    # number of evidence (patch/frame) embeddings prepended to the sequence;
+    # 0 for text-only models. Embeddings arrive precomputed (stub frontend).
+    num_evidence_tokens: int = 0
+    evidence_dim: int = 0         # dim of incoming evidence embeddings
+    # --- misc -------------------------------------------------------------------
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    source: str = ""              # citation for the config
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads == 0:
+            return 0
+        return self.d_model // self.num_heads
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """The block kind of each of the num_layers layers."""
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """A CPU-smoke-test-sized variant of the same family.
+
+        2 layers (enough to tile the block pattern at least once per kind for
+        hybrids), d_model <= 512, <= 4 experts.
+        """
+        kw = dict(
+            num_layers=max(2, min(len(self.block_pattern), 3)),
+            d_model=256,
+            d_ff=512,
+            vocab_size=512,
+            head_dim=64,
+        )
+        if self.num_heads:
+            kw["num_heads"] = 4
+            kw["num_kv_heads"] = min(self.num_kv_heads, 2) if self.num_kv_heads > 1 else 1
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe, num_experts=4, top_k=2, expert_d_ff=128,
+                num_shared_experts=min(self.moe.num_shared_experts, 1),
+                capacity_factor=4.0)  # dropless in practice at smoke scale
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, state_dim=16, head_dim=32, chunk_size=16)
+        if self.rglru is not None:
+            kw["rglru"] = dataclasses.replace(self.rglru, lru_width=256)
+        if self.is_encoder_decoder:
+            kw["num_encoder_layers"] = 2
+        if self.num_evidence_tokens:
+            kw["num_evidence_tokens"] = 8
+            kw["evidence_dim"] = min(self.evidence_dim, 256) or 256
+        if self.attn_window:
+            kw["attn_window"] = 64
+        kw["local_window"] = 64
+        return self.with_overrides(**kw)
+
+    def num_params(self) -> int:
+        """Analytic parameter count (embedding + per-layer blocks)."""
+        d, v = self.d_model, self.vocab_size
+        n = v * d                              # embed
+        if not self.tie_embeddings:
+            n += v * d                         # unembed
+        hd = self.resolved_head_dim
+        for kind in self.layer_kinds:
+            n += 2 * d                         # two norms
+            if kind in (ATTN, LOCAL_ATTN):
+                q = self.num_heads * hd
+                kv = self.num_kv_heads * hd
+                n += d * q + 2 * d * kv + q * d
+            elif kind == SSM:
+                s = self.ssm
+                inner = s.expand * d
+                heads = inner // s.head_dim
+                n += d * (2 * inner + 2 * s.state_dim + heads) + inner * d
+                n += s.conv_width * (inner + 2 * s.state_dim)
+            elif kind == RGLRU:
+                r = self.rglru
+                w = r.lru_width or d
+                n += 2 * d * w + w * d + 2 * w  # in/out proj + gates
+            # MLP
+            if kind in (ATTN, LOCAL_ATTN, RGLRU):
+                if self.moe is not None:
+                    e = self.moe
+                    per = 3 * d * e.expert_d_ff if self.mlp_activation == "swiglu" \
+                        else 2 * d * e.expert_d_ff
+                    n += e.num_experts * per + d * e.num_experts
+                    n += e.num_shared_experts * per
+                else:
+                    n += (3 if self.mlp_activation == "swiglu" else 2) * d * self.d_ff
+        if self.is_encoder_decoder:
+            # encoder layers: self-attn + mlp (approximate symmetric to decoder)
+            q = self.num_heads * hd
+            kv = self.num_kv_heads * hd
+            per = d * q + 2 * d * kv + q * d + \
+                (3 if self.mlp_activation == "swiglu" else 2) * d * self.d_ff + 2 * d
+            n += self.num_encoder_layers * per
+            # decoder cross-attention
+            n += self.num_layers * (d * q + 2 * d * kv + q * d + d)
+        return n
+
+    def active_params(self) -> int:
+        """Activated parameters per token (MoE: only top-k experts count)."""
+        if self.moe is None:
+            return self.num_params()
+        d = self.d_model
+        e = self.moe
+        per = (3 if self.mlp_activation == "swiglu" else 2) * d * e.expert_d_ff
+        dense_like = self.num_params() - len(self.layer_kinds) * e.num_experts * per
+        return dense_like + len(self.layer_kinds) * (e.top_k + e.num_shared_experts) * per
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2, default=str)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """An assigned input shape."""
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str            # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class CAMDConfig:
+    """Coverage-Aware Multimodal Decoding hyper-parameters (paper §5.1)."""
+    lambda_g: float = 0.9          # weight of S_align (paper ablation best)
+    lambda_c: float = 0.7          # weight of S_coh
+    delta: float = 0.05            # target residual risk (1-delta coverage)
+    tau: float = 0.90              # score threshold (threshold-stop rule)
+    cluster_threshold: float = 0.85  # cosine sim for same-cluster
+    max_clusters: int = 16         # fixed M for jit-ability
+    max_rounds: int = 8            # outer adaptive rounds
+    samples_per_round: int = 4     # K added per round
+    min_samples: int = 2           # never stop before this many
+    dirichlet_prior: float = 0.5   # symmetric alpha^(0)
+    score_scale: float = 1.0       # evidence-score temperature for Eq. 14
+                                   # (the paper normalizes score terms on a
+                                   # validation set; this is that knob)
+    guidance_strength: float = 1.0  # mixture token-bias strength (Eq. 16)
+    patience: int = 3              # no-improvement patience (threshold rule)
+    ei_cost_per_token: float = 1e-4  # EI stop rule: cost per generated token
+
+
+@dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.7
+    top_p: float = 0.9
+    top_k: int = 0                 # 0 = off
+    min_p: float = 0.0             # 0 = off
+    repetition_penalty: float = 1.05
+    max_new_tokens: int = 64
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"       # cosine | linear | constant
+    remat: bool = True             # activation checkpointing over layers
+    unroll: bool = False           # python-loop layers (dry-run cost model)
+    microbatches: int = 1          # gradient-accumulation splits of the
+                                   # global batch (bounds activation memory)
+    seed: int = 0

@@ -1,0 +1,67 @@
+"""Architecture config registry.
+
+Every assigned architecture (plus the paper's own base models) is a module
+in this package exporting ``CONFIG``. ``get_config(name)`` is the public
+lookup used by launchers, the dry-run, and tests; ``--arch <id>`` flags
+resolve here.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+# module name -> arch id (module names can't contain '.', '-')
+_MODULES = {
+    "granite_moe_3b_a800m": "granite-moe-3b-a800m",
+    "seamless_m4t_large_v2": "seamless-m4t-large-v2",
+    "qwen2_5_32b": "qwen2.5-32b",
+    "mamba2_780m": "mamba2-780m",
+    "qwen3_0_6b": "qwen3-0.6b",
+    "yi_34b": "yi-34b",
+    "granite_34b": "granite-34b",
+    "kimi_k2_1t_a32b": "kimi-k2-1t-a32b",
+    "recurrentgemma_2b": "recurrentgemma-2b",
+    "internvl2_2b": "internvl2-2b",
+    # the paper's own evaluation backbone (LLaVA-1.5-7B's LM side)
+    "llava_1_5_7b": "llava-1.5-7b",
+}
+
+_BY_NAME: Dict[str, ModelConfig] = {}
+
+
+def _load() -> None:
+    if _BY_NAME:
+        return
+    for mod, name in _MODULES.items():
+        m = importlib.import_module(f"repro.configs.{mod}")
+        cfg: ModelConfig = m.CONFIG
+        assert cfg.name == name, (cfg.name, name)
+        _BY_NAME[name] = cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _load()
+    if name not in _BY_NAME:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_BY_NAME)}")
+    return _BY_NAME[name]
+
+
+def list_configs() -> List[str]:
+    _load()
+    return sorted(_BY_NAME)
+
+
+ASSIGNED_ARCHS = [
+    "granite-moe-3b-a800m",
+    "seamless-m4t-large-v2",
+    "qwen2.5-32b",
+    "mamba2-780m",
+    "qwen3-0.6b",
+    "yi-34b",
+    "granite-34b",
+    "kimi-k2-1t-a32b",
+    "recurrentgemma-2b",
+    "internvl2-2b",
+]

@@ -1,0 +1,25 @@
+"""internvl2-2b — InternVL2 2B VLM (InternViT-300M + InternLM2-1.8B).
+
+[arXiv:2404.16821]: language backbone 24L, d_model=2048, 16 q heads,
+GQA kv=8, d_ff=8192, vocab 92553. The InternViT vision encoder + MLP
+projector is a STUB: ``input_specs`` provides precomputed patch embeddings
+(256 tokens per image tile after pixel-shuffle) already projected to
+d_model.
+"""
+from repro.config import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    block_pattern=(ATTN,),
+    mlp_activation="swiglu",
+    num_evidence_tokens=256,      # ViT patch embeddings per image
+    evidence_dim=2048,
+    source="arXiv:2404.16821",
+)

@@ -1,0 +1,22 @@
+"""kimi-k2-1t-a32b — Moonshot Kimi K2, trillion-parameter MoE.
+
+[arXiv:2501.kimi2 paper table]: 61L, d_model=7168, 64 q heads, GQA kv=8,
+per-expert d_ff=2048, vocab 163840, 384 experts top-8 (+1 shared expert).
+"""
+from repro.config import ATTN, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=2048,                    # per-expert hidden width
+    vocab_size=163840,
+    block_pattern=(ATTN,),
+    mlp_activation="swiglu",
+    moe=MoEConfig(num_experts=384, top_k=8, expert_d_ff=2048,
+                  num_shared_experts=1),
+    source="arXiv:2501.kimi2",
+)

@@ -1,0 +1,19 @@
+"""CAMD core — the paper's contribution as composable JAX modules.
+
+scoring     Eq. 7-12  evidence-weighted scoring
+clustering  Eq. 13    online semantic clustering (fixed-M, jit/vmap-able)
+posterior   Eq. 14-16 coverage estimation, Dirichlet update, mixture bias
+rescore     §5.1       plug-and-play wrapper: score/stop external candidates
+controller             per-request round state machine (engine hot path)
+theory      §4.1       coverage/residual-risk numerics, Theorem 4.2 checks
+"""
+from repro.core import clustering, posterior, rescore, scoring, theory  # noqa: F401
+from repro.core.controller import (  # noqa: F401
+    CAMDState,
+    RoundInputs,
+    batched_init,
+    batched_round_update,
+    init_state,
+    round_update,
+    score_candidates,
+)

@@ -1,0 +1,106 @@
+"""Online semantic clustering of candidate answers (paper Eq. 13).
+
+The paper calls an external LLM to compute pairwise similarities and
+cluster; a serving framework cannot block a decode round on a second LLM,
+so we cluster mean-pooled answer embeddings with a cosine threshold
+(default 0.85 — the paper's own clustering threshold; its dedup uses 0.9).
+See DESIGN.md §6.
+
+The cluster table has a fixed capacity M (mask semantics) so the whole
+update jits and vmaps over requests. Centroids are running means; a new
+candidate either joins its nearest cluster (cos >= threshold) or opens a
+new one; when the table is full it joins the nearest regardless.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ClusterTable(NamedTuple):
+    centroids: jax.Array     # (M, d) running-mean embeddings (unnormalized)
+    sizes: jax.Array         # (M,) float32 member counts
+    score_lse: jax.Array     # (M,) logsumexp of member evidence scores
+    n_clusters: jax.Array    # () int32
+
+
+def make_table(max_clusters: int, emb_dim: int) -> ClusterTable:
+    return ClusterTable(
+        centroids=jnp.zeros((max_clusters, emb_dim), jnp.float32),
+        sizes=jnp.zeros((max_clusters,), jnp.float32),
+        score_lse=jnp.full((max_clusters,), -jnp.inf, jnp.float32),
+        n_clusters=jnp.zeros((), jnp.int32),
+    )
+
+
+def _cos(a, b, eps=1e-8):
+    a = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + eps)
+    b = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + eps)
+    return a @ b.T
+
+
+def assign_one(table: ClusterTable, emb, score, valid, threshold: float
+               ) -> Tuple[ClusterTable, jax.Array]:
+    """Assign one candidate. emb: (d,), score: (), valid: () bool.
+
+    Returns (new_table, cluster_index (int32, -1 if invalid)).
+    """
+    M = table.centroids.shape[0]
+    active = jnp.arange(M) < table.n_clusters
+    sims = _cos(emb[None, :], table.centroids)[0]                 # (M,)
+    sims = jnp.where(active, sims, -jnp.inf)
+    best = jnp.argmax(sims)
+    best_sim = sims[best]
+    table_full = table.n_clusters >= M
+    join = (best_sim >= threshold) | (table_full & (table.n_clusters > 0))
+    idx = jnp.where(join, best, table.n_clusters).astype(jnp.int32)
+    idx = jnp.minimum(idx, M - 1)
+
+    one = jax.nn.one_hot(idx, M)
+    new_sizes = table.sizes + one * valid
+    # running-mean centroid
+    new_cent = jnp.where(
+        (one[:, None] > 0) & valid,
+        (table.centroids * table.sizes[:, None] + emb[None, :] * one[:, None])
+        / jnp.maximum(new_sizes[:, None], 1.0),
+        table.centroids)
+    new_lse = jnp.where(one > 0,
+                        jnp.logaddexp(table.score_lse, score),
+                        table.score_lse)
+    new_lse = jnp.where(valid, new_lse, table.score_lse)
+    new_n = jnp.where(valid & ~join, table.n_clusters + 1, table.n_clusters)
+    new_n = jnp.minimum(new_n, M)
+    out = ClusterTable(
+        centroids=jnp.where(valid, new_cent, table.centroids),
+        sizes=jnp.where(valid, new_sizes, table.sizes),
+        score_lse=new_lse,
+        n_clusters=new_n)
+    return out, jnp.where(valid, idx, -1)
+
+
+def assign_batch(table: ClusterTable, embs, scores, valids, threshold: float
+                 ) -> Tuple[ClusterTable, jax.Array]:
+    """Sequentially assign a round of R candidates (lax.scan)."""
+
+    def body(tb, inp):
+        e, s, v = inp
+        tb, idx = assign_one(tb, e, s, v, threshold)
+        return tb, idx
+
+    table, idxs = jax.lax.scan(body, table, (embs, scores, valids))
+    return table, idxs
+
+
+def posterior_weights(table: ClusterTable) -> jax.Array:
+    """Eq. 14: p̂_k = Σ_{i∈C_k} exp(S_i) / Σ_all exp(S_i).
+
+    Computed from the per-cluster score logsumexp accumulators, so CAMD
+    state is O(M) — no candidate list retained on device.
+    """
+    M = table.score_lse.shape[0]
+    active = jnp.arange(M) < table.n_clusters
+    lse = jnp.where(active, table.score_lse, -jnp.inf)
+    total = jax.nn.logsumexp(lse)
+    return jnp.where(active, jnp.exp(lse - total), 0.0)

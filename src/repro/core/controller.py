@@ -1,0 +1,127 @@
+"""CAMD round controller — the adaptive decoding state machine.
+
+One ``CAMDState`` per in-flight request; all fields are fixed-shape so the
+whole state batches into a pytree and the round update runs as a single
+vmapped jit on device. The serving engine owns the loop; this module owns
+the math:
+
+    round_update:  score -> cluster -> coverage test -> Dirichlet update
+                   -> mixture guidance bias for the next round (Eq. 7-16).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CAMDConfig
+from repro.core import clustering, posterior, scoring
+
+
+class CAMDState(NamedTuple):
+    table: clustering.ClusterTable
+    alpha: jax.Array          # (M,) Dirichlet params
+    hist: jax.Array           # (M, V) cluster token histograms (guidance)
+    k_t: jax.Array            # () int32 — cumulative samples
+    rounds: jax.Array         # () int32
+    stopped: jax.Array        # () bool
+    p_star: jax.Array         # () float32 — latest coverage estimate
+    best_score: jax.Array     # () float32
+    best_uid: jax.Array       # () int32 — engine-side id of best candidate
+    best_cluster: jax.Array   # () int32
+    tokens_spent: jax.Array   # () int32
+
+
+def init_state(cfg: CAMDConfig, emb_dim: int, vocab: int) -> CAMDState:
+    M = cfg.max_clusters
+    return CAMDState(
+        table=clustering.make_table(M, emb_dim),
+        alpha=jnp.full((M,), cfg.dirichlet_prior, jnp.float32),
+        hist=jnp.zeros((M, vocab), jnp.float32),
+        k_t=jnp.zeros((), jnp.int32),
+        rounds=jnp.zeros((), jnp.int32),
+        stopped=jnp.zeros((), bool),
+        p_star=jnp.zeros((), jnp.float32),
+        best_score=jnp.full((), -jnp.inf, jnp.float32),
+        best_uid=jnp.full((), -1, jnp.int32),
+        best_cluster=jnp.full((), -1, jnp.int32),
+        tokens_spent=jnp.zeros((), jnp.int32),
+    )
+
+
+class RoundInputs(NamedTuple):
+    """One round of R candidates for a single request."""
+    scores: jax.Array        # (R,) evidence-weighted scores S(y_i|x)
+    embs: jax.Array          # (R, d) mean-pooled candidate embeddings
+    token_counts: jax.Array  # (R, V) token count vectors (for guidance)
+    lengths: jax.Array       # (R,) generated lengths
+    valid: jax.Array         # (R,) bool — real candidates this round
+    uids: jax.Array          # (R,) int32 engine-side candidate ids
+
+
+def round_update(cfg: CAMDConfig, state: CAMDState, inp: RoundInputs
+                 ) -> Tuple[CAMDState, jax.Array]:
+    """Fold one round of candidates into the state.
+
+    Returns (new_state, guidance_bias (V,)) — the Eq. 16 mixture bias to
+    apply to the next round's logits (zeros once stopped).
+    """
+    valid = inp.valid & ~state.stopped
+    scores = inp.scores * cfg.score_scale
+    table, cluster_idx = clustering.assign_batch(
+        state.table, inp.embs, scores, valid, cfg.cluster_threshold)
+
+    # cluster token histograms for the mixture distribution
+    M = state.alpha.shape[0]
+    one = jax.nn.one_hot(jnp.maximum(cluster_idx, 0), M) \
+        * valid[:, None].astype(jnp.float32)                    # (R, M)
+    hist = state.hist + jnp.einsum("rm,rv->mv", one, inp.token_counts)
+
+    k_t = state.k_t + jnp.sum(valid).astype(jnp.int32)
+    tokens = state.tokens_spent + jnp.sum(
+        jnp.where(valid, inp.lengths, 0)).astype(jnp.int32)
+
+    # best-candidate tracking
+    masked_scores = jnp.where(valid, scores, -jnp.inf)
+    r_best = jnp.argmax(masked_scores)
+    improved = masked_scores[r_best] > state.best_score
+    best_score = jnp.where(improved, masked_scores[r_best], state.best_score)
+    best_uid = jnp.where(improved, inp.uids[r_best], state.best_uid)
+    best_cluster = jnp.where(improved, cluster_idx[r_best], state.best_cluster)
+
+    stop, p_star = posterior.coverage_reached(
+        table, k_t, delta=cfg.delta, min_samples=cfg.min_samples)
+    rounds = state.rounds + jnp.where(state.stopped, 0, 1)
+    stopped = state.stopped | stop | (rounds >= cfg.max_rounds)
+
+    alpha, pi_bar = posterior.dirichlet_update(state.alpha, table)
+    bias = posterior.mixture_logit_bias(
+        pi_bar, hist, strength=cfg.guidance_strength)
+    bias = jnp.where(stopped, jnp.zeros_like(bias), bias)
+
+    new_state = CAMDState(
+        table=table, alpha=alpha, hist=hist, k_t=k_t, rounds=rounds,
+        stopped=stopped, p_star=p_star, best_score=best_score,
+        best_uid=best_uid, best_cluster=best_cluster, tokens_spent=tokens)
+    return new_state, bias
+
+
+def batched_round_update(cfg: CAMDConfig):
+    """vmapped round_update over a batch of requests (engine hot path)."""
+    return jax.vmap(lambda s, i: round_update(cfg, s, i))
+
+
+def batched_init(cfg: CAMDConfig, n: int, emb_dim: int, vocab: int) -> CAMDState:
+    one = init_state(cfg, emb_dim, vocab)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), one)
+
+
+def score_candidates(cfg: CAMDConfig, token_logprobs, mask, *, hidden=None,
+                     token_embs=None, visual_feats=None, text_feats=None,
+                     impl: str = "xla"):
+    """Convenience wrapper: Eq. 12 with this config's λ weights."""
+    return scoring.evidence_weighted_score(
+        token_logprobs, mask, hidden=hidden, token_embs=token_embs,
+        visual_feats=visual_feats, text_feats=text_feats,
+        lambda_g=cfg.lambda_g, lambda_c=cfg.lambda_c, impl=impl)

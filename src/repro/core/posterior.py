@@ -1,0 +1,92 @@
+"""Posterior coverage estimation + Bayesian adaptive sampling
+(paper §4.2.2-§4.2.3, Eq. 14-16).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clustering import ClusterTable, posterior_weights
+
+
+def coverage_reached(table: ClusterTable, k_t, *, delta: float,
+                     min_samples: int):
+    """§4.2.2 stop rule: stop when p̂* = max_k p̂_k >= 1-δ (and at least
+    min_samples candidates were drawn). Returns (stop, p_star)."""
+    p = posterior_weights(table)
+    p_star = jnp.max(p)
+    stop = (p_star >= 1.0 - delta) & (k_t >= min_samples)
+    return stop, p_star
+
+
+def dirichlet_update(alpha, table: ClusterTable):
+    """Eq. 15: α' = α + n, with soft counts n_k = Σ_{i∈C_k} s̃_i.
+
+    Because s̃ is the softmax of member scores, n_k equals the Eq. 14
+    posterior weight p̂_k — the paper's construction makes them coincide.
+    Returns (alpha', π̄ = E[π | D_t])."""
+    M = alpha.shape[0]
+    active = jnp.arange(M) < table.n_clusters
+    n = posterior_weights(table)
+    new_alpha = alpha + n
+    masked = jnp.where(active, new_alpha, 0.0)
+    pi_bar = masked / jnp.maximum(jnp.sum(masked), 1e-9)
+    return new_alpha, pi_bar
+
+
+def mixture_logit_bias(pi_bar, cluster_hist, *, strength: float = 1.0,
+                       eps: float = 1e-6):
+    """Eq. 16 as a decoding bias: p'(y) = Σ_k π̄_k q_k(y) with q_k the
+    empirical token distribution of cluster k (smoothed).
+
+    cluster_hist: (M, V) token counts per cluster. Returns a (V,) additive
+    logit bias ``strength * log p'`` (uniform ⇒ constant ⇒ no-op).
+    Clusters with empty histograms fall back to uniform so the mixture
+    never zeroes out unseen tokens (global diversity is preserved, as the
+    paper requires).
+    """
+    V = cluster_hist.shape[-1]
+    totals = jnp.sum(cluster_hist, axis=-1, keepdims=True)           # (M,1)
+    q = (cluster_hist + eps) / (totals + eps * V)                    # (M,V)
+    p_mix = jnp.einsum("m,mv->v", pi_bar, q)
+    p_mix = p_mix + (1.0 - jnp.sum(pi_bar)) / V                      # inactive mass -> uniform
+    bias = strength * jnp.log(p_mix + 1e-20)
+    return bias - jnp.mean(bias)                                     # zero-mean: pure reweighting
+
+
+# ---------------------------------------------------------------------------
+# §3.2 adaptive stopping baselines (motivation experiment rules)
+# ---------------------------------------------------------------------------
+
+def threshold_stop(best_score, prev_best, no_improve_rounds, *, tau: float,
+                   patience: int):
+    """Rule (i): stop once a satisfactory score is reached, or after
+    `patience` rounds with no improvement."""
+    improved = best_score > prev_best + 1e-9
+    rounds = jnp.where(improved, 0, no_improve_rounds + 1)
+    stop = (best_score >= tau) | (rounds >= patience)
+    return stop, rounds
+
+
+def beta_bernoulli_stop(successes, trials, *, delta: float,
+                        prior_a: float = 1.0, prior_b: float = 1.0):
+    """Rule (ii): Beta-Bernoulli posterior on per-trial success; stop when
+    expected residual failure of one more trial is below δ:
+    E[(1-s)] ** remaining-budget heuristic — here the one-step version:
+    posterior mean failure < δ."""
+    a = prior_a + successes
+    b = prior_b + trials - successes
+    mean_fail = b / (a + b)
+    return mean_fail < delta, mean_fail
+
+
+def expected_improvement_stop(best_score, score_mean, score_std, tokens_per_sample,
+                              *, cost_per_token: float):
+    """Rule (iii): stop when the expected marginal gain of one more sample
+    (normal approximation of the score distribution) is below its token
+    cost."""
+    z = (score_mean - best_score) / jnp.maximum(score_std, 1e-6)
+    phi = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+    Phi = 0.5 * (1.0 + jax.lax.erf(z / jnp.sqrt(2.0)))
+    ei = score_std * (z * Phi + phi)
+    return ei < cost_per_token * tokens_per_sample, ei

@@ -1,0 +1,126 @@
+"""Plug-and-play CAMD rescoring (the paper's §5.1 deployment mode).
+
+The paper applies CAMD as a wrapper that "requires only the candidate
+outputs at decoding checkpoints" — i.e. candidates may come from ANY
+decoder (an external engine, beam search, a different model). This module
+is that mode: given a prompt and K candidate token sequences, one
+teacher-forced forward pass per batch computes every Eq. 7-12 ingredient
+(token log-probs, hidden states, token embeddings), scores the
+candidates, folds them into a CAMD state, and returns the
+coverage-stop / best-candidate / mixture-bias decision.
+
+The cross-modal term uses the fused Pallas ``xmodal_score`` kernel on
+TPU (jnp oracle elsewhere).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CAMDConfig
+from repro.core import controller as ctrl
+from repro.core import scoring
+from repro.models.model import Model
+
+
+def teacher_forced_stats(model: Model, params, prompt, candidates, mask,
+                         evidence=None, *, impl: str = "xla"):
+    """One forward over [prompt ++ candidate] per candidate.
+
+    prompt: (Lp,) int32; candidates: (K, Lc) int32 (right-padded);
+    mask: (K, Lc) 1=real token. Returns per-candidate
+    (token_logprobs (K, Lc), hidden (K, Lc, d), token_embs (K, Lc, d)).
+    """
+    K, Lc = candidates.shape
+    Lp = prompt.shape[0]
+    toks = jnp.concatenate(
+        [jnp.broadcast_to(prompt[None], (K, Lp)), candidates], axis=1)
+    ev = None
+    if evidence is not None:
+        ev = jnp.broadcast_to(evidence[None], (K,) + evidence.shape)
+    logits, hidden, _ = model.forward(params, toks, ev, impl=impl)
+    ne = model.cfg.num_evidence_tokens
+    offs = ne if (ne and evidence is not None
+                  and not model.cfg.is_encoder_decoder) else 0
+    # logits at position p predict token p+1: candidate token j (absolute
+    # position Lp+j) is predicted by logits at offs+Lp+j-1.
+    pred = logits[:, offs + Lp - 1: offs + Lp + Lc - 1]
+    logp = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+    token_lp = jnp.take_along_axis(
+        logp, candidates[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    cand_hidden = hidden[:, offs + Lp: offs + Lp + Lc]
+    table = params["embed"]["table"]
+    token_embs = jnp.take(table, candidates, axis=0).astype(jnp.float32)
+    return token_lp * mask, cand_hidden, token_embs
+
+
+def rescore_candidates(model: Model, params, cfg: CAMDConfig, prompt,
+                       candidates, mask, evidence=None, *,
+                       impl: str = "xla") -> Dict[str, jax.Array]:
+    """Eq. 7-12 evidence-weighted scores for externally-generated
+    candidates. Returns dict with per-candidate terms + total scores."""
+    token_lp, hidden, token_embs = teacher_forced_stats(
+        model, params, prompt, candidates, mask, evidence, impl=impl)
+    s_gen = scoring.generation_confidence(token_lp, mask)
+    s_coh = scoring.reasoning_coherence(hidden, mask)
+    if evidence is not None and model.cfg.num_evidence_tokens:
+        evproj = evidence.astype(jnp.float32)
+        if "evidence_proj" in params:
+            from repro.models.layers import dense
+            evproj = dense(jax.tree.map(lambda x: x.astype(jnp.float32),
+                                        params["evidence_proj"]), evproj)
+        vis = jnp.broadcast_to(evproj[None], (candidates.shape[0],)
+                               + evproj.shape)
+        txt = jnp.take(params["embed"]["table"], prompt,
+                       axis=0).astype(jnp.float32)
+        txt = jnp.broadcast_to(txt[None], (candidates.shape[0],) + txt.shape)
+        s_align = scoring.cross_modal_consistency(
+            token_embs, mask, vis, txt, impl=impl)
+    else:
+        s_align = jnp.zeros_like(s_gen)
+    total = s_gen + cfg.lambda_g * s_align + cfg.lambda_c * s_coh
+    return {"score": total, "s_gen": s_gen, "s_align": s_align,
+            "s_coh": s_coh, "hidden_mean": _masked_mean(hidden, mask)}
+
+
+def _masked_mean(h, mask):
+    m = mask.astype(jnp.float32)[..., None]
+    return jnp.sum(h.astype(jnp.float32) * m, axis=1) / \
+        jnp.maximum(jnp.sum(m, axis=1), 1.0)
+
+
+def camd_wrap(model: Model, params, cfg: CAMDConfig, prompt, candidates,
+              mask, evidence=None, *, state: Optional[ctrl.CAMDState] = None,
+              uids=None, impl: str = "xla"
+              ) -> Tuple[ctrl.CAMDState, Dict[str, Any]]:
+    """One CAMD checkpoint over a round of external candidates.
+
+    Returns (state, decision) where decision carries stop/p_star/best_uid
+    and the Eq. 16 mixture bias for the next round.
+    """
+    K = candidates.shape[0]
+    if state is None:
+        state = ctrl.init_state(cfg, model.cfg.d_model, model.cfg.vocab_size)
+    if uids is None:
+        uids = jnp.arange(K, dtype=jnp.int32)
+    res = rescore_candidates(model, params, cfg, prompt, candidates, mask,
+                             evidence, impl=impl)
+    counts = jax.vmap(
+        lambda c, m: jnp.zeros(model.cfg.vocab_size).at[c].add(m)
+    )(candidates, mask.astype(jnp.float32))
+    inp = ctrl.RoundInputs(
+        scores=res["score"],
+        embs=res["hidden_mean"],
+        token_counts=counts,
+        lengths=jnp.sum(mask, axis=-1).astype(jnp.int32),
+        valid=jnp.any(mask > 0, axis=-1),
+        uids=jnp.asarray(uids, jnp.int32))
+    state, bias = ctrl.round_update(cfg, state, inp)
+    decision = {
+        "stop": state.stopped, "p_star": state.p_star,
+        "best_uid": state.best_uid, "bias": bias, "scores": res["score"],
+        "terms": {k: res[k] for k in ("s_gen", "s_align", "s_coh")},
+    }
+    return state, decision

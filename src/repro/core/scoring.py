@@ -1,0 +1,97 @@
+"""Evidence-weighted scoring (paper §4.2.1, Eq. 7-12).
+
+All functions are batched, masked (padded tokens excluded), and pure jnp —
+they run on-device inside the serving round step. The cross-modal alignment
+term has a fused Pallas kernel (``repro.kernels.xmodal_score``) selected via
+``impl="pallas"``; the jnp path here doubles as its oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _l2norm(x, eps=1e-8):
+    return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
+
+
+def generation_confidence(token_logprobs, mask):
+    """Eq. 7: length-normalized sequence log-likelihood.
+
+    token_logprobs: (..., L) log p(y_t | y_<t, x); mask: (..., L) 1=real.
+    """
+    m = mask.astype(jnp.float32)
+    tot = jnp.sum(token_logprobs * m, axis=-1)
+    n = jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+    return tot / n
+
+
+def cross_modal_consistency(token_embs, mask, visual_feats, text_feats,
+                            *, impl: str = "xla"):
+    """Eq. 8-9: S_align.
+
+    token_embs: (..., L, d) embeddings of generated tokens f_t(y_t);
+    mask: (..., L); visual_feats: (Nv, d) or (..., Nv, d);
+    text_feats: (Nt, d) or (..., Nt, d) — prompt-text evidence.
+
+    G(y_t|x) = 1/2 [ mean_j cos(v_j, f(y_t)) + mean_r max_j cos(t_r, v_j) ]
+    S_align   = mean_t G(y_t | x).
+    (The second term is candidate-independent input consistency; it shifts
+    all candidates of a request equally, exactly as in the paper.)
+    """
+    if impl == "pallas":
+        from repro.kernels import ops
+        return ops.xmodal_score(token_embs, mask, visual_feats, text_feats)
+    tok = _l2norm(token_embs.astype(jnp.float32))
+    vis = _l2norm(visual_feats.astype(jnp.float32))
+    txt = _l2norm(text_feats.astype(jnp.float32))
+    # term 1: mean over visual evidence of cos(v_j, f(y_t)), then mean over t
+    sim_tv = jnp.einsum("...ld,...nd->...ln", tok, vis)      # (...,L,Nv)
+    term1 = jnp.mean(sim_tv, axis=-1)                        # (...,L)
+    m = mask.astype(jnp.float32)
+    term1 = jnp.sum(term1 * m, axis=-1) / jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+    # term 2: for each text evidence token, its best visual match
+    sim_rt = jnp.einsum("...rd,...nd->...rn", txt, vis)      # (...,Nt,Nv)
+    term2 = jnp.mean(jnp.max(sim_rt, axis=-1), axis=-1)      # (...)
+    return 0.5 * (term1 + term2)
+
+
+def reasoning_coherence(hidden, mask):
+    """Eq. 10-11: mean cosine similarity of consecutive hidden states.
+
+    hidden: (..., L, d); mask: (..., L).
+    """
+    h = _l2norm(hidden.astype(jnp.float32))
+    sims = jnp.sum(h[..., :-1, :] * h[..., 1:, :], axis=-1)  # (..., L-1)
+    m = (mask[..., :-1] * mask[..., 1:]).astype(jnp.float32)
+    tot = jnp.sum(sims * m, axis=-1)
+    n = jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+    return tot / n
+
+
+def evidence_weighted_score(token_logprobs, mask, *, hidden=None,
+                            token_embs=None, visual_feats=None,
+                            text_feats=None, lambda_g: float = 0.9,
+                            lambda_c: float = 0.7, impl: str = "xla"):
+    """Eq. 12: S = S_gen + λ_g S_align + λ_c S_coh.
+
+    Terms whose inputs are unavailable (e.g. no visual evidence for a
+    text-only arch) contribute zero — CAMD degrades gracefully across the
+    architecture pool (DESIGN.md §5).
+    """
+    s = generation_confidence(token_logprobs, mask)
+    if visual_feats is not None and token_embs is not None:
+        tf = text_feats if text_feats is not None else token_embs
+        s = s + lambda_g * cross_modal_consistency(
+            token_embs, mask, visual_feats, tf, impl=impl)
+    if hidden is not None:
+        s = s + lambda_c * reasoning_coherence(hidden, mask)
+    return s
+
+
+def normalized_success(scores, valid):
+    """s̃_i = softmax over valid candidates (Eq. 12, last step)."""
+    masked = jnp.where(valid, scores, -jnp.inf)
+    return jax.nn.softmax(masked, axis=-1)

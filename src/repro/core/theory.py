@@ -1,0 +1,103 @@
+"""Numerics for the paper's theoretical framework (§4.1).
+
+Implements coverage C(K), residual risk Δ(K), δ-coverage sample size N_δ
+(Def. 4.1), difficulty-distribution samplers for the three tail classes of
+Theorem 4.2, tail-exponent estimation from empirical Δ(K) decay, and the
+K*(ε) budget rule of Eq. 6. These are used by the property tests and by
+``benchmarks/bench_theory.py`` to validate Theorem 4.2 empirically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Basic coverage quantities (Eq. 2-4)
+# ---------------------------------------------------------------------------
+
+def coverage(K, s):
+    """C(K) = E_s[1 - (1-s)^K] for samples s (vector) — Eq. 2."""
+    K = jnp.asarray(K, jnp.float32)
+    return jnp.mean(1.0 - jnp.power(1.0 - s, K[..., None]), axis=-1)
+
+
+def residual_risk(K, s):
+    """Δ(K) = E_s[(1-s)^K] — Eq. 3."""
+    K = jnp.asarray(K, jnp.float32)
+    return jnp.mean(jnp.power(1.0 - s, K[..., None]), axis=-1)
+
+
+def n_delta(s, delta: float):
+    """Def. 4.1: minimal trials for 1-δ coverage of an instance with
+    success probability s."""
+    s = jnp.clip(s, 1e-12, 1.0 - 1e-12)
+    return jnp.ceil(jnp.log(delta) / jnp.log1p(-s))
+
+
+# ---------------------------------------------------------------------------
+# Difficulty distributions G(s) per Theorem 4.2 tail classes
+# ---------------------------------------------------------------------------
+
+def sample_heavy_tail(key, n: int, alpha: float = 0.5):
+    """g(s) ~ alpha * s^(alpha-1) on (0,1): heavy (polynomial) lower tail.
+    CDF G(s) = s^alpha -> inverse sampling s = U^(1/alpha)."""
+    u = jax.random.uniform(key, (n,), minval=1e-12)
+    return jnp.power(u, 1.0 / alpha)
+
+
+def sample_stretched_exp(key, n: int, c: float = 1.0, theta: float = 1.0):
+    """log Pr(s <= eps) ~ -c * eps^-theta: stretched-exponential lower tail.
+    Inverse sampling from G(s) = exp(-c s^-theta) (normalized on (0,1])."""
+    z = np.exp(-c)  # G(1)
+    u = jax.random.uniform(key, (n,), minval=1e-30) * z
+    return jnp.power(-jnp.log(u) / c, -1.0 / theta).clip(0.0, 1.0)
+
+
+def sample_light_tail(key, n: int, lo: float = 0.2, hi: float = 0.9):
+    """Truncated support: G([0, lo]) = 0 — light/truncated tail class."""
+    return jax.random.uniform(key, (n,), minval=lo, maxval=hi)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 4.2 asymptotics + estimation
+# ---------------------------------------------------------------------------
+
+def heavy_tail_rate(K, alpha: float, kappa: float = 1.0):
+    """Δ(K) ~ κ Γ(α) K^{-α} (slowly varying ℓ ≡ 1)."""
+    import math
+    return kappa * math.gamma(alpha) * jnp.power(jnp.asarray(K, jnp.float32), -alpha)
+
+
+def fit_power_law(Ks, deltas):
+    """Least-squares fit of log Δ = -α log K + c. Returns (alpha, c)."""
+    x = np.log(np.asarray(Ks, dtype=np.float64))
+    y = np.log(np.maximum(np.asarray(deltas, dtype=np.float64), 1e-300))
+    A = np.stack([x, np.ones_like(x)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    return -coef[0], coef[1]
+
+
+def fit_exponential(Ks, deltas):
+    """Fit log Δ = -c K + b. Returns (c, b)."""
+    x = np.asarray(Ks, dtype=np.float64)
+    y = np.log(np.maximum(np.asarray(deltas, dtype=np.float64), 1e-300))
+    A = np.stack([x, np.ones_like(x)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    return -coef[0], coef[1]
+
+
+def k_star(epsilon: float, r_irr: float, tail: str, *, alpha: float = 0.5,
+           kappa: float = 1.0, theta: float = 1.0) -> float:
+    """Eq. 6: minimal sampling budget to push total risk below ε."""
+    import math
+    margin = epsilon - r_irr
+    if margin <= 0:
+        return float("inf")
+    if tail == "heavy":
+        return (kappa * math.gamma(alpha) / margin) ** (1.0 / alpha)
+    if tail == "stretched":
+        return math.log(1.0 / margin) ** ((theta + 1.0) / theta)
+    if tail == "light":
+        return math.log(1.0 / margin)
+    raise ValueError(tail)

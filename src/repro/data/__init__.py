@@ -1,0 +1,2 @@
+from repro.data.synthetic import evidence_batch, lm_batches  # noqa: F401
+from repro.data.tasks import ChainTask, SimulatedDecoder  # noqa: F401

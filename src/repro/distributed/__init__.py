@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    opt_state_specs,
+    param_specs,
+    to_shardings,
+)

@@ -1,0 +1,93 @@
+"""Trace-time sharding context for model-internal constraints.
+
+Model code (e.g. the MoE dispatch) sometimes must pin activation
+shardings that GSPMD cannot infer profitably on its own. The launcher
+sets the axis names here before tracing; outside any mesh the constraints
+become no-ops so the same model code runs single-device.
+"""
+from __future__ import annotations
+
+from contextvars import ContextVar
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Default DISABLED: measured on kimi-k2 train_4k, pinning expert-sharding
+# produced 13.4 TB/dev collectives vs 12.4 TB for GSPMD's own propagation
+# (EXPERIMENTS.md §Perf, iteration "expert-constraint"). Launchers can
+# opt in via set_expert_axes(("data",)).
+_EP_AXES: ContextVar[Tuple[str, ...]] = ContextVar(
+    "ep_axes", default=("__disabled__",))
+
+
+def set_expert_axes(axes: Tuple[str, ...]) -> None:
+    _EP_AXES.set(tuple(axes))
+
+
+def get_expert_axes() -> Tuple[str, ...]:
+    return _EP_AXES.get()
+
+
+def maybe_constrain(x, spec: P):
+    """with_sharding_constraint that degrades to identity outside a mesh."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:  # no mesh context / unknown axis names
+        return x
+
+
+_BATCH_AXES: ContextVar[Tuple[str, ...]] = ContextVar(
+    "batch_axes", default=("data",))
+
+
+def set_batch_axes(axes: Tuple[str, ...]) -> None:
+    _BATCH_AXES.set(tuple(axes))
+
+
+def get_batch_axes() -> Tuple[str, ...]:
+    return _BATCH_AXES.get()
+
+
+def _axes_size(mesh, axes) -> int:
+    try:
+        import numpy as np
+        return int(np.prod([mesh.shape[a] for a in axes]))
+    except Exception:
+        return 0
+
+
+def _physical_mesh():
+    """The mesh installed by ``with mesh:`` (Auto axis types leave the
+    abstract mesh empty, so read the physical thread resource)."""
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return m if m.shape else None
+    except Exception:
+        return None
+
+
+def constrain_logits(logits, model_axis: str = "model"):
+    """Pin (B, ..., V) logits to batch-over-dp, vocab-over-model sharding.
+
+    On the 3-axis multi-pod mesh GSPMD resolves the unembed matmul by
+    replicating the batch (a 40 GB/device logits buffer — §Perf iteration
+    11); this one constraint keeps the batch on ("pod","data").
+    No-op outside a mesh.
+    """
+    mesh = _physical_mesh()
+    if mesh is None:
+        return logits
+    try:
+        sizes = dict(mesh.shape)
+        bp = tuple(a for a in get_batch_axes() if a in sizes)
+        import numpy as np
+        if not bp or logits.shape[0] % int(np.prod([sizes[a] for a in bp])):
+            return logits
+        # vocab over "model" (GSPMD pads uneven shards), batch over dp.
+        v_ax = model_axis if model_axis in sizes else None
+        spec = P(bp, *([None] * (logits.ndim - 2)), v_ax)
+        return jax.lax.with_sharding_constraint(logits, spec)
+    except Exception:
+        return logits

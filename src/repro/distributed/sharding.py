@@ -1,0 +1,224 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+One rule table maps every parameter / cache / batch leaf to a
+PartitionSpec given the mesh. A dim is sharded on a mesh axis ONLY if its
+size is divisible by the axis size — otherwise that dim stays replicated
+(e.g. yi-34b's 56 query heads are not divisible by model=16, so the head
+dim replicates and the QKV matmuls shard on d_model via FSDP instead).
+This keeps every (arch × shape × mesh) combination lowering without
+per-arch special cases; per-arch overrides remain possible via
+``ShardingRules``.
+
+Axis roles:
+  "model"          tensor parallelism — MLP hidden, attention heads,
+                   per-expert FFN width, vocab
+  "data" (+"pod")  batch/data parallelism; also FSDP parameter sharding
+                   and MoE expert parallelism (experts live with data
+                   shards; dispatch/combine einsums become all-to-alls)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+
+# parameters whose *contracting* dim is model-sharded (Megatron row-parallel)
+ROW_PARALLEL = {"wo", "w_down", "out_proj"}
+# parameters that stay replicated regardless of shape
+ALWAYS_REPLICATED = {"router", "lam", "A_log", "D", "dt_bias", "norm",
+                     "scale", "bias", "conv_b", "q_norm", "k_norm"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    model_axis: str = "model"
+    fsdp: bool = True           # shard params' non-model dim over data axes
+    expert_axis: str = "data"   # MoE expert-parallel axis
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel axes: ("pod", "data") on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh: Mesh, dim_size: int, axes) -> Optional[Any]:
+    """axes if dim_size divisible by their product else None."""
+    return axes if dim_size % _axsize(mesh, axes) == 0 else None
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            return p.key
+    return ""
+
+
+def _path_names(path):
+    return [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _param_spec(mesh: Mesh, rules: ShardingRules, path, shape) -> P:
+    names = _path_names(path)
+    # rule lookups must see the *parameter* name, not the 'kernel' leaf
+    # inside a dense-params dict (wo = {"kernel": ...}).
+    name = names[-1] if names[-1] != "kernel" or len(names) < 2 else names[-2]
+    dp = dp_axes(mesh)
+    model = rules.model_axis
+    nd = len(shape)
+    if nd <= 1 or name in ALWAYS_REPLICATED or \
+            set(names) & ALWAYS_REPLICATED:
+        return P()
+
+    # stacked-over-layers params have a leading layer dim — never sharded
+    stacked = any(n in ("super", "dec_super", "enc_super") for n in names)
+    off = 1 if stacked and nd >= 3 else 0
+    eff = shape[off:]
+    if len(eff) == 1:
+        return P()
+
+    def build(dims):
+        return P(*([None] * off + list(dims)))
+
+    # MoE expert weights: (E, d, f) / (E, f, d)
+    if name in ("w_gate", "w_up", "w_down") and len(eff) == 3:
+        e_ax = _maybe(mesh, eff[0], dp if len(dp) > 1 else rules.expert_axis)
+        if name == "w_down":   # (E, f, d): f is contracting/model dim
+            f_ax = _maybe(mesh, eff[1], model)
+            return build([e_ax, f_ax, None])
+        f_ax = _maybe(mesh, eff[2], model)
+        return build([e_ax, None, f_ax])
+
+    # embedding / unembedding: (V, d) or (d, V). Vocab over "model" ONLY —
+    # FSDP-sharding d here makes the unembed matmul's contracting dim
+    # conflict with the batch's "data" sharding and GSPMD resolves it by
+    # all-gathering the global batch of logits (measured: 40 GB/dev on
+    # qwen3 train_4k). Vocab/16 already bounds the table per device.
+    if name == "table":
+        v_ax = _maybe(mesh, eff[0], model)
+        return build([v_ax, None])
+    if "unembed" in names:
+        v_ax = _maybe(mesh, eff[1], model)
+        return build([None, v_ax])
+
+    # conv weights (W, ch): channel dim over model
+    if name == "conv_w":
+        return build([None, _maybe(mesh, eff[1], model)])
+
+    if len(eff) == 2:
+        if name in ROW_PARALLEL:
+            # (contract=model_dim, out=d_model): FSDP-sharding the OUTPUT
+            # dim over "data" propagates a d-over-data activation sharding
+            # that conflicts with the batch's data sharding — GSPMD then
+            # batch-gathers the residual stream (90 GB/dev measured,
+            # §Perf iteration 12). Row-parallel keeps d replicated.
+            m_ax = _maybe(mesh, eff[0], model)
+            return build([m_ax, None])
+        m_ax = _maybe(mesh, eff[1], model)
+        d_ax = _maybe(mesh, eff[0], dp) if rules.fsdp else None
+        return build([d_ax, m_ax])
+    return P()
+
+
+def param_specs(cfg: ModelConfig, params_shapes, mesh: Mesh,
+                rules: ShardingRules = ShardingRules()):
+    """params_shapes: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(mesh, rules, path, leaf.shape),
+        params_shapes)
+
+
+def opt_state_specs(cfg: ModelConfig, opt_shapes, mesh: Mesh,
+                    rules: ShardingRules = ShardingRules()):
+    """m/v mirror params; step is replicated."""
+
+    def spec(path, leaf):
+        if len(leaf.shape) == 0:
+            return P()
+        # strip the leading OptState field from the path for rule lookup
+        return _param_spec(mesh, rules, path, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec, opt_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Cache / batch
+# ---------------------------------------------------------------------------
+
+def _cache_spec(mesh: Mesh, rules: ShardingRules, path, shape) -> P:
+    name = _leaf_name(path)
+    names = _path_names(path)
+    dp = dp_axes(mesh)
+    model = rules.model_axis
+    stacked = any(n in ("super", "self") for n in names) or \
+        name in ("cross_k", "cross_v")
+    off = 1 if stacked else 0
+    eff = shape[off:]
+
+    def build(dims):
+        return P(*([None] * off + list(dims)))
+
+    if name == "pos":
+        return P(_maybe(mesh, shape[0], dp))
+    if name in ("k", "v") or name in ("cross_k", "cross_v"):
+        # (B, S, Hkv, hd). Prefer head sharding; when Hkv is not divisible
+        # (MQA / small GQA) fall back to *context parallelism*: shard the
+        # sequence dim over "model" — decode attention then runs as
+        # sharded flash-decode partials combined by GSPMD collectives.
+        b_ax = _maybe(mesh, eff[0], dp)
+        h_ax = _maybe(mesh, eff[2], model)
+        if h_ax is not None:
+            return build([b_ax, None, h_ax, None])
+        s_ax = _maybe(mesh, eff[1], model)
+        return build([b_ax, s_ax, None, None])
+    if name == "ssd":        # (B, H, P, N)
+        return build([_maybe(mesh, eff[0], dp), _maybe(mesh, eff[1], model),
+                      None, None])
+    if name == "conv":       # (B, W-1, ch)
+        return build([_maybe(mesh, eff[0], dp), None,
+                      _maybe(mesh, eff[2], model)])
+    if name == "h":          # (B, w)
+        return build([_maybe(mesh, eff[0], dp), _maybe(mesh, eff[1], model)])
+    return P()
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes, mesh: Mesh,
+                rules: ShardingRules = ShardingRules()):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_spec(mesh, rules, path, leaf.shape),
+        cache_shapes)
+
+
+def batch_specs(shape_cfg: ShapeConfig, batch_shapes, mesh: Mesh):
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        if name in ("tokens", "labels", "evidence", "token"):
+            b_ax = dp if leaf.shape[0] % _axsize(mesh, dp) == 0 else None
+            return P(*([b_ax] + [None] * (len(leaf.shape) - 1)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

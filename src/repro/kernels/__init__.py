@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+flash_attention   prefill attention (online softmax, causal/window)
+decode_attention  flash-decode vs long KV caches (GQA-grouped HBM reads)
+xmodal_score      fused Eq. 8-9 cross-modal consistency reductions
+moe_dispatch      gather-based MoE dispatch/combine — the O(k)/token
+                  TPU-native replacement for the O(E*C)/token capacity
+                  einsum (EXPERIMENTS.md §Perf backlog item, realized)
+
+``ops`` — jit'd wrappers (TPU kernel / interpret / jnp-ref dispatch);
+``ref`` — pure-jnp oracles used by the test sweeps.
+"""
+from repro.kernels import ops, ref  # noqa: F401

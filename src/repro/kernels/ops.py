@@ -1,0 +1,51 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On a real TPU these dispatch compiled Mosaic kernels; everywhere else
+(including this CPU container and the multi-pod dry-run) they run the
+kernels in interpret mode or fall back to the jnp oracle — selectable via
+``REPRO_KERNEL_MODE`` in {"auto", "interpret", "ref"}.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import xmodal_score as _xm
+
+
+def _mode() -> str:
+    m = os.environ.get("REPRO_KERNEL_MODE", "auto")
+    if m == "auto":
+        plat = jax.devices()[0].platform
+        return "tpu" if plat == "tpu" else "ref"
+    return m
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    blk_q: int = 128, blk_k: int = 128):
+    m = _mode()
+    if m == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               blk_q=blk_q, blk_k=blk_k,
+                               interpret=(m == "interpret"))
+
+
+def decode_attention(q, k, v, kv_mask, *, blk_s: int = 256):
+    m = _mode()
+    if m == "ref":
+        return _ref.decode_attention_ref(q, k, v, kv_mask)
+    return _dec.decode_attention(q, k, v, kv_mask, blk_s=blk_s,
+                                 interpret=(m == "interpret"))
+
+
+def xmodal_score(token_embs, mask, visual_feats, text_feats, *, blk: int = 128):
+    m = _mode()
+    if m == "ref":
+        return _ref.xmodal_score_ref(token_embs, mask, visual_feats, text_feats)
+    return _xm.xmodal_score(token_embs, mask, visual_feats, text_feats,
+                            blk=blk, interpret=(m == "interpret"))

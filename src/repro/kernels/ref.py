@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function computes the mathematically identical result with plain
+jnp ops (fp32 accumulation, same masking semantics) — tests sweep shapes
+and dtypes asserting allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q/k/v: (B, L, H, hd) heads pre-expanded."""
+    B, L, H, hd = q.shape
+    scale = hd ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(L)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    rel = qp - kp
+    mask = jnp.ones_like(rel, dtype=bool)
+    if causal:
+        mask &= rel >= 0
+    if window > 0:
+        mask &= rel < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_mask):
+    """q: (B,1,H,hd); k/v: (B,S,Hkv,hd); kv_mask: (B,S)."""
+    B, _, H, hd = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    kx = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vx = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx) * hd ** -0.5
+    s = jnp.where(kv_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vx)
+    return out.astype(q.dtype)
+
+
+def xmodal_score_ref(token_embs, mask, visual_feats, text_feats):
+    """Eq. 8-9 oracle — mirrors repro.core.scoring.cross_modal_consistency."""
+
+    def norm(x):
+        return x / jnp.maximum(
+            jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-8)
+
+    tok = norm(token_embs.astype(jnp.float32))
+    vis = norm(visual_feats.astype(jnp.float32))
+    txt = norm(text_feats.astype(jnp.float32))
+    m = mask.astype(jnp.float32)
+    sim_tv = jnp.einsum("bld,bnd->bln", tok, vis)
+    term1 = jnp.sum(jnp.mean(sim_tv, axis=-1) * m, axis=-1) \
+        / jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+    sim_rt = jnp.einsum("brd,bnd->brn", txt, vis)
+    term2 = jnp.mean(jnp.max(sim_rt, axis=-1), axis=-1)
+    return 0.5 * (term1 + term2)
+
+
+def moe_dispatch_ref(idx, x):
+    """idx: (G, E, C) int32 token ids (-1 empty); x: (G, g, d).
+    Einsum-equivalent gather reference."""
+    valid = idx >= 0
+    G, E, C = idx.shape
+    d = x.shape[-1]
+    out = x[jnp.arange(G)[:, None, None], jnp.maximum(idx, 0)]  # (G,E,C,d)
+    return jnp.where(valid[..., None], out, 0.0).astype(x.dtype)
+
+
+def moe_combine_ref(slot_idx, gates, expert_out):
+    """slot_idx: (G, g, k) flat E*C slots (-1 dropped); gates: (G, g, k);
+    expert_out: (G, E, C, d)."""
+    G, E, C, d = expert_out.shape
+    flat = expert_out.reshape(G, E * C, d).astype(jnp.float32)
+    rows = flat[jnp.arange(G)[:, None, None], jnp.maximum(slot_idx, 0)]
+    w = jnp.where(slot_idx >= 0, gates, 0.0).astype(jnp.float32)
+    return jnp.sum(rows * w[..., None], axis=2)

@@ -1,0 +1,100 @@
+"""Distributed training launcher.
+
+    python -m repro.launch.train --arch qwen3-0.6b --steps 100 \
+        --mesh 2x2 --batch 8 --seq 128
+
+On real hardware the mesh comes from the slice topology; on CPU pass
+``--devices N`` to force host devices (must be the first thing the
+process does, so it is handled here before importing jax).
+"""
+import argparse
+import os
+import sys
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 4x2")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU testing)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized variant")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="")
+    return ap.parse_args()
+
+
+def main():
+    args = _parse()
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.config import INPUT_SHAPES, TrainConfig
+    from repro.configs import get_config
+    from repro.data import lm_batches
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+    from repro.training import (init_opt_state, make_train_step,
+                                save_checkpoint)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.with_overrides(dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    tc = TrainConfig(total_steps=args.steps, warmup_steps=args.steps // 10,
+                     learning_rate=args.lr, microbatches=args.microbatches)
+    params = model.init(jax.random.PRNGKey(tc.seed))
+    opt = init_opt_state(params)
+    step = make_train_step(model, tc)
+
+    dshape = tuple(int(x) for x in args.mesh.split("x"))
+    data = lm_batches(cfg.vocab_size, args.batch, args.seq, seed=0)
+
+    if dshape == (1, 1):
+        step = jax.jit(step)
+        put = lambda t, s: t  # noqa: E731
+    else:
+        mesh = make_local_mesh(dshape, ("data", "model"))
+        p_spec = shd.param_specs(cfg, jax.eval_shape(lambda: params), mesh)
+        o_spec = shd.opt_state_specs(cfg, jax.eval_shape(lambda: opt), mesh)
+
+        def put(t, spec):
+            return jax.device_put(t, jax.tree.map(
+                lambda s: NamedSharding(mesh, s), spec,
+                is_leaf=lambda x: isinstance(x, P)))
+
+        params = put(params, p_spec)
+        opt = put(opt, o_spec)
+        step = jax.jit(step)
+        mesh.__enter__()
+
+    import time
+    t0 = time.time()
+    for i in range(args.steps):
+        b = next(data)
+        batch = {"tokens": jnp.asarray(b["tokens"]),
+                 "labels": jnp.asarray(b["labels"])}
+        params, opt, m = step(params, opt, batch)
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"step {i:>5} loss={float(m['loss']):.4f} "
+                  f"acc={float(m['accuracy']):.3f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, jax.device_get(params), step=args.steps)
+        print(f"saved {args.ckpt}.npz")
+
+
+if __name__ == "__main__":
+    main()

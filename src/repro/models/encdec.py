@@ -1,0 +1,236 @@
+"""Encoder–decoder transformer (SeamlessM4T-v2 backbone).
+
+The speech frontend is stubbed: the encoder consumes precomputed frame
+embeddings (``evidence``). The decoder is a causal transformer with
+cross-attention to the encoder memory; cross K/V are computed once at
+prefill and held constant through decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models.layers import (dense, dense_init, embed, embed_init, mlp,
+                                 mlp_init, rmsnorm, rmsnorm_init)
+
+Params = Dict[str, Any]
+
+
+def _enc_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_lib.attn_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_activation, dtype),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_lib.attn_init(k1, cfg, dtype),
+        "lnx": rmsnorm_init(cfg.d_model, dtype),
+        "xattn": attn_lib.attn_init(k2, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp_activation, dtype),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig, dtype) -> Params:
+    keys = jax.random.split(key, 6)
+
+    def stack(init_fn, n, base):
+        ks = jax.random.split(base, n)
+        per = [init_fn(k, cfg, dtype) for k in ks]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    p: Params = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_super": stack(_enc_block_init, cfg.num_encoder_layers, keys[1]),
+        "dec_super": stack(_dec_block_init, cfg.num_layers, keys[2]),
+        "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(keys[3], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.evidence_dim and cfg.evidence_dim != cfg.d_model:
+        p["evidence_proj"] = dense_init(keys[4], cfg.evidence_dim, cfg.d_model, dtype)
+    return p
+
+
+def encode(params: Params, cfg: ModelConfig, evidence, *,
+           unroll: bool = False) -> jax.Array:
+    """evidence: (B, Ne, De) stub frontend output -> memory (B, Ne, d)."""
+    x = evidence
+    if "evidence_proj" in params:
+        x = dense(params["evidence_proj"], x)
+    x = x.astype(params["embed"]["table"].dtype)
+    B, L, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    def body(x, p):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, _ = attn_lib.attn_prefill(p["attn"], cfg, h, positions, window=0,
+                                     causal=False)  # bidirectional encoder
+        x = x + y
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h2, cfg.mlp_activation)
+        return x, None
+
+    if unroll:
+        for i in range(cfg.num_encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_super"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["enc_super"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(params_x, cfg: ModelConfig, memory):
+    """Project encoder memory to per-layer cross K/V (stacked over layers)."""
+    B, Ls, _ = memory.shape
+    hd = cfg.resolved_head_dim
+
+    def one(p):
+        k = dense(p["wk"], memory).reshape(B, Ls, cfg.num_kv_heads, hd)
+        v = dense(p["wv"], memory).reshape(B, Ls, cfg.num_kv_heads, hd)
+        return k, v
+
+    return jax.vmap(one)(params_x)
+
+
+def _dec_block(p, cfg: ModelConfig, x, positions, cross_k, cross_v, impl):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    y, kv = attn_lib.attn_prefill(p["attn"], cfg, h, positions, impl=impl)
+    x = x + y
+    hx = rmsnorm(p["lnx"], x, cfg.norm_eps)
+    yx, _ = attn_lib.attn_prefill(p["xattn"], cfg, hx, positions,
+                                  cross_kv=(cross_k, cross_v))
+    x = x + yx
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + mlp(p["mlp"], h2, cfg.mlp_activation)
+    return x, kv
+
+
+def encdec_forward(params: Params, cfg: ModelConfig, tokens, evidence, *,
+                   impl: str = "xla", remat: bool = False,
+                   unroll: bool = False
+                   ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """Training forward. tokens: (B, L) decoder inputs; evidence: (B, Ne, De).
+    Returns (logits, hidden, aux)."""
+    memory = encode(params, cfg, evidence, unroll=unroll)
+    ck, cv = _cross_kv(params["dec_super"]["xattn"], cfg, memory)
+    x = embed(params["embed"], tokens)
+    B, L, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    def body(x, inp):
+        p, k, v = inp
+        x, _ = _dec_block(p, cfg, x, positions, k, v, impl)
+        return x, None
+
+    fn = jax.checkpoint(body) if remat else body
+    if unroll:
+        for i in range(cfg.num_layers):
+            x, _ = fn(x, jax.tree.map(lambda a: a[i],
+                                      (params["dec_super"], ck, cv)))
+    else:
+        x, _ = jax.lax.scan(fn, x, (params["dec_super"], ck, cv))
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].T
+    else:
+        logits = dense(params["unembed"], h)
+    from repro.distributed.context import constrain_logits
+    return constrain_logits(logits), h, {}
+
+
+def encdec_make_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
+                      src_len: int):
+    hd = cfg.resolved_head_dim
+    n = cfg.num_layers
+    kv = attn_lib.make_kv_cache(cfg, batch, cache_len, dtype)
+    return {
+        "self": jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), kv),
+        "cross_k": jnp.zeros((n, batch, src_len, cfg.num_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((n, batch, src_len, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def encdec_prefill(params: Params, cfg: ModelConfig, tokens, cache, evidence,
+                   *, impl: str = "xla", unroll: bool = False):
+    memory = encode(params, cfg, evidence, unroll=unroll)
+    ck, cv = _cross_kv(params["dec_super"]["xattn"], cfg, memory)
+    x = embed(params["embed"], tokens)
+    B, L, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    def body(x, inp):
+        p, k, v, ce = inp
+        x, kv = _dec_block(p, cfg, x, positions, k, v, impl)
+        return x, attn_lib.prefill_into_cache(ce, kv[0], kv[1])
+
+    xs = (params["dec_super"], ck, cv, cache["self"])
+    if unroll:
+        entries = []
+        for i in range(cfg.num_layers):
+            x, e = body(x, jax.tree.map(lambda a: a[i], xs))
+            entries.append(e)
+        new_self = jax.tree.map(lambda *ys: jnp.stack(ys), *entries)
+    else:
+        x, new_self = jax.lax.scan(body, x, xs)
+    h = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].T
+    else:
+        logits = dense(params["unembed"], h)
+    new_cache = {"self": new_self,
+                 "cross_k": ck.astype(cache["cross_k"].dtype),
+                 "cross_v": cv.astype(cache["cross_v"].dtype),
+                 "pos": jnp.full((B,), L, jnp.int32)}
+    return logits[:, 0], h[:, 0], new_cache
+
+
+def encdec_decode(params: Params, cfg: ModelConfig, token, cache, *,
+                  impl: str = "xla", unroll: bool = False):
+    if token.ndim == 1:
+        token = token[:, None]
+    pos = cache["pos"]
+    x = embed(params["embed"], token)
+
+    def body(x, inp):
+        p, ce, k, v = inp
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, entry = attn_lib.attn_decode(p["attn"], cfg, h, ce, pos, impl=impl)
+        x = x + y
+        hx = rmsnorm(p["lnx"], x, cfg.norm_eps)
+        yx, _ = attn_lib.attn_decode(p["xattn"], cfg, hx, None, pos,
+                                     cross_kv=(k, v))
+        x = x + yx
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h2, cfg.mlp_activation)
+        return x, entry
+
+    xs = (params["dec_super"], cache["self"],
+          cache["cross_k"], cache["cross_v"])
+    if unroll:
+        entries = []
+        for i in range(cfg.num_layers):
+            x, e = body(x, jax.tree.map(lambda a: a[i], xs))
+            entries.append(e)
+        new_self = jax.tree.map(lambda *ys: jnp.stack(ys), *entries)
+    else:
+        x, new_self = jax.lax.scan(body, x, xs)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].T
+    else:
+        logits = dense(params["unembed"], h)
+    new_cache = dict(cache, self=new_self, pos=pos + 1)
+    return logits[:, 0], h[:, 0], new_cache

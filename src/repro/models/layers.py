@@ -1,0 +1,121 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Every init
+function takes an explicit PRNG key and dtype; every apply function is a
+pure function of (params, inputs).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def rmsnorm_headwise(scale, x, eps: float = 1e-6):
+    """qk-norm: normalize the last (head) dim with a shared scale."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., L, H, hd); positions: broadcastable to (..., L)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                    # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., L, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                    # (..., L, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, bias: bool = False,
+               scale: Optional[float] = None):
+    if scale is None:
+        scale = d_in ** -0.5
+    p = {"kernel": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["kernel"]
+    if "bias" in params:
+        y = y + params["bias"]
+    return y
+
+
+def _activation(name: str):
+    return {"swiglu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_init(key, d_model: int, d_ff: int, activation: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    return {
+        "w_in": dense_init(k1, d_model, d_ff, dtype),
+        "w_out": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params, x, activation: str):
+    act = _activation(activation)
+    if "w_gate" in params:
+        return dense(params["w_down"], act(dense(params["w_gate"], x)) * dense(params["w_up"], x))
+    return dense(params["w_out"], act(dense(params["w_in"], x)))
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d)) * d ** -0.5).astype(dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x, tied_table=None):
+    table = tied_table if tied_table is not None else params["kernel"]
+    if tied_table is not None:
+        return x @ table.T
+    return x @ table

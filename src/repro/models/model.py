@@ -1,0 +1,123 @@
+"""Unified model facade: one API over decoder-only and encoder-decoder
+architectures, plus dry-run ``input_specs`` (ShapeDtypeStruct stand-ins,
+no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf_lib
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[cfg.dtype]
+
+
+class Model:
+    """Stateless functional model: all methods are pure and jit-able."""
+
+    def __init__(self, cfg: ModelConfig, param_dtype=None):
+        self.cfg = cfg
+        self.param_dtype = param_dtype or _dtype(cfg)
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> Params:
+        if self.cfg.is_encoder_decoder:
+            return encdec_lib.encdec_init(key, self.cfg, self.param_dtype)
+        return tf_lib.transformer_init(key, self.cfg, self.param_dtype)
+
+    # -- full-sequence forward (training / scoring) --------------------------
+    def forward(self, params: Params, tokens, evidence=None, *,
+                impl: str = "xla", remat: bool = False, unroll: bool = False
+                ) -> Tuple[jax.Array, jax.Array, Dict]:
+        if self.cfg.is_encoder_decoder:
+            assert evidence is not None, "enc-dec needs encoder inputs"
+            return encdec_lib.encdec_forward(params, self.cfg, tokens, evidence,
+                                             impl=impl, remat=remat,
+                                             unroll=unroll)
+        return tf_lib.transformer_forward(params, self.cfg, tokens, evidence,
+                                          impl=impl, remat=remat,
+                                          unroll=unroll)
+
+    # -- serving -------------------------------------------------------------
+    def make_cache(self, batch: int, cache_len: int, dtype=None):
+        dtype = dtype or self.param_dtype
+        if self.cfg.is_encoder_decoder:
+            src = self.cfg.num_evidence_tokens or 64
+            return encdec_lib.encdec_make_cache(self.cfg, batch, cache_len,
+                                                dtype, src)
+        return tf_lib.make_cache(self.cfg, batch, cache_len, dtype)
+
+    def prefill(self, params: Params, tokens, cache, evidence=None, *,
+                impl: str = "xla", unroll: bool = False):
+        if self.cfg.is_encoder_decoder:
+            assert evidence is not None
+            return encdec_lib.encdec_prefill(params, self.cfg, tokens, cache,
+                                             evidence, impl=impl,
+                                             unroll=unroll)
+        return tf_lib.transformer_prefill(params, self.cfg, tokens, cache,
+                                          evidence, impl=impl, unroll=unroll)
+
+    def decode_step(self, params: Params, token, cache, *, impl: str = "xla",
+                    unroll: bool = False):
+        if self.cfg.is_encoder_decoder:
+            return encdec_lib.encdec_decode(params, self.cfg, token, cache,
+                                            impl=impl, unroll=unroll)
+        return tf_lib.transformer_decode(params, self.cfg, token, cache,
+                                         impl=impl, unroll=unroll)
+
+    # -- dry-run specs ---------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a step.
+
+        train/prefill: {tokens, (evidence), (labels)}.
+        decode: {token, cache} — one new token against a seq_len-deep cache.
+        """
+        cfg = self.cfg
+        B, L = shape.global_batch, shape.seq_len
+        tok = jnp.int32
+        specs: Dict[str, Any] = {}
+        ne = cfg.num_evidence_tokens
+        if shape.mode in ("train", "prefill"):
+            text_len = L - ne if (ne and not cfg.is_encoder_decoder) else L
+            specs["tokens"] = jax.ShapeDtypeStruct((B, text_len), tok)
+            if ne:
+                specs["evidence"] = jax.ShapeDtypeStruct(
+                    (B, ne, cfg.evidence_dim or cfg.d_model), jnp.bfloat16)
+            if shape.mode == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, text_len), tok)
+        else:  # decode
+            specs["token"] = jax.ShapeDtypeStruct((B,), tok)
+            cache = jax.eval_shape(
+                lambda: self.make_cache(B, self.cache_len(L), _dtype(cfg)))
+            specs["cache"] = cache
+        return specs
+
+    def cache_len(self, seq_len: int) -> int:
+        """Decode cache depth for a nominal context of ``seq_len``.
+
+        Full-attention archs hold the whole context; windowed/SSM archs are
+        sub-quadratic and their per-layer caches are bounded by the
+        window/state size (handled inside make_cache) — the nominal length
+        still sizes full-attention layers' caches.
+        """
+        cfg = self.cfg
+        if cfg.attn_window > 0:
+            return min(seq_len, cfg.attn_window)
+        return seq_len
+
+
+def build_model(cfg: ModelConfig, param_dtype=None) -> Model:
+    return Model(cfg, param_dtype)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, param_dtype=None) -> Params:
+    return Model(cfg, param_dtype).init(jax.random.PRNGKey(seed))

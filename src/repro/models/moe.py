@@ -1,0 +1,255 @@
+"""Mixture-of-Experts MLP with GShard/Switch-style capacity dispatch.
+
+Why capacity dispatch (vs. sort + ragged matmul): under ``pjit`` the
+dispatch/combine einsums are what GSPMD turns into the expert-parallel
+all-to-all when the expert dim of the weights is sharded — it is the
+TPU-native SPMD formulation (GShard, Switch, MaxText's dropped path).
+Tokens are processed in fixed-size groups so the one-hot dispatch tensor
+stays ``O(g·k·cf)`` per token instead of quadratic in the per-device batch.
+
+Top-k routing with renormalized gates, capacity factor with token dropping,
+Switch-style load-balance auxiliary loss and router z-loss, optional shared
+(always-on) experts (Kimi-K2 style).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, mlp, mlp_init
+
+DEFAULT_GROUP = 256
+DEFAULT_CAPACITY_FACTOR = 1.25
+
+
+def _prod_axes(axes) -> int:
+    """Product of mesh axis sizes for the current abstract mesh; falls back
+    to 1 (constraint becomes a no-op) outside a mesh."""
+    try:
+        import jax
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.shape:
+            return 1
+        return int(__import__("numpy").prod([mesh.shape[a] for a in axes]))
+    except Exception:
+        return 1
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    e = cfg.moe
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    d, f, E = cfg.d_model, e.expert_d_ff, e.num_experts
+    scale = d ** -0.5
+    p = {
+        "router": dense_init(kr, d, E, jnp.float32),  # router kept in fp32
+        "w_gate": (jax.random.normal(kg, (E, d, f)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ku, (E, d, f)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(kd, (E, f, d)) * f ** -0.5).astype(dtype),
+    }
+    if cfg.mlp_activation != "swiglu":
+        del p["w_up"]
+    if e.num_shared_experts:
+        p["shared"] = mlp_init(ks, d, e.num_shared_experts * f,
+                               cfg.mlp_activation, dtype)
+    return p
+
+
+def _capacity(g: int, top_k: int, num_experts: int, cf: float) -> int:
+    c = int(math.ceil(g * top_k / num_experts * cf))
+    return max(8, -(-c // 8) * 8)  # >=8, rounded up to a multiple of 8
+
+
+def moe_apply(params, cfg: ModelConfig, x, *, capacity_factor: float = None,
+              group_size: int = None, router_key=None
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (..., d). Returns (out, aux) where aux carries router losses."""
+    e = cfg.moe
+    capacity_factor = capacity_factor or e.capacity_factor
+    group_size = group_size or e.group_size
+    E, k = e.num_experts, e.top_k
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    x = x.reshape(-1, d)
+    T = x.shape[0]
+    g = min(group_size, T)
+    pad = (-T) % g
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)], axis=0)
+    G = x.shape[0] // g
+    xg = x.reshape(G, g, d)
+
+    logits = (xg.astype(jnp.float32) @ params["router"]["kernel"])  # (G,g,E)
+    if router_key is not None and e.router_noise > 0:
+        logits = logits + e.router_noise * jax.random.normal(router_key, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                  # (G,g,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = _capacity(g, k, E, capacity_factor)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)        # (G,g,k,E)
+
+    # priority order: first choices of all tokens beat second choices etc.
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, k * g, E)       # (G,a,E)
+    pos = jnp.cumsum(flat, axis=1) * flat - flat                   # 0-based slot
+    keep = (pos < C) * flat
+    # Fold the k choice slots back into per-TOKEN dispatch/combine tensors
+    # (GShard layout): a token's (expert, capacity) targets are distinct, so
+    # the k one-hots sum to a single 0/1 tensor. This keeps the dispatch
+    # einsum at O(E·C·d) per token instead of O(k·E·C·d) — measured 8×
+    # fewer dispatch FLOPs on kimi-k2 (k=8).
+    pos_k = pos.reshape(G, k, g, E)
+    keep_k = keep.reshape(G, k, g, E)
+    disp = jnp.zeros((G, g, E, C), x.dtype)
+    combine = jnp.zeros((G, g, E, C), x.dtype)
+    gate_k = gate_vals.transpose(0, 2, 1)                          # (G,k,g)
+    for j in range(k):
+        oh = jax.nn.one_hot(pos_k[:, j].astype(jnp.int32), C, dtype=x.dtype) \
+            * keep_k[:, j][..., None].astype(x.dtype)              # (G,g,E,C)
+        disp = disp + oh
+        combine = combine + oh * gate_k[:, j][:, :, None, None].astype(x.dtype)
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", disp, xg)             # (G,E,C,d)
+
+    # Expert parallelism: pin the dispatched activations to E-sharding on
+    # the expert axes. This turns the dispatch/combine einsums into the
+    # GShard all-to-all; without it GSPMD all-gathers the expert weights
+    # over the data axis (measured: 14.6 TB/device/step on kimi-k2 train).
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.context import get_expert_axes, maybe_constrain
+    ep = get_expert_axes()
+    e_spec = ep if E % _prod_axes(ep) == 0 else None
+    expert_in = maybe_constrain(expert_in, P(None, e_spec, None, None))
+
+    act = {"swiglu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[cfg.mlp_activation]
+    if cfg.mlp_activation == "swiglu":
+        h = act(jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+    else:
+        h = act(jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"]))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    expert_out = maybe_constrain(expert_out, P(None, e_spec, None, None))
+
+    out = jnp.einsum("gsec,gecd->gsd", combine, expert_out)        # (G,g,d)
+    out = out.reshape(-1, d)
+    if pad:
+        out = out[:T]
+
+    if "shared" in params:
+        out = out + mlp(params["shared"], x[:T] if pad else x, cfg.mlp_activation)
+
+    # --- auxiliary losses (Switch Transformer eq. 4-6) -----------------------
+    frac_tokens = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(frac_tokens * mean_probs)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - jnp.sum(keep) / (G * g * k)
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_drop_frac": dropped}
+    return out.reshape(orig_shape), aux
+
+
+def moe_apply_dense(params, cfg: ModelConfig, x):
+    """Dropless dense oracle: computes *all* experts for every token and
+    combines with the same renormalized top-k gates. Used as the reference
+    in tests (must match ``moe_apply`` when capacity_factor is large)."""
+    e = cfg.moe
+    orig_shape = x.shape
+    x = x.reshape(-1, orig_shape[-1])
+    logits = x.astype(jnp.float32) @ params["router"]["kernel"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, e.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    full_gate = jnp.sum(
+        jax.nn.one_hot(gate_idx, e.num_experts) * gate_vals[..., None], axis=-2)
+
+    act = {"swiglu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[cfg.mlp_activation]
+    if cfg.mlp_activation == "swiglu":
+        h = act(jnp.einsum("td,edf->tef", x, params["w_gate"])) \
+            * jnp.einsum("td,edf->tef", x, params["w_up"])
+    else:
+        h = act(jnp.einsum("td,edf->tef", x, params["w_gate"]))
+    per_expert = jnp.einsum("tef,efd->ted", h, params["w_down"])
+    out = jnp.einsum("te,ted->td", full_gate.astype(x.dtype), per_expert)
+    if "shared" in params:
+        out = out + mlp(params["shared"], x, cfg.mlp_activation)
+    return out.reshape(orig_shape)
+
+
+def moe_apply_sparse(params, cfg: ModelConfig, x, *,
+                     capacity_factor: float = None
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Sort/scatter-based MoE (einsum-free dispatch).
+
+    The capacity-einsum path costs O(E·C) per token in dispatch compute
+    and memory (EXPERIMENTS.md §Perf); this path is O(k log k) per token:
+    sort assignments by expert, compute within-expert ranks, scatter token
+    rows into (E, C, d) slots, gather back per (token, choice). It is the
+    host-side counterpart of the ``kernels.moe_dispatch`` Pallas kernels
+    and the building block for a shard_map expert-parallel deployment.
+
+    Capacity priority differs slightly from the GShard path (token order
+    within an expert instead of choice-rank order); in the dropless
+    regime both match the dense oracle exactly.
+    """
+    e = cfg.moe
+    capacity_factor = capacity_factor or e.capacity_factor
+    E, k = e.num_experts, e.top_k
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    x = x.reshape(-1, d)
+    T = x.shape[0]
+    C = _capacity(T, k, E, capacity_factor)
+
+    logits = x.astype(jnp.float32) @ params["router"]["kernel"]     # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                   # (T,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # sort the T*k assignments by expert id
+    eid = gate_idx.reshape(-1)                                      # (T*k,)
+    order = jnp.argsort(eid, stable=True)
+    eid_sorted = eid[order]
+    counts = jnp.bincount(eid, length=E)                            # (T*k -> E)
+    starts = jnp.cumsum(counts) - counts                            # exclusive
+    rank = jnp.arange(T * k) - starts[eid_sorted]                   # within-expert
+    keep = rank < C
+    slot_sorted = jnp.where(keep, eid_sorted * C + rank, -1)        # flat E*C
+    # invert the permutation: slot id per original (token, choice) pair
+    slot = jnp.zeros((T * k,), jnp.int32).at[order].set(
+        slot_sorted.astype(jnp.int32))
+
+    token_of_pair = jnp.arange(T * k) // k
+    expert_in = jnp.zeros((E * C, d), x.dtype).at[
+        jnp.maximum(slot, 0)].set(
+        jnp.where((slot >= 0)[:, None], x[token_of_pair], 0.0))
+    expert_in = expert_in.reshape(E, C, d)
+
+    act = {"swiglu": jax.nn.silu, "gelu": jax.nn.gelu,
+           "relu": jax.nn.relu}[cfg.mlp_activation]
+    if cfg.mlp_activation == "swiglu":
+        h = act(jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+    else:
+        h = act(jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"]))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    flat_out = expert_out.reshape(E * C, d)
+
+    # gather back and combine with gates
+    y_pair = jnp.where((slot >= 0)[:, None],
+                       flat_out[jnp.maximum(slot, 0)], 0.0)         # (T*k,d)
+    gates_pair = gate_vals.reshape(-1)
+    out = jnp.sum((y_pair * gates_pair[:, None]).reshape(T, k, d), axis=1)
+
+    if "shared" in params:
+        out = out + mlp(params["shared"], x, cfg.mlp_activation)
+
+    frac_tokens = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E), axis=0)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = {"moe_lb_loss": E * jnp.sum(frac_tokens * mean_probs),
+           "moe_z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+           "moe_drop_frac": 1.0 - jnp.mean(keep)}
+    return out.reshape(orig_shape), aux

@@ -1,0 +1,150 @@
+"""Expert-parallel MoE under shard_map with explicit all-to-alls.
+
+The GSPMD capacity-einsum path (``moe_apply``) lets the partitioner
+choose the collectives; this module is the manual-choreography
+alternative for large expert counts (EXPERIMENTS.md §Perf backlog,
+realized): tokens are sharded over the "data" axis, experts are sharded
+over the same axis (E_loc = E/D per device), and the dispatch is
+
+    local sort/scatter  →  all_to_all  →  local expert FFN
+                        →  all_to_all  →  local gather/combine
+
+so per-token dispatch work is O(k log k) (vs O(E·C) for the one-hot
+einsum) and the only cross-device traffic is the two all-to-alls of the
+actually-routed activations.
+
+Per-(source-device, expert) capacity C_s bounds the static buffer shapes;
+tokens beyond capacity fall back to the residual (standard dropping).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.layers import mlp
+from repro.models.moe import _capacity
+
+
+def _local_dispatch(x_loc, gate_idx, gate_vals, E: int, C_s: int):
+    """Sort/scatter tokens into per-expert send slots (one device).
+
+    x_loc: (T, d); gate_idx/vals: (T, k). Returns
+    (send (E, C_s, d), slot (T*k,) flat send-slot per pair or -1).
+    """
+    T, k = gate_idx.shape
+    d = x_loc.shape[-1]
+    eid = gate_idx.reshape(-1)
+    order = jnp.argsort(eid, stable=True)
+    eid_sorted = eid[order]
+    counts = jnp.bincount(eid, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * k) - starts[eid_sorted]
+    keep = rank < C_s
+    slot_sorted = jnp.where(keep, eid_sorted * C_s + rank, -1)
+    slot = jnp.zeros((T * k,), jnp.int32).at[order].set(
+        slot_sorted.astype(jnp.int32))
+    token_of_pair = jnp.arange(T * k) // k
+    send = jnp.zeros((E * C_s, d), x_loc.dtype).at[jnp.maximum(slot, 0)].set(
+        jnp.where((slot >= 0)[:, None], x_loc[token_of_pair], 0.0))
+    return send.reshape(E, C_s, d), slot
+
+
+def moe_apply_shard_map(params, cfg: ModelConfig, x, mesh, *,
+                        data_axis: str = "data",
+                        model_axis: str = None,
+                        capacity_factor: float = None
+                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (T, d) GLOBAL tokens (sharded over data_axis by the caller's
+    in_shardings). Expert weights must be sharded over data_axis on dim 0
+    (and, when ``model_axis`` is given, over the per-expert hidden dim f —
+    tensor parallelism inside each expert, combined with a psum).
+    Returns (out (T, d), aux)."""
+    e = cfg.moe
+    cf = capacity_factor or e.capacity_factor
+    E, k = e.num_experts, e.top_k
+    D = mesh.shape[data_axis]
+    assert E % D == 0, (E, D)
+    E_loc = E // D
+    T = x.shape[0]
+    T_loc = T // D
+    C_s = _capacity(T_loc, k, E, cf)
+
+    def local_fn(x_loc, router, w_gate, w_up, w_down, shared):
+        # x_loc: (T_loc, d); w_*: (E_loc, ...) local expert shards.
+        logits = x_loc.astype(jnp.float32) @ router                 # (T,E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        send, slot = _local_dispatch(x_loc, gate_idx, gate_vals, E, C_s)
+        # (E, C_s, d) -> (D, E_loc, C_s, d): split experts by owner device
+        send = send.reshape(D, E_loc, C_s, send.shape[-1])
+        # all_to_all over data: dim0 (dest device) <-> source device
+        recv = jax.lax.all_to_all(send, data_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        # recv: (D, E_loc, C_s, d) — rows from every source device for MY
+        # local experts. Fold sources into the capacity dim:
+        exp_in = recv.transpose(1, 0, 2, 3).reshape(E_loc, D * C_s, -1)
+
+        act = {"swiglu": jax.nn.silu, "gelu": jax.nn.gelu,
+               "relu": jax.nn.relu}[cfg.mlp_activation]
+        if cfg.mlp_activation == "swiglu":
+            h = act(jnp.einsum("ecd,edf->ecf", exp_in, w_gate)) \
+                * jnp.einsum("ecd,edf->ecf", exp_in, w_up)
+        else:
+            h = act(jnp.einsum("ecd,edf->ecf", exp_in, w_gate))
+        exp_out = jnp.einsum("ecf,efd->ecd", h, w_down)
+        if model_axis is not None:
+            # per-expert tensor parallelism: f is sharded — combine partials
+            exp_out = jax.lax.psum(exp_out, model_axis)
+
+        # return path: symmetric all_to_all back to the source devices
+        back = exp_out.reshape(E_loc, D, C_s, -1).transpose(1, 0, 2, 3)
+        mine = jax.lax.all_to_all(back, data_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        flat_out = mine.reshape(E * C_s, -1)                        # my sends
+
+        y_pair = jnp.where((slot >= 0)[:, None],
+                           flat_out[jnp.maximum(slot, 0)], 0.0)
+        gates_pair = gate_vals.reshape(-1)
+        out = jnp.sum((y_pair * gates_pair[:, None]).reshape(T_loc, k, -1),
+                      axis=1).astype(x_loc.dtype)
+        if shared is not None:
+            out = out + mlp(shared, x_loc, cfg.mlp_activation)
+
+        frac = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E), axis=0)
+        frac = jax.lax.pmean(frac, data_axis)
+        meanp = jax.lax.pmean(jnp.mean(probs, axis=0), data_axis)
+        drop = jax.lax.pmean(jnp.mean((slot < 0).astype(jnp.float32)),
+                             data_axis)
+        aux = {"moe_lb_loss": E * jnp.sum(frac * meanp),
+               "moe_z_loss": jax.lax.pmean(
+                   jnp.mean(jax.nn.logsumexp(logits, -1) ** 2), data_axis),
+               "moe_drop_frac": drop}
+        return out, aux
+
+    shared = params.get("shared")
+    w_up = params.get("w_up")
+    m = model_axis
+    w_in_spec = P(data_axis, None, m)          # f sharded over model if set
+    w_out_spec = P(data_axis, m, None)
+    in_specs = (P(data_axis, None), P(), w_in_spec,
+                (w_in_spec if w_up is not None else P()),
+                w_out_spec,
+                jax.tree.map(lambda _: P(), shared) if shared is not None
+                else P())
+    out_specs = (P(data_axis, None),
+                 {"moe_lb_loss": P(), "moe_z_loss": P(),
+                  "moe_drop_frac": P()})
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return fn(x, params["router"]["kernel"], params["w_gate"],
+              w_up if w_up is not None else jnp.zeros(()),
+              params["w_down"], shared)

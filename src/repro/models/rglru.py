@@ -1,0 +1,99 @@
+"""RecurrentGemma / Griffin recurrent block (RG-LRU, arXiv:2402.19427).
+
+TPU adaptation: the linear recurrence h_t = a_t h_{t-1} + b_t is evaluated
+with `lax.associative_scan` (log-depth on the VPU) for train/prefill and a
+single fused elementwise step for decode. Gates and projections are dense
+matmuls outside the scan so the MXU work is batched.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense, dense_init
+
+_C = 8.0  # RG-LRU decay sharpness constant from the paper
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    w = _width(cfg)
+    W = cfg.rglru.conv_width
+    d = cfg.d_model
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(k1, d, w, dtype),
+        "w_gate": dense_init(k2, d, w, dtype),
+        "conv_w": (jax.random.normal(k3, (W, w)) * W ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype=dtype),
+        "w_a": dense_init(k4, w, w, dtype),        # recurrence gate
+        "w_i": dense_init(k5, w, w, dtype),        # input gate
+        "lam": (jax.random.uniform(jax.random.fold_in(k4, 1), (w,),
+                                   minval=0.9, maxval=0.999)),
+        "out_proj": dense_init(k6, w, d, dtype),
+    }
+
+
+def _gates(params, x):
+    """x: (..., w) conv output. Returns (log_a, gated_input) in fp32."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(params["w_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(params["w_i"], x).astype(jnp.float32))
+    # a = exp(-c * softplus(Λ) * r)
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * (i * x32)
+    return log_a, b
+
+
+def rglru_prefill(params, cfg: ModelConfig, u) -> Tuple[jax.Array, Dict]:
+    """u: (B, L, d). Returns (out (B,L,d), state)."""
+    w = _width(cfg)
+    W = cfg.rglru.conv_width
+    B, L, _ = u.shape
+    x_in = dense(params["w_x"], u)
+    gate = jax.nn.gelu(dense(params["w_gate"], u))
+    pad = jnp.zeros((B, W - 1, w), x_in.dtype)
+    x_pad = jnp.concatenate([pad, x_in], axis=1)
+    conv = sum(x_pad[:, i:i + L] * params["conv_w"][i] for i in range(W))
+    conv = conv + params["conv_b"]
+
+    log_a, b = _gates(params, conv)                    # (B,L,w) fp32
+
+    def combine(left, right):
+        la_l, h_l = left
+        la_r, h_r = right
+        return la_l + la_r, jnp.exp(la_r) * h_l + h_r
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    y = (h.astype(u.dtype) * gate)
+    out = dense(params["out_proj"], y)
+    state = {"h": h[:, -1], "conv": x_pad[:, L:L + W - 1]}
+    return out, state
+
+
+def make_rglru_state(cfg: ModelConfig, batch: int, dtype):
+    w = _width(cfg)
+    W = cfg.rglru.conv_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, W - 1, w), dtype)}
+
+
+def rglru_decode(params, cfg: ModelConfig, u, state) -> Tuple[jax.Array, Dict]:
+    """u: (B, 1, d). One recurrent step."""
+    W = cfg.rglru.conv_width
+    x_in = dense(params["w_x"], u)                     # (B,1,w)
+    gate = jax.nn.gelu(dense(params["w_gate"], u))
+    window = jnp.concatenate([state["conv"], x_in], axis=1)   # (B,W,w)
+    conv = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    log_a, b = _gates(params, conv)                    # (B,w)
+    h = jnp.exp(log_a) * state["h"] + b
+    y = (h[:, None].astype(u.dtype) * gate)
+    out = dense(params["out_proj"], y)
+    return out, {"h": h, "conv": window[:, 1:]}

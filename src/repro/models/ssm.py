@@ -1,0 +1,181 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+TPU adaptation notes: the SSD *chunked* form is used for train/prefill —
+within-chunk terms are dense matmuls (MXU-friendly, chunk_size aligned to
+the 128 lane width when possible) and the inter-chunk recurrence is a
+`lax.scan` over chunk states (nc = L / Q steps, O(L/Q) sequential depth).
+Decode is the O(1) recurrent update on a (B, H, P, N) state — no KV cache,
+which is what makes `long_500k` natural for this family.
+
+Single B/C group (G=1) as in the 780m reference config.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense, dense_init
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    heads = inner // s.head_dim
+    return inner, heads, s.head_dim, s.state_dim, s.conv_width
+
+
+def ssm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    inner, H, P, N, W = _dims(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_ch = inner + 2 * N
+    return {
+        "in_proj": dense_init(k1, d, 2 * inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(k2, (W, conv_ch)) * W ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "norm": jnp.ones((inner,), dtype=dtype),
+        "out_proj": dense_init(k3, inner, d, dtype),
+    }
+
+
+def _segsum(a):
+    """a: (..., Q). Returns (..., Q, Q) with L[i,j] = sum_{k=j+1..i} a_k
+    for i >= j, -inf above the diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _split_proj(params, cfg: ModelConfig, u):
+    inner, H, P, N, W = _dims(cfg)
+    zxbcdt = dense(params["in_proj"], u)
+    z, xbc, dt = jnp.split(zxbcdt, [inner, 2 * inner + 2 * N], axis=-1)
+    return z, xbc, dt  # xbc holds [x, B, C] pre-conv
+
+
+def _gated_norm(params, y, z, eps):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["norm"].astype(jnp.float32)).astype(z.dtype)
+
+
+def ssm_prefill(params, cfg: ModelConfig, u) -> Tuple[jax.Array, Dict]:
+    """u: (B, L, d). Returns (y (B,L,d), state for decode seeding)."""
+    inner, H, P, N, W = _dims(cfg)
+    Bsz, Lreal, _ = u.shape
+    Q = min(cfg.ssm.chunk_size, Lreal)
+    # pad to a chunk multiple; padded steps get dt=0 => identity transition,
+    # zero contribution, so outputs and the final state are exact.
+    Lpad = (-Lreal) % Q
+    L = Lreal + Lpad
+
+    z, xbc, dt = _split_proj(params, cfg, u)
+    conv_tail = xbc[:, max(0, Lreal - (W - 1)):, :]     # real inputs for decode seed
+    if Lreal < W - 1:  # short prompt: left-pad the conv window with zeros
+        conv_tail = jnp.concatenate(
+            [jnp.zeros((Bsz, W - 1 - Lreal, xbc.shape[-1]), xbc.dtype),
+             conv_tail], axis=1)
+    if Lpad:
+        zpad = jnp.zeros((Bsz, Lpad, xbc.shape[-1]), xbc.dtype)
+        xbc = jnp.concatenate([xbc, zpad], axis=1)
+        dt = jnp.concatenate([dt, jnp.zeros((Bsz, Lpad, H), dt.dtype)], axis=1)
+    nc = L // Q
+    # causal depthwise conv over [x, B, C]
+    pad = jnp.zeros((Bsz, W - 1, xbc.shape[-1]), xbc.dtype)
+    xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    conv = sum(xbc_pad[:, i:i + L] * params["conv_w"][i] for i in range(W))
+    conv = jax.nn.silu(conv + params["conv_b"])
+    x, B_in, C_in = jnp.split(conv, [inner, inner + N], axis=-1)
+
+    x = x.reshape(Bsz, L, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,L,H)
+    if Lpad:
+        valid = (jnp.arange(L) < Lreal)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    A = -jnp.exp(params["A_log"])                                      # (H,)
+    dA = dt * A                                                        # (B,L,H)
+    xbar = x.astype(jnp.float32) * dt[..., None]                       # (B,L,H,P)
+    Bc = B_in.astype(jnp.float32).reshape(Bsz, L, N)
+    Cc = C_in.astype(jnp.float32).reshape(Bsz, L, N)
+
+    # chunk
+    def chunked(t, shape):
+        return t.reshape((Bsz, nc, Q) + shape)
+    dA_c = chunked(dA, (H,)).transpose(0, 3, 1, 2)                     # (B,H,nc,Q)
+    x_c = chunked(xbar, (H, P))                                        # (B,nc,Q,H,P)
+    B_c = chunked(Bc, (N,))                                            # (B,nc,Q,N)
+    C_c = chunked(Cc, (N,))
+
+    dA_cumsum = jnp.cumsum(dA_c, axis=-1)                              # (B,H,nc,Q)
+    Lmat = jnp.exp(_segsum(dA_c))                                      # (B,H,nc,Q,Q)
+    # within-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        C_c, B_c, Lmat, x_c)
+    # per-chunk end states
+    decay_states = jnp.exp(dA_cumsum[..., -1:] - dA_cumsum)            # (B,H,nc,Q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", B_c, decay_states, x_c)
+    chunk_decay = jnp.exp(dA_cumsum[..., -1])                          # (B,H,nc)
+
+    # inter-chunk recurrence: scan over chunks
+    def body(prev, inp):
+        st, dec = inp                                                  # (B,H,P,N),(B,H)
+        new = prev * dec[..., None, None] + st
+        return new, prev                                               # emit state *entering* the chunk
+
+    init = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    final_state, states_in = jax.lax.scan(
+        body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,P,N)
+
+    state_decay_out = jnp.exp(dA_cumsum)                               # (B,H,nc,Q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", C_c, states_in, state_decay_out)
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    y = y + x.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(Bsz, L, inner)[:, :Lreal].astype(u.dtype)
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    out = dense(params["out_proj"], y)
+    state = {"ssd": final_state, "conv": conv_tail}
+    return out, state
+
+
+def make_ssm_state(cfg: ModelConfig, batch: int, dtype):
+    inner, H, P, N, W = _dims(cfg)
+    return {
+        "ssd": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, inner + 2 * N), dtype),
+    }
+
+
+def ssm_decode(params, cfg: ModelConfig, u, state) -> Tuple[jax.Array, Dict]:
+    """u: (B, 1, d). O(1) recurrent step."""
+    inner, H, P, N, W = _dims(cfg)
+    Bsz = u.shape[0]
+    z, xbc, dt = _split_proj(params, cfg, u)                           # (B,1,·)
+    window = jnp.concatenate([state["conv"], xbc], axis=1)             # (B,W,ch)
+    conv = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    conv = jax.nn.silu(conv)                                           # (B,ch)
+    x, B_in, C_in = jnp.split(conv, [inner, inner + N], axis=-1)
+    x = x.reshape(Bsz, H, P).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt1 * A)                                              # (B,H)
+    Bc = B_in.astype(jnp.float32)                                      # (B,N)
+    Cc = C_in.astype(jnp.float32)
+    ssd = state["ssd"] * dA[..., None, None] + \
+        jnp.einsum("bhp,bn->bhpn", x * dt1[..., None], Bc)
+    y = jnp.einsum("bhpn,bn->bhp", ssd, Cc) + x * params["D"][None, :, None]
+    y = y.reshape(Bsz, 1, inner).astype(u.dtype)
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    out = dense(params["out_proj"], y)
+    return out, {"ssd": ssd, "conv": window[:, 1:, :]}

@@ -1,0 +1,341 @@
+"""Decoder-only multimodal LM assembled from heterogeneous blocks.
+
+Layers are executed as a `lax.scan` over *super-blocks* (one tile of the
+config's ``block_pattern``), with per-pattern-position stacked parameters —
+HLO size and compile time are O(1) in depth, which is what makes the
+88-layer granite-34b × 80 dry-run compiles tractable and is the production
+idiom (MaxText et al.). Layers left over when ``num_layers`` is not a
+multiple of the pattern length run as unstacked "tail" layers.
+
+Multimodal inputs: ``evidence`` (precomputed frame/patch embeddings from the
+stubbed modality frontend) is projected and *prepended* to the token
+embeddings; positions are shared across the concatenated sequence.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ATTN, LOCAL_ATTN, RGLRU, SSM, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (dense, dense_init, embed, embed_init, mlp,
+                                 mlp_init, rmsnorm, rmsnorm_init)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def _has_mlp(cfg: ModelConfig, kind: str) -> bool:
+    return kind in (ATTN, LOCAL_ATTN, RGLRU) and (cfg.d_ff > 0 or cfg.moe is not None)
+
+
+def block_init(key, cfg: ModelConfig, kind: str, dtype) -> Params:
+    keys = jax.random.split(key, 4)
+    p: Params = {"ln1": rmsnorm_init(cfg.d_model, dtype)}
+    if kind in (ATTN, LOCAL_ATTN):
+        p["attn"] = attn_lib.attn_init(keys[0], cfg, dtype)
+    elif kind == SSM:
+        p["ssm"] = ssm_lib.ssm_init(keys[0], cfg, dtype)
+    elif kind == RGLRU:
+        p["rglru"] = rglru_lib.rglru_init(keys[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if _has_mlp(cfg, kind):
+        p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        if cfg.moe is not None:
+            p["moe"] = moe_lib.moe_init(keys[1], cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(keys[1], cfg.d_model, cfg.d_ff,
+                                cfg.mlp_activation, dtype)
+    return p
+
+
+def _mlp_part(params: Params, cfg: ModelConfig, x):
+    aux: Dict[str, jax.Array] = {}
+    h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if "moe" in params:
+        y, aux = moe_lib.moe_apply(params["moe"], cfg, h)
+    else:
+        y = mlp(params["mlp"], h, cfg.mlp_activation)
+    return x + y, aux
+
+
+def _window_for(cfg: ModelConfig, kind: str) -> int:
+    return cfg.attn_window if kind == ATTN else cfg.local_window
+
+
+def block_prefill(params: Params, cfg: ModelConfig, kind: str, x, positions,
+                  impl: str) -> Tuple[jax.Array, Any, Dict]:
+    aux: Dict[str, jax.Array] = {}
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if kind in (ATTN, LOCAL_ATTN):
+        y, (k, v) = attn_lib.attn_prefill(params["attn"], cfg, h, positions,
+                                          window=_window_for(cfg, kind),
+                                          impl=impl)
+        x = x + y
+        if _has_mlp(cfg, kind):
+            x, aux = _mlp_part(params, cfg, x)
+        entry = {"k": k, "v": v}
+    elif kind == SSM:
+        y, entry = ssm_lib.ssm_prefill(params["ssm"], cfg, h)
+        x = x + y
+    else:  # RGLRU
+        y, entry = rglru_lib.rglru_prefill(params["rglru"], cfg, h)
+        x = x + y
+        if _has_mlp(cfg, kind):
+            x, aux = _mlp_part(params, cfg, x)
+    return x, entry, aux
+
+
+def block_decode(params: Params, cfg: ModelConfig, kind: str, x, cache_entry,
+                 pos, impl: str) -> Tuple[jax.Array, Any]:
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if kind in (ATTN, LOCAL_ATTN):
+        y, entry = attn_lib.attn_decode(params["attn"], cfg, h, cache_entry,
+                                        pos, window=_window_for(cfg, kind),
+                                        impl=impl)
+        x = x + y
+        if _has_mlp(cfg, kind):
+            x, _ = _mlp_part(params, cfg, x)
+    elif kind == SSM:
+        y, entry = ssm_lib.ssm_decode(params["ssm"], cfg, h, cache_entry)
+        x = x + y
+    else:
+        y, entry = rglru_lib.rglru_decode(params["rglru"], cfg, h, cache_entry)
+        x = x + y
+        if _has_mlp(cfg, kind):
+            x, _ = _mlp_part(params, cfg, x)
+    return x, entry
+
+
+def block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int, dtype):
+    if kind in (ATTN, LOCAL_ATTN):
+        n = cache_len if kind == ATTN and cfg.attn_window == 0 else \
+            min(cache_len, _window_for(cfg, kind))
+        return attn_lib.make_kv_cache(cfg, batch, n, dtype)
+    if kind == SSM:
+        return ssm_lib.make_ssm_state(cfg, batch, dtype)
+    return rglru_lib.make_rglru_state(cfg, batch, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def _pattern_split(cfg: ModelConfig):
+    pat = cfg.block_pattern
+    n_super = cfg.num_layers // len(pat)
+    tail = cfg.layer_kinds[n_super * len(pat):]
+    return pat, n_super, tail
+
+
+def transformer_init(key, cfg: ModelConfig, dtype) -> Params:
+    pat, n_super, tail = _pattern_split(cfg)
+    keys = jax.random.split(key, 8)
+    params: Params = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)}
+
+    def stacked_init(kind: str, base_key):
+        ks = jax.random.split(base_key, n_super)
+        per_layer = [block_init(k, cfg, kind, dtype) for k in ks]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+    params["super"] = tuple(
+        stacked_init(kind, jax.random.fold_in(keys[1], i))
+        for i, kind in enumerate(pat))
+    params["tail"] = tuple(
+        block_init(jax.random.fold_in(keys[2], i), cfg, kind, dtype)
+        for i, kind in enumerate(tail))
+    params["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[3], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.num_evidence_tokens and cfg.evidence_dim != cfg.d_model:
+        params["evidence_proj"] = dense_init(keys[4], cfg.evidence_dim,
+                                             cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: Params, cfg: ModelConfig, tokens, evidence=None):
+    x = embed(params["embed"], tokens)
+    if evidence is not None:
+        ev = evidence.astype(x.dtype)
+        if "evidence_proj" in params:
+            ev = dense(params["evidence_proj"], evidence).astype(x.dtype)
+        x = jnp.concatenate([ev, x], axis=1)
+    return x
+
+
+def _logits(params: Params, cfg: ModelConfig, h):
+    from repro.distributed.context import constrain_logits
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].T
+    else:
+        logits = dense(params["unembed"], h)
+    return constrain_logits(logits), h
+
+
+def _sum_aux(aux_list):
+    out: Dict[str, jax.Array] = {}
+    for aux in aux_list:
+        for k, v in aux.items():
+            out[k] = out.get(k, 0.0) + jnp.mean(v)
+    return out
+
+
+def transformer_forward(params: Params, cfg: ModelConfig, tokens,
+                        evidence=None, *, impl: str = "xla",
+                        remat: bool = False, unroll: bool = False
+                        ) -> Tuple[jax.Array, jax.Array, Dict]:
+    """Full-sequence forward (training / scoring). Returns
+    (logits (B, L, V), hidden (B, L, d), aux).
+
+    ``unroll=True`` replaces the layer scan with a python loop — used by
+    the dry-run cost model (XLA's cost_analysis counts a scan body once,
+    so per-layer costs are measured on shallow unrolled variants and
+    extrapolated; see launch/dryrun.py)."""
+    pat, n_super, tail = _pattern_split(cfg)
+    x = embed_inputs(params, cfg, tokens, evidence)
+    B, L, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    def superblock(x, layer_params):
+        aux_acc = []
+        for p, kind in zip(layer_params, pat):
+            x, _, aux = block_prefill(p, cfg, kind, x, positions, impl)
+            aux_acc.append(aux)
+        return x, _sum_aux(aux_acc)
+
+    body = jax.checkpoint(superblock) if remat else superblock
+
+    if unroll:
+        aux_list = []
+        for i in range(n_super):
+            lp = jax.tree.map(lambda a: a[i], params["super"])
+            x, aux = body(x, lp)
+            aux_list.append(aux)
+        auxs = {k: jnp.stack([a[k] for a in aux_list])
+                for k in (aux_list[0] if aux_list else {})}
+    else:
+        x, auxs = jax.lax.scan(lambda c, lp: body(c, lp), x, params["super"])
+    # auxs values are stacked per-super-block scalars -> mean over depth.
+    aux_out = {k: jnp.mean(v) for k, v in auxs.items()}
+    for p, kind in zip(params["tail"], tail):
+        x, _, aux = block_prefill(p, cfg, kind, x, positions, impl)
+        for k, v in aux.items():
+            aux_out[k] = aux_out.get(k, 0.0) + jnp.mean(v)
+    logits, hidden = _logits(params, cfg, x)
+    return logits, hidden, aux_out
+
+
+def make_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    pat, n_super, tail = _pattern_split(cfg)
+
+    def stack_entries(kind):
+        e = block_cache(cfg, kind, batch, cache_len, dtype)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_super,) + x.shape), e)
+
+    return {
+        "super": tuple(stack_entries(k) for k in pat),
+        "tail": tuple(block_cache(cfg, k, batch, cache_len, dtype) for k in tail),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def transformer_prefill(params: Params, cfg: ModelConfig, tokens, cache,
+                        evidence=None, *, impl: str = "xla",
+                        unroll: bool = False):
+    """Prefill: run the full prompt, seed the cache.
+
+    Assumes every row of the batch has the same prompt length L (the
+    serving engine prefills per request group). Returns (logits_last (B,V),
+    hidden_last (B,d), cache).
+    """
+    pat, n_super, tail = _pattern_split(cfg)
+    x = embed_inputs(params, cfg, tokens, evidence)
+    B, L, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+
+    def scan_body(x, inp):
+        layer_params, cache_entries = inp
+        new_entries = []
+        for p, kind, ce in zip(layer_params, pat, cache_entries):
+            x, entry, _ = block_prefill(p, cfg, kind, x, positions, impl)
+            new_entries.append(_seed_entry(cfg, kind, ce, entry))
+        return x, tuple(new_entries)
+
+    if unroll:
+        outs = []
+        for i in range(n_super):
+            inp_i = jax.tree.map(lambda a: a[i], (params["super"], cache["super"]))
+            x, entry = scan_body(x, inp_i)
+            outs.append(entry)
+        new_super = jax.tree.map(lambda *xs: jnp.stack(xs), *outs) if outs \
+            else cache["super"]
+    else:
+        x, new_super = jax.lax.scan(scan_body, x,
+                                    (params["super"], cache["super"]))
+    new_tail = []
+    for p, kind, ce in zip(params["tail"], tail, cache["tail"]):
+        x, entry, _ = block_prefill(p, cfg, kind, x, positions, impl)
+        new_tail.append(_seed_entry(cfg, kind, ce, entry))
+    logits, hidden = _logits(params, cfg, x[:, -1:])
+    new_cache = {"super": new_super, "tail": tuple(new_tail),
+                 "pos": jnp.full((B,), L, jnp.int32)}
+    return logits[:, 0], hidden[:, 0], new_cache
+
+
+def _seed_entry(cfg: ModelConfig, kind: str, cache_entry, prefill_entry):
+    if kind in (ATTN, LOCAL_ATTN):
+        return attn_lib.prefill_into_cache(cache_entry, prefill_entry["k"],
+                                           prefill_entry["v"])
+    return jax.tree.map(lambda a, b: b.astype(a.dtype), cache_entry, prefill_entry)
+
+
+def transformer_decode(params: Params, cfg: ModelConfig, token, cache, *,
+                       impl: str = "xla", unroll: bool = False):
+    """One decode step. token: (B,) or (B,1) int32. Returns
+    (logits (B,V), hidden (B,d), new_cache)."""
+    pat, n_super, tail = _pattern_split(cfg)
+    if token.ndim == 1:
+        token = token[:, None]
+    pos = cache["pos"]
+    x = embed(params["embed"], token)                  # (B,1,d)
+
+    def scan_body(x, inp):
+        layer_params, entries = inp
+        new_entries = []
+        for p, kind, ce in zip(layer_params, pat, entries):
+            x, e = block_decode(p, cfg, kind, x, ce, pos, impl)
+            new_entries.append(e)
+        return x, tuple(new_entries)
+
+    if unroll:
+        outs = []
+        for i in range(n_super):
+            inp_i = jax.tree.map(lambda a: a[i], (params["super"], cache["super"]))
+            x, entry = scan_body(x, inp_i)
+            outs.append(entry)
+        new_super = jax.tree.map(lambda *xs: jnp.stack(xs), *outs) if outs \
+            else cache["super"]
+    else:
+        x, new_super = jax.lax.scan(scan_body, x,
+                                    (params["super"], cache["super"]))
+    new_tail = []
+    for p, kind, ce in zip(params["tail"], tail, cache["tail"]):
+        x, e = block_decode(p, cfg, kind, x, ce, pos, impl)
+        new_tail.append(e)
+    logits, hidden = _logits(params, cfg, x)
+    new_cache = {"super": new_super, "tail": tuple(new_tail), "pos": pos + 1}
+    return logits[:, 0], hidden[:, 0], new_cache

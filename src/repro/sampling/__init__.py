@@ -1,0 +1,5 @@
+from repro.sampling.samplers import (  # noqa: F401
+    apply_repetition_penalty,
+    process_logits,
+    sample_token,
+)

@@ -1,0 +1,94 @@
+"""Token-level samplers and logit processors.
+
+Matches the paper's decoding setup (§3.2): temperature, top-p, top-k,
+min-p, repetition penalty. All processors are pure (B, V) -> (B, V)
+functions that jit and compose; ``sample_token`` is the single entry point
+used by the serving engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SamplingConfig
+
+NEG_INF = -1e30
+
+
+def apply_temperature(logits, temperature: float):
+    if temperature <= 0.0:
+        return logits  # greedy handled by caller
+    return logits / temperature
+
+
+def apply_top_k(logits, k: int):
+    if k <= 0:
+        return logits
+    kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
+    return jnp.where(logits < kth, NEG_INF, logits)
+
+
+def apply_top_p(logits, p: float):
+    if p >= 1.0 or p <= 0.0:
+        return logits
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep tokens until cumulative prob exceeds p (always keep the top-1)
+    cutoff_mask = cum - probs > p
+    cutoff_logit = jnp.min(
+        jnp.where(cutoff_mask, jnp.inf, sorted_logits), axis=-1, keepdims=True)
+    return jnp.where(logits < cutoff_logit, NEG_INF, logits)
+
+
+def apply_min_p(logits, min_p: float):
+    if min_p <= 0.0:
+        return logits
+    probs = jax.nn.softmax(logits, axis=-1)
+    top = jnp.max(probs, axis=-1, keepdims=True)
+    return jnp.where(probs < min_p * top, NEG_INF, logits)
+
+
+def apply_repetition_penalty(logits, token_counts, penalty: float):
+    """HF-style: seen tokens' positive logits divided by `penalty`,
+    negative multiplied. token_counts: (B, V) counts of emitted tokens."""
+    if penalty == 1.0:
+        return logits
+    seen = token_counts > 0
+    return jnp.where(seen,
+                     jnp.where(logits > 0, logits / penalty, logits * penalty),
+                     logits)
+
+
+def process_logits(logits, cfg: SamplingConfig, token_counts=None, bias=None):
+    """Compose processors in the standard order. ``bias`` is the CAMD
+    Eq. 16 mixture guidance (per-row (B, V) additive logits)."""
+    if token_counts is not None:
+        logits = apply_repetition_penalty(logits, token_counts,
+                                          cfg.repetition_penalty)
+    if bias is not None:
+        logits = logits + bias
+    logits = apply_temperature(logits, cfg.temperature)
+    logits = apply_top_k(logits, cfg.top_k)
+    logits = apply_top_p(logits, cfg.top_p)
+    logits = apply_min_p(logits, cfg.min_p)
+    return logits
+
+
+def sample_token(key, logits, cfg: SamplingConfig, token_counts=None,
+                 bias=None, greedy=None):
+    """Returns (token (B,), logprob (B,)) — logprob of the *sampled* token
+    under the processed distribution (used for S_gen, Eq. 7).
+
+    ``greedy``: optional (B,) bool — rows decoded greedily (temperature 0).
+    """
+    proc = process_logits(logits, cfg, token_counts, bias)
+    logp = jax.nn.log_softmax(proc, axis=-1)
+    sampled = jax.random.categorical(key, proc, axis=-1)
+    arg = jnp.argmax(logits, axis=-1)
+    if greedy is None:
+        tok = sampled if cfg.temperature > 0 else arg
+    else:
+        tok = jnp.where(greedy, arg, sampled)
+    lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+    return tok.astype(jnp.int32), lp

@@ -1,0 +1,1 @@
+from repro.serving.engine import EngineState, Request, Result, ServeEngine  # noqa: F401

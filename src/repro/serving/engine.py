@@ -1,0 +1,507 @@
+"""Slot-scheduled batched serving engine with CAMD adaptive decoding.
+
+Execution model (DESIGN.md §3): a fixed-size decode batch of ``slots``.
+Each slot holds one *candidate* generation of some request. CAMD's
+adaptive allocation — more samples for hard requests, fewer for easy —
+falls out of slot scheduling: when a request reaches coverage its slots
+are freed and refilled from the queue, so the batch never decodes padding.
+
+The per-token hot path is ONE jit'd ``step``: decode -> sample ->
+incremental CAMD aggregates (S_gen, S_coh, S_align term-1, pooled
+embedding) with O(B·d) state — no (B, L, d) trajectory buffers. The
+round-level math (clustering, coverage, Dirichlet, mixture bias) runs in
+``repro.core.controller`` when a request's round completes.
+
+Modes: "camd" (adaptive), "best_of_n", "self_consistency", "greedy" —
+the paper's baselines share the engine so efficiency comparisons are
+apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CAMDConfig, SamplingConfig
+from repro.core import controller as ctrl
+from repro.models.model import Model
+from repro.sampling.samplers import sample_token
+
+
+# ---------------------------------------------------------------------------
+# Requests / results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                      # (L,) int32
+    evidence: Optional[np.ndarray] = None   # (Ne, De) frontend embeddings
+    max_new_tokens: int = 0                 # 0 => engine default
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray                      # best candidate's generation
+    n_candidates: int
+    tokens_spent: int
+    rounds: int
+    p_star: float
+    best_score: float
+    stopped_early: bool
+    candidates: List[Dict[str, Any]]        # per-candidate records
+
+
+# ---------------------------------------------------------------------------
+# Device-side engine state
+# ---------------------------------------------------------------------------
+
+class EngineState(NamedTuple):
+    cache: Any
+    last_token: jax.Array      # (B,)
+    token_counts: jax.Array    # (B, V)
+    sum_lp: jax.Array          # (B,)
+    n_tok: jax.Array           # (B,) int32
+    prev_h: jax.Array          # (B, d)
+    sum_coh: jax.Array         # (B,)
+    sum_emb: jax.Array         # (B, d)
+    align_sum: jax.Array       # (B,)
+    active: jax.Array          # (B,) bool
+    out_buf: jax.Array         # (B, max_new)
+    bias: jax.Array            # (B, V) CAMD mixture guidance
+    greedy: jax.Array          # (B,) bool
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, slots: int = 8,
+                 cache_len: int = 512,
+                 sampling: SamplingConfig = SamplingConfig(),
+                 camd: CAMDConfig = CAMDConfig(),
+                 mode: str = "camd",
+                 n_candidates: int = 8,
+                 eos_id: int = 1,
+                 max_new_tokens: int = 64,
+                 impl: str = "xla",
+                 seed: int = 0):
+        assert mode in ("camd", "best_of_n", "self_consistency", "greedy")
+        self.model, self.params = model, params
+        self.cfg = model.cfg
+        self.B = slots
+        self.V = self.cfg.vocab_size
+        self.d = self.cfg.d_model
+        self.cache_len = cache_len
+        self.sampling = sampling
+        self.camd = camd
+        self.mode = mode
+        self.n_candidates = 1 if mode == "greedy" else n_candidates
+        self.eos_id = eos_id
+        self.max_new = max_new_tokens
+        self.impl = impl
+        self.key = jax.random.PRNGKey(seed)
+        self.has_evidence = bool(self.cfg.num_evidence_tokens)
+
+        self._queue: List[Request] = []
+        self._slot_req = np.full(slots, -1, np.int64)   # uid per slot
+        self._slot_cand = np.full(slots, -1, np.int64)  # candidate uid per slot
+        self._reqs: Dict[int, Dict[str, Any]] = {}      # uid -> bookkeeping
+        self._next_cand = 0
+        self._dtype = model.param_dtype
+
+        self.state = self._blank_state()
+        self._step_fn = self._build_step()
+        self._prefill_fn = self._build_prefill()
+        self._round_fn = jax.jit(partial(ctrl.round_update, self.camd))
+        # telemetry
+        self.total_steps = 0
+        self.total_tokens = 0
+
+    # ------------------------------------------------------------------
+    def _blank_state(self) -> EngineState:
+        B, V, d = self.B, self.V, self.d
+        cache = self.model.make_cache(B, self.cache_len, self._dtype)
+        return EngineState(
+            cache=cache,
+            last_token=jnp.zeros((B,), jnp.int32),
+            token_counts=jnp.zeros((B, V), jnp.float32),
+            sum_lp=jnp.zeros((B,), jnp.float32),
+            n_tok=jnp.zeros((B,), jnp.int32),
+            prev_h=jnp.zeros((B, d), jnp.float32),
+            sum_coh=jnp.zeros((B,), jnp.float32),
+            sum_emb=jnp.zeros((B, d), jnp.float32),
+            align_sum=jnp.zeros((B,), jnp.float32),
+            active=jnp.zeros((B,), bool),
+            out_buf=jnp.zeros((B, self.max_new), jnp.int32),
+            bias=jnp.zeros((B, V), jnp.float32),
+            greedy=jnp.zeros((B,), bool),
+        )
+
+    # ------------------------------------------------------------------
+    def _build_prefill(self):
+        model = self.model
+
+        @jax.jit
+        def prefill(params, tokens, cache_row, evidence=None):
+            lg, h, cache = model.prefill(params, tokens, cache_row,
+                                         evidence, impl=self.impl)
+            return lg, h, cache
+
+        return prefill
+
+    def _build_step(self):
+        model, sampling, eos, max_new = self.model, self.sampling, self.eos_id, self.max_new
+        has_ev = self.has_evidence
+
+        @jax.jit
+        def step(params, st: EngineState, key, evid_norm):
+            logits, hidden, cache = model.decode_step(params, st.last_token,
+                                                      st.cache, impl=self.impl)
+            tok, lp = sample_token(key, logits.astype(jnp.float32), sampling,
+                                   st.token_counts, st.bias, greedy=st.greedy)
+            act = st.active
+            actf = act.astype(jnp.float32)
+            hidden32 = hidden.astype(jnp.float32)
+
+            # --- incremental CAMD aggregates ------------------------------
+            sum_lp = st.sum_lp + lp * actf
+            hn = hidden32 / (jnp.linalg.norm(hidden32, axis=-1, keepdims=True) + 1e-8)
+            pn = st.prev_h
+            coh = jnp.sum(hn * pn, axis=-1)
+            has_prev = st.n_tok > 0
+            sum_coh = st.sum_coh + coh * actf * has_prev.astype(jnp.float32)
+            sum_emb = st.sum_emb + hidden32 * actf[:, None]
+            if has_ev:
+                emb_t = jnp.take(params["embed"]["table"], tok, axis=0)
+                emb_t = emb_t.astype(jnp.float32)
+                emb_t = emb_t / (jnp.linalg.norm(emb_t, axis=-1, keepdims=True) + 1e-8)
+                a = jnp.mean(jnp.einsum("bnd,bd->bn", evid_norm, emb_t), axis=-1)
+                align_sum = st.align_sum + a * actf
+            else:
+                align_sum = st.align_sum
+
+            counts = st.token_counts + jax.nn.one_hot(tok, st.token_counts.shape[1]) \
+                * actf[:, None]
+            out_buf = jnp.where(
+                (jnp.arange(max_new)[None, :] == st.n_tok[:, None]) & act[:, None],
+                tok[:, None], st.out_buf)
+            n_tok = st.n_tok + act.astype(jnp.int32)
+            done = act & ((tok == eos) | (n_tok >= max_new))
+            new_state = EngineState(
+                cache=cache, last_token=jnp.where(act, tok, st.last_token),
+                token_counts=counts, sum_lp=sum_lp, n_tok=n_tok,
+                prev_h=jnp.where(act[:, None], hn, st.prev_h),
+                sum_coh=sum_coh, sum_emb=sum_emb, align_sum=align_sum,
+                active=act & ~done, out_buf=out_buf, bias=st.bias,
+                greedy=st.greedy)
+            return new_state, done
+
+        return step
+
+    # ------------------------------------------------------------------
+    # host-side scheduling
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def _cache_batch_axis(self, path) -> int:
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey) and p.key in (
+                    "super", "self", "cross_k", "cross_v"):
+                return 1
+        return 0
+
+    def _scatter_cache_rows(self, big, row, slot_ids: List[int]):
+        idx = jnp.asarray(slot_ids)
+
+        def scat(path, b, r):
+            ax = self._cache_batch_axis(path)
+            r_rep = jnp.repeat(r, len(slot_ids), axis=ax)
+            if ax == 0:
+                return b.at[idx].set(r_rep)
+            return b.at[:, idx].set(r_rep)
+
+        return jax.tree_util.tree_map_with_path(scat, big, row)
+
+    def _admit(self, req: Request, slot_ids: List[int], bias_row=None,
+               first_logits=None):
+        """Seed slots with the request's prompt cache and sample the first
+        token of each candidate from the prefill logits."""
+        info = self._reqs[req.uid]
+        st = self.state
+        cache = self._scatter_cache_rows(st.cache, info["cache_row"], slot_ids)
+        idx = jnp.asarray(slot_ids)
+        n = len(slot_ids)
+
+        self.key, *keys = jax.random.split(self.key, n + 1)
+        lg = info["prefill_logits"]                      # (1, V) fp32
+        bias = info.get("bias")
+        first_toks, first_lps = [], []
+        for i in range(n):
+            b = bias if bias is not None else None
+            greedy = jnp.asarray([self.mode == "greedy"])
+            tok, lp = sample_token(keys[i], lg, self.sampling,
+                                   bias=b, greedy=greedy)
+            first_toks.append(int(tok[0]))
+            first_lps.append(float(lp[0]))
+
+        toks = jnp.asarray(first_toks, jnp.int32)
+        lps = jnp.asarray(first_lps, jnp.float32)
+        h0 = info["prefill_hidden"]                      # (1, d) fp32
+        hn0 = h0 / (jnp.linalg.norm(h0, axis=-1, keepdims=True) + 1e-8)
+        V, d = self.V, self.d
+
+        emb_t = jnp.take(self.params["embed"]["table"], toks, axis=0).astype(jnp.float32)
+        if self.has_evidence:
+            emb_n = emb_t / (jnp.linalg.norm(emb_t, axis=-1, keepdims=True) + 1e-8)
+            ev = info["evid_row"]                        # (1, Ne, d) normalized
+            a0 = jnp.mean(jnp.einsum("nd,bd->bn", ev[0], emb_n), axis=-1)
+        else:
+            a0 = jnp.zeros((n,), jnp.float32)
+
+        new = self.state._replace(
+            cache=cache,
+            last_token=st.last_token.at[idx].set(toks),
+            token_counts=st.token_counts.at[idx].set(
+                jax.nn.one_hot(toks, V, dtype=jnp.float32)),
+            sum_lp=st.sum_lp.at[idx].set(lps),
+            n_tok=st.n_tok.at[idx].set(1),
+            prev_h=st.prev_h.at[idx].set(jnp.repeat(hn0, n, axis=0)),
+            sum_coh=st.sum_coh.at[idx].set(0.0),
+            sum_emb=st.sum_emb.at[idx].set(jnp.zeros((n, d))),
+            align_sum=st.align_sum.at[idx].set(a0),
+            active=st.active.at[idx].set(True),
+            out_buf=st.out_buf.at[idx].set(
+                jnp.zeros((n, self.max_new), jnp.int32).at[:, 0].set(toks)),
+            bias=st.bias.at[idx].set(
+                jnp.repeat(bias if bias is not None else jnp.zeros((1, V)), n, axis=0)),
+            greedy=st.greedy.at[idx].set(self.mode == "greedy"),
+        )
+        self.state = new
+        for s in slot_ids:
+            self._slot_req[s] = req.uid
+            self._slot_cand[s] = self._next_cand
+            info["cand_slots"].append((self._next_cand, s))
+            self._next_cand += 1
+
+    def _prefill_request(self, req: Request):
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        cache_row = self.model.make_cache(1, self.cache_len, self._dtype)
+        ev = None
+        if req.evidence is not None:
+            ev = jnp.asarray(req.evidence, self._dtype)[None]
+        lg, h, cache_row = self._prefill_fn(self.params, prompt, cache_row, ev)
+        info = {
+            "req": req,
+            "cache_row": cache_row,
+            "prefill_logits": lg.astype(jnp.float32),
+            "prefill_hidden": h.astype(jnp.float32),
+            "camd": ctrl.init_state(self.camd, self.d, self.V),
+            "bias": None,
+            "round": 0,
+            "cand_slots": [],
+            "records": {},
+            "align_const": 0.0,
+            "done": False,
+        }
+        if self.has_evidence and req.evidence is not None:
+            evp = jnp.asarray(req.evidence, jnp.float32)
+            if "evidence_proj" in self.params:
+                from repro.models.layers import dense
+                evp = dense(jax.tree.map(lambda x: x.astype(jnp.float32),
+                                         self.params["evidence_proj"]), evp)
+            evn = evp / (jnp.linalg.norm(evp, axis=-1, keepdims=True) + 1e-8)
+            info["evid_row"] = evn[None]
+            # Eq. 8 term 2: text-evidence ↔ visual-evidence consistency —
+            # prompt token embeddings vs evidence features, constant per req.
+            temb = jnp.take(self.params["embed"]["table"],
+                            prompt[0], axis=0).astype(jnp.float32)
+            temb = temb / (jnp.linalg.norm(temb, axis=-1, keepdims=True) + 1e-8)
+            sim = temb @ evn.T                               # (L, Ne)
+            info["align_const"] = float(jnp.mean(jnp.max(sim, axis=-1)))
+        else:
+            info["evid_row"] = jnp.zeros((1, 1, self.d), jnp.float32)
+        self._reqs[req.uid] = info
+
+    def _free_slots(self) -> List[int]:
+        return [i for i in range(self.B) if self._slot_req[i] < 0]
+
+    def _per_round(self) -> int:
+        if self.mode == "greedy":
+            return 1
+        if self.mode == "camd":
+            return self.camd.samples_per_round
+        return min(self.n_candidates, self.B)
+
+    def _schedule(self):
+        """Fill free slots: queued requests first, then next rounds."""
+        free = self._free_slots()
+        while free and self._queue:
+            req = self._queue.pop(0)
+            self._prefill_request(req)
+            take = min(self._per_round(), len(free))
+            ids, free = free[:take], free[take:]
+            self._admit(req, ids)
+        # continuing requests wanting another round
+        for uid, info in self._reqs.items():
+            if info["done"] or info.get("pending_round") is not True:
+                continue
+            if not free:
+                break
+            take = min(self._needed(info), len(free))
+            if take <= 0:
+                continue
+            ids, free = free[:take], free[take:]
+            info["pending_round"] = False
+            self._admit(info["req"], ids)
+
+    def _needed(self, info) -> int:
+        if self.mode == "camd":
+            return self.camd.samples_per_round
+        done_cands = len(info["records"])
+        running = sum(1 for _, s in info["cand_slots"]
+                      if self._slot_req[s] == info["req"].uid)
+        return max(0, self.n_candidates - done_cands - running)
+
+    # ------------------------------------------------------------------
+    def _finish_candidate(self, slot: int):
+        uid = int(self._slot_req[slot])
+        cand = int(self._slot_cand[slot])
+        info = self._reqs[uid]
+        st = self.state
+        n = int(st.n_tok[slot])
+        rec = {
+            "uid": cand,
+            "tokens": np.asarray(st.out_buf[slot])[:n],
+            "sum_lp": float(st.sum_lp[slot]),
+            "n": n,
+            "sum_coh": float(st.sum_coh[slot]),
+            "emb": np.asarray(st.sum_emb[slot]) / max(n, 1),
+            "align": float(st.align_sum[slot]) / max(n, 1),
+            "counts": np.asarray(st.token_counts[slot]),
+        }
+        # Eq. 12 evidence-weighted score from the incremental aggregates
+        s_gen = rec["sum_lp"] / max(n, 1)
+        s_coh = rec["sum_coh"] / max(n - 1, 1)
+        s_align = 0.5 * (rec["align"] + info["align_const"]) if self.has_evidence else 0.0
+        rec["score"] = s_gen + self.camd.lambda_g * s_align + self.camd.lambda_c * s_coh
+        info["records"][cand] = rec
+        self._slot_req[slot] = -1
+        self._slot_cand[slot] = -1
+        self.total_tokens += n
+
+        # round complete when no slots of this request remain active
+        if not any(self._slot_req[s] == uid for s in range(self.B)):
+            self._finish_round(uid)
+
+    def _finish_round(self, uid: int):
+        info = self._reqs[uid]
+        round_recs = [info["records"][c] for c, _ in info["cand_slots"]
+                      if c in info["records"] and
+                      "scored" not in info["records"][c]]
+        R = self._per_round()
+        if not round_recs:
+            return
+        for r in round_recs:
+            r["scored"] = True
+        pad = R - len(round_recs)
+        recs = round_recs + round_recs[:1] * pad if pad > 0 else round_recs[:R]
+
+        inp = ctrl.RoundInputs(
+            scores=jnp.asarray([r["score"] for r in recs], jnp.float32),
+            embs=jnp.asarray(np.stack([r["emb"] for r in recs])),
+            token_counts=jnp.asarray(np.stack([r["counts"] for r in recs])),
+            lengths=jnp.asarray([r["n"] for r in recs], jnp.int32),
+            valid=jnp.asarray([True] * len(round_recs) + [False] * max(pad, 0)),
+            uids=jnp.asarray([r["uid"] for r in recs], jnp.int32),
+        )
+        info["camd"], bias = self._round_fn(info["camd"], inp)
+        info["round"] += 1
+        if self.mode == "camd":
+            info["bias"] = bias[None]
+            stopped = bool(info["camd"].stopped)
+        else:
+            info["bias"] = None
+            stopped = len(info["records"]) >= self.n_candidates
+        if stopped:
+            info["done"] = True
+            info["cache_row"] = None  # free the prompt cache
+        else:
+            info["pending_round"] = True
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[Result]:
+        results = []
+        self._schedule()
+        evid = jnp.zeros((self.B, 1, self.d), jnp.float32)
+        if self.has_evidence:
+            evid = self._gather_evid()
+        while True:
+            if not bool(jnp.any(self.state.active)):
+                if self._queue or any(not i["done"] and i.get("pending_round")
+                                      for i in self._reqs.values()):
+                    self._schedule()
+                    if self.has_evidence:
+                        evid = self._gather_evid()
+                    continue
+                break
+            self.key, k = jax.random.split(self.key)
+            self.state, done = self._step_fn(self.params, self.state, k, evid)
+            self.total_steps += 1
+            done_np = np.asarray(done)
+            if done_np.any():
+                for s in np.nonzero(done_np)[0]:
+                    self._finish_candidate(int(s))
+                self._schedule()
+                if self.has_evidence:
+                    evid = self._gather_evid()
+        for uid, info in self._reqs.items():
+            results.append(self._result(uid))
+        return results
+
+    def _gather_evid(self):
+        rows = []
+        for s in range(self.B):
+            uid = int(self._slot_req[s])
+            if uid >= 0 and "evid_row" in self._reqs[uid]:
+                rows.append(self._reqs[uid]["evid_row"][0])
+            else:
+                rows.append(jnp.zeros_like(
+                    next(iter(self._reqs.values()))["evid_row"][0])
+                    if self._reqs else jnp.zeros((1, self.d)))
+        # pad rows to equal Ne
+        ne = max(r.shape[0] for r in rows)
+        rows = [jnp.pad(r, ((0, ne - r.shape[0]), (0, 0))) for r in rows]
+        return jnp.stack(rows)
+
+    def _result(self, uid: int) -> Result:
+        info = self._reqs[uid]
+        cs = info["camd"]
+        recs = list(info["records"].values())
+        if self.mode == "self_consistency":
+            # majority cluster -> best member (sizes from the cluster table)
+            sizes = np.asarray(cs.table.sizes)
+            best_k = int(np.argmax(sizes))
+            # fall back to global best score if cluster bookkeeping is empty
+            best = max(recs, key=lambda r: (0, r["score"]))
+            best_uid = int(cs.best_uid) if int(cs.best_uid) >= 0 else best["uid"]
+            chosen = info["records"].get(best_uid, best)
+        else:
+            bu = int(cs.best_uid)
+            chosen = info["records"].get(bu) or max(recs, key=lambda r: r["score"])
+        return Result(
+            uid=uid,
+            tokens=chosen["tokens"],
+            n_candidates=len(recs),
+            tokens_spent=int(sum(r["n"] for r in recs)),
+            rounds=info["round"],
+            p_star=float(cs.p_star),
+            best_score=float(cs.best_score),
+            stopped_early=(self.mode == "camd" and bool(cs.stopped)
+                           and float(cs.p_star) >= 1.0 - self.camd.delta),
+            candidates=[{k: v for k, v in r.items() if k not in ("counts", "emb")}
+                        for r in recs],
+        )

@@ -1,0 +1,9 @@
+from repro.training.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.training.loss import cross_entropy, total_loss  # noqa: F401
+from repro.training.optimizer import (  # noqa: F401
+    OptState,
+    adamw_update,
+    init_opt_state,
+    learning_rate,
+)
+from repro.training.train_loop import make_loss_fn, make_train_step, train  # noqa: F401

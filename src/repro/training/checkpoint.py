@@ -1,0 +1,58 @@
+"""Sharding-aware checkpointing: host-side npz payload + JSON tree spec.
+
+Works for any pytree (params, optimizer state, CAMD state). Arrays are
+gathered to host before saving; on restore, the caller re-shards by
+feeding the tree through its usual ``device_put``/pjit path. bfloat16 is
+round-tripped via a uint16 view (npz has no native bf16).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {}
+    kinds = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            payload[f"leaf_{i}"] = arr.view(np.uint16)
+            kinds.append("bfloat16")
+        else:
+            payload[f"leaf_{i}"] = arr
+            kinds.append(str(arr.dtype))
+    return payload, (treedef, kinds)
+
+
+def save_checkpoint(path: str, tree, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload, (treedef, kinds) = _flatten(tree)
+    np.savez(path + ".npz", **payload)
+    spec = {"treedef": str(treedef), "kinds": kinds, "step": step,
+            "n_leaves": len(kinds)}
+    with open(path + ".json", "w") as f:
+        json.dump(spec, f)
+
+
+def load_checkpoint(path: str, like_tree) -> Tuple[Any, int]:
+    """Restore into the structure of ``like_tree`` (shapes must match)."""
+    with open(path + ".json") as f:
+        spec = json.load(f)
+    data = np.load(path + ".npz")
+    leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    assert len(leaves) == spec["n_leaves"], "checkpoint/tree mismatch"
+    out = []
+    for i, (leaf, kind) in enumerate(zip(leaves, spec["kinds"])):
+        arr = data[f"leaf_{i}"]
+        if kind == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        assert arr.shape == leaf.shape, (i, arr.shape, leaf.shape)
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), spec["step"]

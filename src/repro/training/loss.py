@@ -1,0 +1,43 @@
+"""Cross-entropy loss with z-loss and MoE auxiliary terms."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, mask=None, z_loss_coef: float = 1e-4):
+    """logits: (B, L, V), labels: (B, L). Returns (loss, metrics).
+
+    The label logit is extracted with an iota-compare-select reduction
+    (not take_along_axis): it fuses into the reduce loop and — crucially —
+    stays partitionable when the vocab dim is model-sharded (a gather
+    would force GSPMD to all-gather the full logits).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    ll = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                 axis=-1)
+    nll = lse - ll
+    z = z_loss_coef * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    m = mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    loss = jnp.sum((nll + z) * m) / n
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * m) / n
+    return loss, {"nll": jnp.sum(nll * m) / n, "accuracy": acc,
+                  "perplexity": jnp.exp(jnp.clip(jnp.sum(nll * m) / n, 0, 20))}
+
+
+def total_loss(logits, labels, aux, mask=None, moe_aux_weight: float = 0.01,
+               moe_z_weight: float = 1e-3):
+    loss, metrics = cross_entropy(logits, labels, mask)
+    if "moe_lb_loss" in aux:
+        loss = loss + moe_aux_weight * aux["moe_lb_loss"] \
+            + moe_z_weight * aux["moe_z_loss"]
+        metrics["moe_lb_loss"] = aux["moe_lb_loss"]
+        metrics["moe_drop_frac"] = aux.get("moe_drop_frac", 0.0)
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,81 @@
+"""AdamW + schedules + global-norm clipping, on raw pytrees (no optax).
+
+Optimizer state mirrors the parameter tree (m, v in fp32) so it shards
+with the same logical-axis rules as the parameters (FSDP-friendly).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init_opt_state(params, dtype=jnp.float32) -> OptState:
+    """``dtype=bfloat16`` halves optimizer memory (trillion-param configs);
+    the update math still accumulates in fp32."""
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def learning_rate(cfg: TrainConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - t
+    else:
+        decay = 1.0
+    return cfg.learning_rate * warm * decay
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(cfg: TrainConfig, params, grads, state: OptState):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = learning_rate(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(
+        lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g).astype(m.dtype),
+        state.m, grads)
+    new_v = jax.tree.map(
+        lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * g * g).astype(v.dtype),
+        state.v, grads)
+
+    def upd(p, m, v):
+        mh = m.astype(jnp.float32) / bc1
+        vh = v.astype(jnp.float32) / bc2
+        delta = lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                      + cfg.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, OptState(step, new_m, new_v), \
+        {"grad_norm": gnorm, "lr": lr}

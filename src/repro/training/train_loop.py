@@ -1,0 +1,101 @@
+"""Training step + loop.
+
+``make_train_step`` builds the pure (params, opt_state, batch) -> step
+function that the launcher jits under a mesh with in/out shardings (see
+``repro.distributed.partition``); the same function runs single-device in
+tests and examples.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models.model import Model
+from repro.training.loss import total_loss
+from repro.training.optimizer import OptState, adamw_update, init_opt_state
+
+
+def make_loss_fn(model: Model, train_cfg: TrainConfig):
+    def loss_fn(params, batch):
+        logits, _, aux = model.forward(
+            params, batch["tokens"], batch.get("evidence"),
+            remat=train_cfg.remat, unroll=train_cfg.unroll)
+        ne = model.cfg.num_evidence_tokens
+        if ne and not model.cfg.is_encoder_decoder:
+            logits = logits[:, ne:]           # loss over text positions only
+        loss, metrics = total_loss(
+            logits, batch["labels"], aux,
+            moe_aux_weight=(model.cfg.moe.aux_loss_weight
+                            if model.cfg.moe else 0.0))
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model: Model, train_cfg: TrainConfig
+                    ) -> Callable[..., Tuple[Any, OptState, Dict]]:
+    loss_fn = make_loss_fn(model, train_cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    k = train_cfg.microbatches
+
+    def train_step(params, opt_state: OptState, batch):
+        if k <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            # gradient accumulation: scan over k microbatches — bounds
+            # activation memory at 1/k of the global batch (the trick that
+            # brings trillion-param train steps under the HBM line).
+            micro = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc_g, acc_m = acc
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / k, acc_g, g)
+                acc_m = jax.tree.map(lambda a, b: a + b / k, acc_m, m)
+                return (acc_g, acc_m), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mb0 = jax.tree.map(lambda x: x[0], micro)
+            (l0, m0), g0 = grad_fn(params, mb0)
+            acc0 = (jax.tree.map(lambda g: g.astype(jnp.float32) / k, g0),
+                    jax.tree.map(lambda m: m / k, m0))
+            rest = jax.tree.map(lambda x: x[1:], micro)
+            (grads, metrics), _ = jax.lax.scan(body, acc0, rest)
+        params, opt_state, opt_metrics = adamw_update(
+            train_cfg, params, grads, opt_state)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def train(model: Model, train_cfg: TrainConfig, data: Iterator[Dict],
+          *, params=None, steps: Optional[int] = None,
+          log_every: int = 10, callback=None):
+    """Single-host training loop (examples / integration tests)."""
+    steps = steps or train_cfg.total_steps
+    if params is None:
+        params = model.init(jax.random.PRNGKey(train_cfg.seed))
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(model, train_cfg))
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(data)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["elapsed_s"] = time.time() - t0
+            history.append(m)
+            if callback:
+                callback(m)
+    return params, opt_state, history

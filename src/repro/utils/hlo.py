@@ -1,0 +1,79 @@
+"""HLO-text analysis: collective-byte accounting for the roofline.
+
+``cost_analysis()`` has no collective term, so we parse the compiled
+module text and sum the result-shape bytes of every collective op
+(all-gather totals count post-gather bytes; this upper-bounds link bytes
+by the ring-transfer total, which is the standard roofline convention).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+# e.g.:  %all-gather.3 = bf16[16,1024]{1,0} all-gather(%param.1), ...
+_LINE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast)(?:-start|-done)?\(")
+# tuple-result collectives:  %x = (bf16[..], bf16[..]) all-to-all(...)
+_TUPLE_LINE = re.compile(
+    r"=\s+\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast)(?:-start|-done)?\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Returns {collective_op: total_result_bytes} + {"total": sum} and
+    per-op counts under "count:<op>"."""
+    out: Dict[str, int] = defaultdict(int)
+    seen_ids = set()
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in COLLECTIVES):
+            continue
+        if "-done(" in line:      # async pairs: count the start only
+            continue
+        m = _LINE.search(line)
+        if m:
+            dtype, dims, op = m.groups()
+            out[op] += _shape_bytes(dtype, dims)
+            out[f"count:{op}"] += 1
+            continue
+        m = _TUPLE_LINE.search(line)
+        if m:
+            shapes, op = m.groups()
+            for dm in _SHAPE.finditer(shapes):
+                out[op] += _shape_bytes(*dm.groups())
+            out[f"count:{op}"] += 1
+    out["total"] = sum(v for k, v in out.items() if not k.startswith("count:"))
+    return dict(out)
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "dot", "convolution",
+                                     "scatter", "gather", "reshape",
+                                     "transpose", "copy")) -> Dict[str, int]:
+    """Rough count of selected op kinds (remat/redundancy smoke signal)."""
+    hist: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+([a-z-]+)\(",
+                      line)
+        if m and m.group(1) in ops:
+            hist[m.group(1)] += 1
+    return dict(hist)

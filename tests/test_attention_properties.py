@@ -1,0 +1,91 @@
+"""Property tests of the attention substrate's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.attention import NEG_INF, sdpa
+from repro.models.layers import apply_rope
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), Hq=st.sampled_from([2, 4]),
+       Hkv=st.sampled_from([1, 2]))
+def test_sdpa_grouped_equals_expanded(seed, Hq, Hkv):
+    """Grouped-GQA math == explicitly expanded heads."""
+    key = jax.random.PRNGKey(seed)
+    B, L, hd = 2, 24, 16
+    q = jax.random.normal(key, (B, L, Hq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, L, Hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, L, Hkv, hd))
+    out = sdpa(q, k, v, causal=True)
+    rep = Hq // Hkv
+    out_exp = sdpa(q, jnp.repeat(k, rep, 2), jnp.repeat(v, rep, 2),
+                   causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sdpa_chunked_equals_unchunked():
+    key = jax.random.PRNGKey(0)
+    B, L, H, hd = 1, 64, 2, 16
+    q = jax.random.normal(key, (B, L, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, L, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, L, H, hd))
+    a = sdpa(q, k, v, causal=True, chunk=16)
+    b = sdpa(q, k, v, causal=True, chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_window_equals_full_when_window_covers():
+    """window >= L must equal full causal attention; a small window must
+    differ (the mask actually does something)."""
+    key = jax.random.PRNGKey(1)
+    B, L, H, hd = 1, 32, 2, 16
+    q = jax.random.normal(key, (B, L, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, L, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, L, H, hd))
+    full = sdpa(q, k, v, causal=True, window=0)
+    wide = sdpa(q, k, v, causal=True, window=L + 5)
+    narrow = sdpa(q, k, v, causal=True, window=4)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(wide),
+                               rtol=1e-6)
+    assert float(jnp.abs(full - narrow).max()) > 1e-3
+
+
+def test_causality():
+    """Perturbing future tokens must not change past outputs."""
+    key = jax.random.PRNGKey(2)
+    B, L, H, hd = 1, 16, 2, 8
+    q = jax.random.normal(key, (B, L, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, L, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, L, H, hd))
+    out1 = sdpa(q, k, v, causal=True)
+    k2 = k.at[:, 10:].set(99.0)
+    v2 = v.at[:, 10:].set(-99.0)
+    out2 = sdpa(q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :10]),
+                               np.asarray(out2[:, :10]), rtol=1e-5)
+    assert float(jnp.abs(out1[:, 10:] - out2[:, 10:]).max()) > 1e-3
+
+
+def test_rope_relative_position_invariance():
+    """RoPE dot products depend only on relative distance."""
+    hd = 32
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, hd))
+
+    def dot_at(pq, pk):
+        qr = apply_rope(q, jnp.asarray([[pq]]), 10000.0)
+        kr = apply_rope(k, jnp.asarray([[pk]]), 10000.0)
+        return float(jnp.sum(qr * kr))
+
+    a = dot_at(5, 3)
+    b = dot_at(105, 103)
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+    c = dot_at(5, 0)
+    assert abs(a - c) > 1e-5  # different distance -> different score

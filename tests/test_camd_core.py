@@ -1,0 +1,243 @@
+"""Unit + property tests for the CAMD core modules (Eq. 7-16)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config import CAMDConfig
+from repro.core import clustering, controller, posterior, scoring
+
+
+# ---------------------------------------------------------------------------
+# scoring (Eq. 7-12)
+# ---------------------------------------------------------------------------
+
+def test_generation_confidence_masking():
+    lp = jnp.array([[-1.0, -2.0, -100.0], [-3.0, -3.0, -3.0]])
+    mask = jnp.array([[1, 1, 0], [1, 1, 1]])
+    out = scoring.generation_confidence(lp, mask)
+    np.testing.assert_allclose(np.asarray(out), [-1.5, -3.0], rtol=1e-6)
+
+
+def test_coherence_bounds_and_perfect_case():
+    h = jnp.ones((1, 5, 8))
+    mask = jnp.ones((1, 5))
+    out = scoring.reasoning_coherence(h, mask)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)
+    h2 = jax.random.normal(jax.random.PRNGKey(0), (4, 10, 8))
+    out2 = scoring.reasoning_coherence(h2, jnp.ones((4, 10)))
+    assert bool(jnp.all(out2 <= 1.0)) and bool(jnp.all(out2 >= -1.0))
+
+
+def test_evidence_score_lambda_weights():
+    """Eq. 12 composition: alignment/coherence terms scale with λ."""
+    k = jax.random.PRNGKey(1)
+    lp = -jnp.ones((2, 6))
+    mask = jnp.ones((2, 6))
+    h = jax.random.normal(k, (2, 6, 8))
+    tok = jax.random.normal(jax.random.fold_in(k, 1), (2, 6, 8))
+    vis = jax.random.normal(jax.random.fold_in(k, 2), (2, 4, 8))
+    s0 = scoring.evidence_weighted_score(lp, mask, lambda_g=0, lambda_c=0,
+                                         hidden=h, token_embs=tok,
+                                         visual_feats=vis)
+    np.testing.assert_allclose(np.asarray(s0), -1.0, rtol=1e-6)
+    s1 = scoring.evidence_weighted_score(lp, mask, lambda_g=0.9, lambda_c=0.7,
+                                         hidden=h, token_embs=tok,
+                                         visual_feats=vis)
+    align = scoring.cross_modal_consistency(tok, mask, vis, tok)
+    coh = scoring.reasoning_coherence(h, mask)
+    np.testing.assert_allclose(np.asarray(s1),
+                               np.asarray(-1.0 + 0.9 * align + 0.7 * coh),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# clustering (Eq. 13)
+# ---------------------------------------------------------------------------
+
+def test_clustering_groups_similar_candidates():
+    tb = clustering.make_table(8, 4)
+    base = jnp.array([1.0, 0.0, 0.0, 0.0])
+    other = jnp.array([0.0, 1.0, 0.0, 0.0])
+    embs = jnp.stack([base, base * 2.0, other, base + 0.01, other * 0.5])
+    scores = jnp.zeros(5)
+    valid = jnp.ones(5, bool)
+    tb, idx = clustering.assign_batch(tb, embs, scores, valid, 0.85)
+    idx = np.asarray(idx)
+    assert idx[0] == idx[1] == idx[3]       # scaled/near copies cluster
+    assert idx[2] == idx[4] and idx[2] != idx[0]
+    assert int(tb.n_clusters) == 2
+
+
+def test_clustering_table_overflow_joins_nearest():
+    tb = clustering.make_table(2, 4)
+    eye = jnp.eye(4)
+    embs = jnp.concatenate([eye[:3], eye[:1]], axis=0)
+    tb, idx = clustering.assign_batch(tb, embs, jnp.zeros(4),
+                                      jnp.ones(4, bool), 0.9)
+    assert int(tb.n_clusters) == 2          # capped at M
+    assert idx[3] == idx[0]                  # overflow joined its twin
+
+
+def test_posterior_weights_eq14():
+    """p̂_k must equal softmax-mass of member scores per cluster."""
+    tb = clustering.make_table(4, 2)
+    embs = jnp.array([[1.0, 0], [1, 0.01], [0, 1.0]])
+    scores = jnp.array([2.0, 1.0, 0.0])
+    tb, idx = clustering.assign_batch(tb, embs, scores, jnp.ones(3, bool), 0.85)
+    p = np.asarray(clustering.posterior_weights(tb))
+    e = np.exp([2.0, 1.0, 0.0])
+    expect_c0 = (e[0] + e[1]) / e.sum()
+    np.testing.assert_allclose(p[np.asarray(idx)[0]], expect_c0, rtol=1e-5)
+    np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 30), st.integers(0, 10**6))
+def test_posterior_weights_always_simplex(n, seed):
+    key = jax.random.PRNGKey(seed)
+    embs = jax.random.normal(key, (n, 8))
+    scores = jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 3
+    tb = clustering.make_table(6, 8)
+    tb, _ = clustering.assign_batch(tb, embs, scores, jnp.ones(n, bool), 0.8)
+    p = np.asarray(clustering.posterior_weights(tb))
+    assert np.all(p >= -1e-7)
+    np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# posterior / Dirichlet / mixture (Eq. 14-16)
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_update_accumulates():
+    tb = clustering.make_table(4, 2)
+    embs = jnp.array([[1.0, 0], [0, 1.0]])
+    tb, _ = clustering.assign_batch(tb, embs, jnp.array([1.0, 1.0]),
+                                    jnp.ones(2, bool), 0.85)
+    alpha = jnp.full((4,), 0.5)
+    a1, pi = posterior.dirichlet_update(alpha, tb)
+    assert float(jnp.sum(a1)) > float(jnp.sum(alpha))
+    np.testing.assert_allclose(float(pi.sum()), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(pi[:2]), 0.5, atol=1e-5)
+
+
+def test_mixture_bias_prefers_majority_cluster_tokens():
+    pi = jnp.array([0.9, 0.1, 0.0, 0.0])
+    hist = jnp.zeros((4, 16)).at[0, 3].set(10.0).at[1, 7].set(10.0)
+    bias = posterior.mixture_logit_bias(pi, hist)
+    assert float(bias[3]) > float(bias[7]) > float(bias[11])
+
+
+def test_coverage_stop_rule():
+    tb = clustering.make_table(4, 2)
+    # one dominant cluster of three high scorers vs a stray
+    embs = jnp.array([[1.0, 0]] * 3 + [[0, 1.0]])
+    scores = jnp.array([3.0, 3.0, 3.0, -4.0])
+    tb, _ = clustering.assign_batch(tb, embs, scores, jnp.ones(4, bool), 0.85)
+    stop, p = posterior.coverage_reached(tb, jnp.asarray(4), delta=0.05,
+                                         min_samples=2)
+    assert bool(stop) and float(p) > 0.95
+    stop2, _ = posterior.coverage_reached(tb, jnp.asarray(1), delta=0.05,
+                                          min_samples=2)
+    assert not bool(stop2)                   # min_samples gate
+
+
+# ---------------------------------------------------------------------------
+# controller state machine
+# ---------------------------------------------------------------------------
+
+def _round(scores, embs, cfg, uids0=0):
+    n = len(scores)
+    return controller.RoundInputs(
+        scores=jnp.asarray(scores, jnp.float32),
+        embs=jnp.asarray(embs, jnp.float32),
+        token_counts=jnp.zeros((n, 32)),
+        lengths=jnp.full((n,), 10, jnp.int32),
+        valid=jnp.ones((n,), bool),
+        uids=jnp.arange(uids0, uids0 + n, dtype=jnp.int32))
+
+
+def test_controller_stops_on_consensus_continues_on_dissent():
+    cfg = CAMDConfig(max_clusters=8, min_samples=3, delta=0.05, max_rounds=10)
+    base = np.array([1.0, 0, 0, 0], np.float32)
+    # consensus: three identical high-scoring answers
+    st1 = controller.init_state(cfg, 4, 32)
+    st1, _ = controller.round_update(cfg, st1, _round(
+        [2.0, 2.0, 2.0], [base, base, base], cfg))
+    assert bool(st1.stopped) and float(st1.p_star) >= 0.95
+    # dissent: three orthogonal equal-scoring answers
+    st2 = controller.init_state(cfg, 4, 32)
+    st2, _ = controller.round_update(cfg, st2, _round(
+        [1.0, 1.0, 1.0], np.eye(4, dtype=np.float32)[:3], cfg))
+    assert not bool(st2.stopped) and float(st2.p_star) < 0.5
+
+
+def test_controller_tracks_best_and_budget():
+    cfg = CAMDConfig(max_clusters=8, min_samples=10, max_rounds=10)
+    st = controller.init_state(cfg, 4, 32)
+    st, _ = controller.round_update(cfg, st, _round(
+        [0.5, 2.5, 1.0], np.eye(4, dtype=np.float32)[:3], cfg))
+    assert int(st.best_uid) == 1
+    assert int(st.k_t) == 3
+    assert int(st.tokens_spent) == 30
+    st, _ = controller.round_update(cfg, st, _round(
+        [3.0, 0.0, 0.0], np.eye(4, dtype=np.float32)[:3], cfg, uids0=3))
+    assert int(st.best_uid) == 3
+    assert int(st.k_t) == 6
+
+
+def test_controller_max_rounds_forces_stop():
+    cfg = CAMDConfig(max_clusters=8, min_samples=100, max_rounds=2)
+    st = controller.init_state(cfg, 4, 32)
+    for i in range(2):
+        st, _ = controller.round_update(cfg, st, _round(
+            [0.1], [np.eye(4, dtype=np.float32)[i % 4]], cfg, uids0=i))
+    assert bool(st.stopped)
+
+
+def test_stopped_state_frozen():
+    cfg = CAMDConfig(max_clusters=8, min_samples=1, delta=0.5, max_rounds=10)
+    st = controller.init_state(cfg, 4, 32)
+    st, _ = controller.round_update(cfg, st, _round(
+        [5.0, 5.0], [np.array([1., 0, 0, 0])] * 2, cfg))
+    assert bool(st.stopped)
+    k_before = int(st.k_t)
+    st2, bias = controller.round_update(cfg, st, _round(
+        [9.0], [np.array([0., 1, 0, 0])], cfg, uids0=10))
+    assert int(st2.k_t) == k_before          # no further accounting
+    assert float(jnp.abs(bias).max()) == 0.0  # guidance off
+
+
+# ---------------------------------------------------------------------------
+# §3.2 adaptive-stop baselines
+# ---------------------------------------------------------------------------
+
+def test_threshold_stop():
+    stop, rounds = posterior.threshold_stop(
+        jnp.asarray(0.95), jnp.asarray(0.9), jnp.asarray(0), tau=0.9, patience=3)
+    assert bool(stop)
+    stop2, rounds2 = posterior.threshold_stop(
+        jnp.asarray(0.5), jnp.asarray(0.5), jnp.asarray(2), tau=0.9, patience=3)
+    assert bool(stop2) and int(rounds2) == 3  # patience exhausted
+
+
+def test_beta_bernoulli_stop():
+    stop, mf = posterior.beta_bernoulli_stop(
+        jnp.asarray(19.0), jnp.asarray(20.0), delta=0.1)
+    assert bool(stop)
+    stop2, _ = posterior.beta_bernoulli_stop(
+        jnp.asarray(1.0), jnp.asarray(20.0), delta=0.1)
+    assert not bool(stop2)
+
+
+def test_expected_improvement_stop():
+    stop, ei = posterior.expected_improvement_stop(
+        jnp.asarray(10.0), jnp.asarray(0.0), jnp.asarray(0.01),
+        jnp.asarray(100.0), cost_per_token=1e-3)
+    assert bool(stop)   # best far above mean -> no expected gain
+    stop2, _ = posterior.expected_improvement_stop(
+        jnp.asarray(0.0), jnp.asarray(1.0), jnp.asarray(1.0),
+        jnp.asarray(1.0), cost_per_token=1e-5)
+    assert not bool(stop2)

@@ -1,0 +1,59 @@
+"""Data pipeline + oracle task tests."""
+import numpy as np
+
+from repro.data import ChainTask, SimulatedDecoder, evidence_batch, lm_batches
+from repro.data.synthetic import OFF, QRY
+
+
+def test_lm_batches_shapes_and_vocab():
+    it = lm_batches(512, 4, 32, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (4, 32)
+    assert b["labels"].shape == (4, 32)
+    assert b["tokens"].max() < 512 and b["tokens"].min() >= 0
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_evidence_batch_unit_norm():
+    rng = np.random.default_rng(0)
+    ev = evidence_batch(rng, 3, 8, 16)
+    np.testing.assert_allclose(np.linalg.norm(ev, axis=-1), 1.0, rtol=1e-4)
+
+
+def test_chain_task_oracle():
+    task = ChainTask(base=16)
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        prompt, ans, k = task.sample(rng)
+        assert prompt[-1] == QRY
+        assert task.check(prompt, np.asarray([ans]))
+        assert not task.check(prompt, np.asarray([ans + 1]))
+
+
+def test_simulated_decoder_statistics():
+    """Per-trial correctness rate must track the drawn difficulty s."""
+    sim = SimulatedDecoder(tail="heavy", seed=0)
+    for s in (0.1, 0.5, 0.9):
+        out = sim.trial(s, k=5000)
+        assert abs(out["correct"].mean() - s) < 0.03
+    # embeddings of equal answers are close; of different answers, far
+    out = sim.trial(0.5, k=200)
+    same = out["answer"][:, None] == out["answer"][None, :]
+    emb = out["emb"] / np.linalg.norm(out["emb"], axis=-1, keepdims=True)
+    sims = emb @ emb.T
+    assert sims[same].mean() > 0.95
+    assert sims[~same].mean() < 0.5
+    # scores separate correct from wrong on average
+    assert (out["score"][out["correct"]].mean()
+            > out["score"][~out["correct"]].mean())
+
+
+def test_simulated_difficulty_tails():
+    sim_h = SimulatedDecoder(tail="heavy", alpha=0.5, seed=1)
+    sim_l = SimulatedDecoder(tail="light", seed=1)
+    sh = sim_h.sample_difficulty(100000)
+    sl = sim_l.sample_difficulty(100000)
+    # heavy tail has much more mass at tiny s
+    assert (sh < 0.01).mean() > 0.05
+    assert (sl < 0.01).mean() == 0.0

@@ -1,0 +1,38 @@
+"""Dry-run path smoke test (slow): one (arch × shape) through the real
+512-device production-mesh lower+compile in a subprocess."""
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_one_combo():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen3-0.6b", "--shape", "decode_32k",
+         "--mesh", "single", "--no-costs", "--out", ""],
+        capture_output=True, text=True, timeout=540,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "All dry-run combinations lowered and compiled successfully." \
+        in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "bottleneck=" in r.stdout
+
+
+def test_collective_bytes_parser():
+    from repro.utils.hlo import collective_bytes
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%p), replica_groups={}
+  %ar.1 = f32[256]{0} all-reduce(%x), to_apply=%sum
+  %a2a = (f32[8,4]{1,0}, f32[8,4]{1,0}) all-to-all(%y, %z)
+  %cp = u32[128]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %start = bf16[64]{0} all-reduce-start(%v)
+  %done = bf16[64]{0} all-reduce-done(%start)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["all-reduce"] == 256 * 4 + 64 * 2  # start counted, done not
+    assert out["all-to-all"] == 2 * 8 * 4 * 4
+    assert out["collective-permute"] == 128 * 4
+    assert out["total"] == sum(
+        v for k, v in out.items() if not k.startswith("count:") and k != "total")

@@ -1,0 +1,136 @@
+"""Serving engine integration tests: slot scheduling, CAMD rounds, modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import CAMDConfig, SamplingConfig
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen3-0.6b").reduced().with_overrides(dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk_engine(model, params, **kw):
+    defaults = dict(
+        slots=6, cache_len=64,
+        sampling=SamplingConfig(max_new_tokens=8, temperature=0.8),
+        camd=CAMDConfig(samples_per_round=2, max_rounds=2, min_samples=2,
+                        max_clusters=8),
+        max_new_tokens=8, eos_id=1, seed=0)
+    defaults.update(kw)
+    return ServeEngine(model, params, **defaults)
+
+
+def _submit(engine, cfg, n, seed=0, plen=6):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        engine.submit(Request(
+            uid=i, prompt=rng.integers(2, cfg.vocab_size, plen).astype(np.int32)))
+
+
+def test_camd_mode_runs_all_requests(small_model):
+    cfg, model, params = small_model
+    eng = _mk_engine(model, params, mode="camd")
+    _submit(eng, cfg, 5)
+    res = eng.run()
+    assert len(res) == 5
+    for r in res:
+        assert r.n_candidates >= 2
+        assert 1 <= r.rounds <= 2
+        assert len(r.tokens) >= 1
+        assert r.tokens_spent == sum(c["n"] for c in r.candidates)
+
+
+def test_greedy_mode_single_candidate(small_model):
+    cfg, model, params = small_model
+    eng = _mk_engine(model, params, mode="greedy")
+    _submit(eng, cfg, 3)
+    res = eng.run()
+    for r in res:
+        assert r.n_candidates == 1
+
+
+def test_greedy_deterministic(small_model):
+    cfg, model, params = small_model
+    outs = []
+    for seed in (0, 1):
+        eng = _mk_engine(model, params, mode="greedy", seed=seed)
+        _submit(eng, cfg, 2, seed=7)
+        outs.append([r.tokens.tolist() for r in sorted(eng.run(),
+                                                       key=lambda r: r.uid)])
+    assert outs[0] == outs[1], "greedy must not depend on sampler rng"
+
+
+def test_best_of_n_exact_budget(small_model):
+    cfg, model, params = small_model
+    eng = _mk_engine(model, params, mode="best_of_n", n_candidates=4)
+    _submit(eng, cfg, 3)
+    res = eng.run()
+    for r in res:
+        assert r.n_candidates == 4
+        best = max(r.candidates, key=lambda c: c["score"])
+        assert r.tokens.tolist() == best["tokens"].tolist()
+
+
+def test_self_consistency_runs(small_model):
+    cfg, model, params = small_model
+    eng = _mk_engine(model, params, mode="self_consistency", n_candidates=4)
+    _submit(eng, cfg, 2)
+    res = eng.run()
+    for r in res:
+        assert r.n_candidates == 4
+
+
+def test_slot_reuse_under_small_slot_count(small_model):
+    """More requests than slots: continuous batching must still finish all."""
+    cfg, model, params = small_model
+    eng = _mk_engine(model, params, mode="camd", slots=4)
+    _submit(eng, cfg, 6)
+    res = eng.run()
+    assert len(res) == 6
+    assert all(r.n_candidates >= 2 for r in res)
+
+
+def test_adaptive_spends_fewer_tokens_than_fixed_on_easy(small_model):
+    """The paper's core efficiency claim at engine level: when candidates
+    agree (easy instance ⇒ coverage reached in round 1), CAMD spends fewer
+    tokens than fixed best-of-N with the same per-round width."""
+    cfg, model, params = small_model
+    camd_kw = dict(camd=CAMDConfig(samples_per_round=2, max_rounds=4,
+                                   min_samples=2, max_clusters=8,
+                                   cluster_threshold=0.0))  # everything clusters
+    eng_a = _mk_engine(model, params, mode="camd", **camd_kw)
+    _submit(eng_a, cfg, 3)
+    res_a = eng_a.run()
+    eng_f = _mk_engine(model, params, mode="best_of_n", n_candidates=8)
+    _submit(eng_f, cfg, 3)
+    res_f = eng_f.run()
+    toks_a = sum(r.tokens_spent for r in res_a)
+    toks_f = sum(r.tokens_spent for r in res_f)
+    assert toks_a < toks_f
+    assert all(r.stopped_early for r in res_a)
+
+
+def test_vlm_engine_with_evidence():
+    cfg = get_config("internvl2-2b").reduced().with_overrides(dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = _mk_engine(model, params, mode="camd", slots=4, cache_len=64)
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        ev = rng.standard_normal((cfg.num_evidence_tokens,
+                                  cfg.evidence_dim)).astype(np.float32)
+        eng.submit(Request(uid=i, prompt=rng.integers(
+            2, cfg.vocab_size, 6).astype(np.int32), evidence=ev))
+    res = eng.run()
+    assert len(res) == 2
+    for r in res:
+        assert np.isfinite(r.best_score)

@@ -1,0 +1,77 @@
+"""Sampler / logit-processor tests incl. hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config import SamplingConfig
+from repro.sampling import samplers
+
+
+def test_top_k_keeps_k():
+    logits = jnp.asarray([[1.0, 5.0, 3.0, 2.0, 4.0]])
+    out = samplers.apply_top_k(logits, 2)
+    kept = np.asarray(out[0] > samplers.NEG_INF / 2)
+    assert kept.sum() == 2 and kept[1] and kept[4]
+
+
+def test_top_p_keeps_minimal_nucleus():
+    logits = jnp.log(jnp.asarray([[0.5, 0.3, 0.15, 0.05]]))
+    out = samplers.apply_top_p(logits, 0.7)
+    kept = np.asarray(out[0] > samplers.NEG_INF / 2)
+    assert kept.tolist() == [True, True, False, False]
+
+
+def test_top_p_always_keeps_top1():
+    logits = jnp.asarray([[10.0, -10.0, -10.0]])
+    out = samplers.apply_top_p(logits, 0.01)
+    assert float(out[0, 0]) == 10.0
+
+
+def test_min_p():
+    logits = jnp.log(jnp.asarray([[0.6, 0.3, 0.001]]))
+    out = samplers.apply_min_p(logits, 0.1)
+    kept = np.asarray(out[0] > samplers.NEG_INF / 2)
+    assert kept.tolist() == [True, True, False]
+
+
+def test_repetition_penalty_direction():
+    logits = jnp.asarray([[2.0, -2.0, 1.0]])
+    counts = jnp.asarray([[1.0, 1.0, 0.0]])
+    out = samplers.apply_repetition_penalty(logits, counts, 1.25)
+    assert float(out[0, 0]) == pytest.approx(2.0 / 1.25, rel=1e-6)
+    assert float(out[0, 1]) == pytest.approx(-2.0 * 1.25, rel=1e-6)
+    assert float(out[0, 2]) == pytest.approx(1.0, rel=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6), st.floats(0.1, 1.0), st.integers(2, 40))
+def test_processors_preserve_argmax(seed, p, v):
+    """No processor chain may change the most-likely token."""
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (3, v)) * 3
+    cfg = SamplingConfig(temperature=0.7, top_p=p, top_k=max(2, v // 3),
+                         min_p=0.05, repetition_penalty=1.0)
+    out = samplers.process_logits(logits, cfg)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(out, -1)),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_sample_token_greedy_rows():
+    logits = jnp.asarray([[0.0, 5.0, 1.0], [4.0, 0.0, 1.0]])
+    cfg = SamplingConfig(temperature=1.0, top_p=1.0, repetition_penalty=1.0)
+    tok, lp = samplers.sample_token(jax.random.PRNGKey(0), logits, cfg,
+                                    greedy=jnp.asarray([True, True]))
+    assert tok.tolist() == [1, 0]
+    assert bool(jnp.all(lp <= 0))
+
+
+def test_sampling_respects_bias():
+    """A strong CAMD mixture bias must dominate token choice."""
+    logits = jnp.zeros((1, 8))
+    bias = jnp.zeros((1, 8)).at[0, 5].set(50.0)
+    cfg = SamplingConfig(temperature=1.0, top_p=1.0, repetition_penalty=1.0)
+    tok, _ = samplers.sample_token(jax.random.PRNGKey(1), logits, cfg,
+                                   bias=bias)
+    assert int(tok[0]) == 5

@@ -1,0 +1,87 @@
+"""Property tests of the paper's theoretical framework (§4.1, Theorem 4.2).
+
+These are the *validation of the paper's own claims*: coverage
+monotonicity, the δ-coverage bound of Def. 4.1, and the three tail-class
+decay rates of Theorem 4.2, checked numerically at scale.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import theory
+
+
+def test_coverage_monotone_and_complement():
+    key = jax.random.PRNGKey(0)
+    s = theory.sample_heavy_tail(key, 20000, alpha=0.5)
+    Ks = jnp.array([1, 2, 4, 8, 16, 32, 64])
+    cov = theory.coverage(Ks, s)
+    res = theory.residual_risk(Ks, s)
+    np.testing.assert_allclose(np.asarray(cov + res), 1.0, rtol=1e-6)
+    assert bool(jnp.all(jnp.diff(cov) > 0)), "coverage must increase with K"
+
+
+@settings(max_examples=30, deadline=None)
+@given(s=st.floats(0.01, 0.95), delta=st.floats(0.001, 0.2))
+def test_n_delta_guarantee(s, delta):
+    """Def. 4.1: N_δ trials give >= 1-δ coverage; N_δ - 1 do not."""
+    n = float(theory.n_delta(jnp.asarray(s), delta))
+    assert 1.0 - (1.0 - s) ** n >= 1.0 - delta - 1e-9
+    if n > 1:
+        assert 1.0 - (1.0 - s) ** (n - 1) < 1.0 - delta + 1e-9
+
+
+def test_theorem_42_heavy_tail_power_law():
+    """Heavy tail g(s)~αs^(α-1): Δ(K) ~ κΓ(α)K^(-α) — fitted exponent
+    must recover α."""
+    for alpha in (0.4, 0.7):
+        s = theory.sample_heavy_tail(jax.random.PRNGKey(1), 400000, alpha)
+        Ks = np.array([4, 8, 16, 32, 64, 128, 256])
+        deltas = np.asarray(theory.residual_risk(jnp.asarray(Ks), s))
+        fitted, _ = theory.fit_power_law(Ks, deltas)
+        assert abs(fitted - alpha) < 0.12, (alpha, fitted)
+        # the predicted constant matches too: for g(s) = α s^(α-1) the
+        # Theorem 4.2 prefactor is κ = α (exact: Δ(K) = αB(α, K+1)).
+        pred = np.asarray(theory.heavy_tail_rate(Ks, alpha, kappa=alpha))
+        ratio = deltas / pred
+        assert 0.8 < np.median(ratio) < 1.25
+
+
+def test_theorem_42_light_tail_exponential():
+    """Truncated tail: Δ(K) <= C' e^(-c'K) — log-residual is linear in K
+    and the power-law fit is clearly worse than the exponential one."""
+    s = theory.sample_light_tail(jax.random.PRNGKey(2), 200000, lo=0.2)
+    Ks = np.array([1, 2, 4, 8, 16, 24, 32])
+    deltas = np.asarray(theory.residual_risk(jnp.asarray(Ks), s))
+    c, b = theory.fit_exponential(Ks, deltas)
+    assert c > 0.15, "light tail must decay exponentially"
+    pred = np.exp(b - c * Ks)
+    rel = np.abs(np.log(pred) - np.log(deltas))
+    assert rel.max() < 0.7
+
+
+def test_theorem_42_ordering():
+    """At equal K, residual risk: heavy > stretched > light (tail mass)."""
+    n = 200000
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    sh = theory.sample_heavy_tail(keys[0], n, 0.5)
+    se = theory.sample_stretched_exp(keys[1], n)
+    sl = theory.sample_light_tail(keys[2], n)
+    K = jnp.asarray([64])
+    dh = float(theory.residual_risk(K, sh)[0])
+    de = float(theory.residual_risk(K, se)[0])
+    dl = float(theory.residual_risk(K, sl)[0])
+    assert dh > de > dl
+
+
+def test_k_star_scaling():
+    """Eq. 6: heavy-tail budgets blow up polynomially in 1/ε, light tails
+    logarithmically."""
+    heavy = [theory.k_star(e, 0.0, "heavy", alpha=0.5) for e in (0.1, 0.01)]
+    light = [theory.k_star(e, 0.0, "light") for e in (0.1, 0.01)]
+    assert heavy[1] / heavy[0] > 50      # (1/ε)^2 ⇒ 100×
+    assert light[1] / light[0] < 3       # log ⇒ 2×
+    assert theory.k_star(0.05, 0.1, "heavy") == float("inf")  # ε < R_irr
