@@ -45,6 +45,23 @@ def run(verbose: bool = True):
     rows.append(("decode_attention_ref_8k", us,
                  f"{bytes_moved/us/1e3:.1f}GBps"))
 
+    # paged decode on the same 8k context, but only half the pages live —
+    # the µs/token and bytes columns show paged traffic scaling with live
+    # tokens where the contiguous row above pays slots × cache_len.
+    ps = 128
+    P = S // ps + 1
+    live = S // 2
+    n_pages = live // ps
+    kp = jax.random.normal(key, (P, ps, Hkv, hd), jnp.float32)
+    bt = (1 + jnp.arange(B * n_pages, dtype=jnp.int32)).reshape(B, n_pages)
+    lengths = jnp.full((B,), live, jnp.int32)
+    pda = jax.jit(lambda q, k, t, ln: ref.paged_decode_attention_ref(
+        q, k, k, t, ln))
+    us = _time(pda, qd, kp, bt, lengths)
+    bytes_moved = 2 * B * live * Hkv * hd * 4
+    rows.append(("paged_decode_ref_8k_half_live", us,
+                 f"{bytes_moved/us/1e3:.1f}GBps"))
+
     Lx, Nv, Nt, d = 512, 256, 128, 256
     tok = jax.random.normal(key, (B, Lx, d))
     vis = jax.random.normal(key, (B, Nv, d))

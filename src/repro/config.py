@@ -247,6 +247,22 @@ class CAMDConfig:
 
 
 @dataclass(frozen=True)
+class PagedKVConfig:
+    """Paged KV-cache settings for the serving engine (``impl="paged"``).
+
+    ``num_pages=0`` sizes the pool to the dense worst case
+    (slots * cache_len / page_size, + 1 quarantine page). Deployments
+    cap it below that and rely on CAMD's early stopping to return
+    pages: the engine reserves a candidate's worst-case pages at
+    admission, so an undersized pool shows up as queueing delay (or a
+    sizing error when even one candidate can never fit), never as a
+    mid-decode failure.
+    """
+    page_size: int = 16            # tokens per KV page
+    num_pages: int = 0             # 0 => dense-equivalent worst case
+
+
+@dataclass(frozen=True)
 class SamplingConfig:
     temperature: float = 0.7
     top_p: float = 0.9

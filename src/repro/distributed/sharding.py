@@ -60,6 +60,14 @@ def _maybe(mesh: Mesh, dim_size: int, axes) -> Optional[Any]:
     return axes if dim_size % _axsize(mesh, axes) == 0 else None
 
 
+def _norm(ax):
+    """jax<=0.4 PartitionSpec treats ("data",) != "data"; normalize
+    singleton axis tuples so specs compare equal across jax versions."""
+    if isinstance(ax, tuple) and len(ax) == 1:
+        return ax[0]
+    return ax
+
+
 def _leaf_name(path) -> str:
     for p in reversed(path):
         if isinstance(p, jax.tree_util.DictKey):
@@ -95,7 +103,7 @@ def _param_spec(mesh: Mesh, rules: ShardingRules, path, shape) -> P:
         return P()
 
     def build(dims):
-        return P(*([None] * off + list(dims)))
+        return P(*([None] * off + [_norm(d) for d in dims]))
 
     # MoE expert weights: (E, d, f) / (E, f, d)
     if name in ("w_gate", "w_up", "w_down") and len(eff) == 3:
@@ -173,10 +181,10 @@ def _cache_spec(mesh: Mesh, rules: ShardingRules, path, shape) -> P:
     eff = shape[off:]
 
     def build(dims):
-        return P(*([None] * off + list(dims)))
+        return P(*([None] * off + [_norm(d) for d in dims]))
 
     if name == "pos":
-        return P(_maybe(mesh, shape[0], dp))
+        return P(_norm(_maybe(mesh, shape[0], dp)))
     if name in ("k", "v") or name in ("cross_k", "cross_v"):
         # (B, S, Hkv, hd). Prefer head sharding; when Hkv is not divisible
         # (MQA / small GQA) fall back to *context parallelism*: shard the
@@ -213,7 +221,7 @@ def batch_specs(shape_cfg: ShapeConfig, batch_shapes, mesh: Mesh):
         name = _leaf_name(path)
         if name in ("tokens", "labels", "evidence", "token"):
             b_ax = dp if leaf.shape[0] % _axsize(mesh, dp) == 0 else None
-            return P(*([b_ax] + [None] * (len(leaf.shape) - 1)))
+            return P(*([_norm(b_ax)] + [None] * (len(leaf.shape) - 1)))
         return P()
 
     return jax.tree_util.tree_map_with_path(spec, batch_shapes)

@@ -2,6 +2,9 @@
 
 flash_attention   prefill attention (online softmax, causal/window)
 decode_attention  flash-decode vs long KV caches (GQA-grouped HBM reads)
+paged_decode_attention
+                  flash-decode through a block table of KV pages
+                  (scalar-prefetch indexed; HBM traffic ∝ live tokens)
 xmodal_score      fused Eq. 8-9 cross-modal consistency reductions
 moe_dispatch      gather-based MoE dispatch/combine — the O(k)/token
                   TPU-native replacement for the O(E*C)/token capacity

@@ -13,6 +13,7 @@ import jax
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_decode_attention as _pdec
 from repro.kernels import ref as _ref
 from repro.kernels import xmodal_score as _xm
 
@@ -41,6 +42,15 @@ def decode_attention(q, k, v, kv_mask, *, blk_s: int = 256):
         return _ref.decode_attention_ref(q, k, v, kv_mask)
     return _dec.decode_attention(q, k, v, kv_mask, blk_s=blk_s,
                                  interpret=(m == "interpret"))
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths):
+    m = _mode()
+    if m == "ref":
+        return _ref.paged_decode_attention_ref(q, k_pages, v_pages,
+                                               block_table, lengths)
+    return _pdec.paged_decode_attention(q, k_pages, v_pages, block_table,
+                                        lengths, interpret=(m == "interpret"))
 
 
 def xmodal_score(token_embs, mask, visual_feats, text_feats, *, blk: int = 128):

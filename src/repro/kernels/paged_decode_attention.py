@@ -1,0 +1,121 @@
+"""Paged flash-decode Pallas TPU kernel: one query token vs. KV *pages*.
+
+The contiguous flash-decode kernel (``decode_attention.py``) streams a
+dense ``(B, S, Hkv, hd)`` cache; its HBM traffic scales with
+``slots × cache_len`` even when most slots hold short, early-stopped CAMD
+candidates. This kernel instead reads KV through a **block table**: the
+cache is a shared pool of ``(P, page_size, Hkv, hd)`` pages and each
+batch row names its pages in ``block_table[b, i]``. HBM traffic scales
+with *live* tokens — the roofline term that dominates decode.
+
+Mechanics: the block table and per-row live lengths arrive as
+scalar-prefetch operands (``pltpu.PrefetchScalarGridSpec``) so the page
+index feeds the BlockSpec index map — the DMA engine fetches exactly the
+page ``block_table[b, i]`` for grid step ``(b, h, i)``. Page-index is the
+minor-most grid dim; running max/sum/acc live in VMEM scratch exactly
+like the contiguous kernel, so fully-masked trailing pages wash out of
+the online softmax (alpha underflows to 0 when a real max arrives;
+garbage from a masked-prefix page is erased the same way).
+
+GQA-aware like ``_decode_kernel``: the G query heads of one kv head form
+the sublane dim of the score matmul, so each page is read once per
+group, not once per query head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float,
+                         page_size: int, n_pages: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (ps, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    length = len_ref[b]
+    # token j of logical page i sits at absolute position i*ps + j; only
+    # positions below the row's live length attend. (>=2D iota for TPU.)
+    pos = i * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    valid = pos < length                                   # (1, ps)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, ps)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot(p, v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(i == n_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                           interpret: bool = False):
+    """q: (B, 1, H, hd); k_pages/v_pages: (P, page_size, Hkv, hd);
+    block_table: (B, n_pages) int32 page ids per row (entries past the
+    live length may point anywhere valid — they are masked); lengths:
+    (B,) int32 live token count per row (>= 1).
+
+    Returns (B, 1, H, hd).
+    """
+    B, _, H, hd = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    n_pages = block_table.shape[1]
+    G = H // Hkv
+    scale = hd ** -0.5
+    qg = q[:, 0].reshape(B, Hkv, G, hd)
+    bt = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
+    ln = lengths.astype(jnp.int32)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               page_size=ps, n_pages=n_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # block table + lengths
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, i, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        interpret=interpret,
+    )(bt, ln, qg, k_pages, v_pages)
+    return out.reshape(B, 1, H, hd)

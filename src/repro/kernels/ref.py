@@ -46,6 +46,24 @@ def decode_attention_ref(q, k, v, kv_mask):
     return out.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lengths):
+    """q: (B,1,H,hd); k_pages/v_pages: (P,ps,Hkv,hd);
+    block_table: (B,n) int32 page ids; lengths: (B,) int32 live tokens.
+
+    Gathers each row's pages into a contiguous (B, n*ps, Hkv, hd) view
+    (position p of row b lives at page block_table[b, p//ps], offset
+    p%ps) and reduces to the contiguous oracle with an
+    ``arange < length`` validity mask.
+    """
+    P, ps = k_pages.shape[:2]
+    bt = jnp.clip(block_table, 0, P - 1)
+    B, n = bt.shape
+    k = k_pages[bt].reshape(B, n * ps, *k_pages.shape[2:])
+    v = v_pages[bt].reshape(B, n * ps, *v_pages.shape[2:])
+    mask = jnp.arange(n * ps)[None, :] < lengths[:, None]
+    return decode_attention_ref(q, k, v, mask)
+
+
 def xmodal_score_ref(token_embs, mask, visual_feats, text_feats):
     """Eq. 8-9 oracle — mirrors repro.core.scoring.cross_modal_consistency."""
 

@@ -1,7 +1,7 @@
 """Serving launcher: load (or train) a model and serve requests with CAMD.
 
     python -m repro.launch.serve --arch qwen3-0.6b --reduced --mode camd \
-        --requests 8
+        --requests 8 --impl paged --page-size 16
 """
 import argparse
 
@@ -10,7 +10,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.config import CAMDConfig, SamplingConfig
+from repro.config import CAMDConfig, PagedKVConfig, SamplingConfig
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import Request, ServeEngine
@@ -28,6 +28,11 @@ def main():
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--impl", default="xla",
+                    choices=["xla", "pallas", "paged", "paged_pallas"])
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV pool size; 0 = dense-equivalent worst case")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -45,6 +50,9 @@ def main():
         sampling=SamplingConfig(max_new_tokens=args.max_new),
         camd=CAMDConfig(),
         mode=args.mode, max_new_tokens=args.max_new, eos_id=1,
+        impl=args.impl,
+        paged_kv=PagedKVConfig(page_size=args.page_size,
+                               num_pages=args.num_pages),
         seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -61,6 +69,11 @@ def main():
     print(f"engine: {eng.total_steps} steps, {eng.total_tokens} tokens, "
           f"{eng.total_tokens / max(eng.total_steps * eng.B, 1):.2f} "
           f"slot-efficiency")
+    if eng.paged:
+        s = eng.kv_stats()
+        print(f"paged kv: peak {s['max_in_use']}/{s['num_pages']} pages "
+              f"({s['peak_kv_bytes'] / 1e6:.2f} MB resident at peak vs "
+              f"{s['dense_equiv_bytes'] / 1e6:.2f} MB dense-equivalent)")
 
 
 if __name__ == "__main__":

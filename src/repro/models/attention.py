@@ -199,13 +199,90 @@ def cache_write(cache, k_new, v_new, pos):
     return {"k": k, "v": v}
 
 
+def make_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                        dtype):
+    """A shared pool of KV pages (no batch axis — slots reference pages
+    through a block table). Page 0 is conventionally the quarantine page
+    idle slots write into; allocators should never hand it out."""
+    hd = cfg.resolved_head_dim
+    return {
+        "k_pages": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd),
+                             dtype=dtype),
+        "v_pages": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd),
+                             dtype=dtype),
+    }
+
+
+def paged_cache_write(cache, k_new, v_new, pos, block_table):
+    """Write one token into the page pool through the block table.
+
+    k_new/v_new: (B, 1, Hkv, hd); pos: (B,) absolute positions;
+    block_table: (B, n_pages) int32. Token at position p of row b lands
+    in page ``block_table[b, p // ps]`` at offset ``p % ps``.
+
+    This is a per-row scatter — unlike ``cache_write``'s select, it is
+    NOT safe under a context-parallel (S-sharded) cache (the paged pool
+    is replicated/unsharded; sharding a paged pool means sharding the
+    pool axis, which keeps the scatter local). Rows whose pos has run
+    past the table (idle slots) clamp to the last logical page; their
+    block-table row should point at the quarantine page.
+    """
+    P, ps = cache["k_pages"].shape[:2]
+    n_pages = block_table.shape[1]
+    logical = jnp.clip(pos // ps, 0, n_pages - 1)                  # (B,)
+    page = jnp.take_along_axis(block_table, logical[:, None], axis=1)[:, 0]
+    page = jnp.clip(page, 0, P - 1)
+    off = jnp.mod(pos, ps)
+    k = cache["k_pages"].at[page, off].set(
+        k_new[:, 0].astype(cache["k_pages"].dtype), mode="drop")
+    v = cache["v_pages"].at[page, off].set(
+        v_new[:, 0].astype(cache["v_pages"].dtype), mode="drop")
+    return {"k_pages": k, "v_pages": v}
+
+
+def attn_decode_paged(params, cfg: ModelConfig, x, cache, pos, block_table,
+                      *, impl: str = "xla"):
+    """One-token attention against a paged cache.
+
+    cache: {"k_pages", "v_pages"} pool from ``make_paged_kv_cache``;
+    block_table: (B, n_pages) int32. Windowed attention is not paged
+    (its dense ring is already bounded by the window).
+
+    The XLA path gathers the row's pages into a contiguous
+    (B, n_pages*ps, Hkv, hd) view and runs the exact same ``sdpa`` with
+    the exact same validity mask as the dense ring path (for
+    pos < cache_len the ring mask reduces to ``slot <= pos``), so its
+    outputs are bit-identical to ``attn_decode`` on a dense cache — the
+    property the serving regression tests pin down.
+    """
+    B = x.shape[0]
+    positions = pos[:, None].astype(jnp.int32)              # (B,1)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    cache = paged_cache_write(cache, k_new, v_new, pos, block_table)
+    lengths = pos + 1
+    if impl == "pallas":
+        from repro.kernels import ops
+        out = ops.paged_decode_attention(q, cache["k_pages"],
+                                         cache["v_pages"], block_table,
+                                         lengths)
+    else:
+        P, ps = cache["k_pages"].shape[:2]
+        bt = jnp.clip(block_table, 0, P - 1)
+        k = cache["k_pages"][bt].reshape(B, -1, *cache["k_pages"].shape[2:])
+        v = cache["v_pages"][bt].reshape(B, -1, *cache["v_pages"].shape[2:])
+        kv_mask = jnp.arange(k.shape[1])[None, :] < lengths[:, None]
+        out = sdpa(q, k, v, causal=False, kv_mask=kv_mask)
+    return dense(params["wo"], out.reshape(B, 1, -1)), cache
+
+
 def attn_decode(params, cfg: ModelConfig, x, cache, pos, *, window: int = 0,
-                impl: str = "xla", cross_kv=None):
+                impl: str = "xla", cross_kv=None, block_table=None):
     """One-token attention against the cache.
 
     x: (B, 1, d); pos: (B,) int32 — per-row absolute position of the new
     token (rows may be at different depths under continuous batching).
-    Returns (out (B,1,d), new_cache).
+    Returns (out (B,1,d), new_cache). A cache holding "k_pages" routes
+    to the paged path (``block_table`` required).
     """
     B = x.shape[0]
     hd = cfg.resolved_head_dim
@@ -214,6 +291,12 @@ def attn_decode(params, cfg: ModelConfig, x, cache, pos, *, window: int = 0,
         k, v = cross_kv
         out = sdpa(q, k, v, causal=False)
         return dense(params["wo"], out.reshape(B, 1, -1)), cache
+
+    if "k_pages" in cache:
+        assert window == 0, "windowed attention layers are not paged"
+        assert block_table is not None, "paged cache needs a block table"
+        return attn_decode_paged(params, cfg, x, cache, pos, block_table,
+                                 impl=impl)
 
     positions = pos[:, None].astype(jnp.int32)          # (B,1)
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)

@@ -96,12 +96,12 @@ def block_prefill(params: Params, cfg: ModelConfig, kind: str, x, positions,
 
 
 def block_decode(params: Params, cfg: ModelConfig, kind: str, x, cache_entry,
-                 pos, impl: str) -> Tuple[jax.Array, Any]:
+                 pos, impl: str, block_table=None) -> Tuple[jax.Array, Any]:
     h = rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind in (ATTN, LOCAL_ATTN):
         y, entry = attn_lib.attn_decode(params["attn"], cfg, h, cache_entry,
                                         pos, window=_window_for(cfg, kind),
-                                        impl=impl)
+                                        impl=impl, block_table=block_table)
         x = x + y
         if _has_mlp(cfg, kind):
             x, _ = _mlp_part(params, cfg, x)
@@ -253,6 +253,36 @@ def make_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
     }
 
 
+def make_paged_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
+                     page_size: int, num_pages: int):
+    """Decode cache with full-attention KV held as a shared page pool.
+
+    Full-attention entries become batchless (num_pages, page_size, Hkv,
+    hd) pools addressed through ``cache["block_table"]`` (B, n_pages);
+    windowed attention / SSM / RG-LRU entries keep their dense per-slot
+    state (they are already O(window/state), not O(cache_len)).
+    """
+    assert cache_len % page_size == 0, (cache_len, page_size)
+    pat, n_super, tail = _pattern_split(cfg)
+
+    def entry(kind):
+        if kind == ATTN and cfg.attn_window == 0:
+            return attn_lib.make_paged_kv_cache(cfg, num_pages, page_size,
+                                                dtype)
+        return block_cache(cfg, kind, batch, cache_len, dtype)
+
+    def stack_entries(kind):
+        e = entry(kind)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_super,) + x.shape), e)
+
+    return {
+        "super": tuple(stack_entries(k) for k in pat),
+        "tail": tuple(entry(k) for k in tail),
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "block_table": jnp.zeros((batch, cache_len // page_size), jnp.int32),
+    }
+
+
 def transformer_prefill(params: Params, cfg: ModelConfig, tokens, cache,
                         evidence=None, *, impl: str = "xla",
                         unroll: bool = False):
@@ -311,13 +341,15 @@ def transformer_decode(params: Params, cfg: ModelConfig, token, cache, *,
     if token.ndim == 1:
         token = token[:, None]
     pos = cache["pos"]
+    bt = cache.get("block_table")
     x = embed(params["embed"], token)                  # (B,1,d)
 
     def scan_body(x, inp):
         layer_params, entries = inp
         new_entries = []
         for p, kind, ce in zip(layer_params, pat, entries):
-            x, e = block_decode(p, cfg, kind, x, ce, pos, impl)
+            x, e = block_decode(p, cfg, kind, x, ce, pos, impl,
+                                block_table=bt)
             new_entries.append(e)
         return x, tuple(new_entries)
 
@@ -334,8 +366,10 @@ def transformer_decode(params: Params, cfg: ModelConfig, token, cache, *,
                                     (params["super"], cache["super"]))
     new_tail = []
     for p, kind, ce in zip(params["tail"], tail, cache["tail"]):
-        x, e = block_decode(p, cfg, kind, x, ce, pos, impl)
+        x, e = block_decode(p, cfg, kind, x, ce, pos, impl, block_table=bt)
         new_tail.append(e)
     logits, hidden = _logits(params, cfg, x)
     new_cache = {"super": new_super, "tail": tuple(new_tail), "pos": pos + 1}
+    if bt is not None:
+        new_cache["block_table"] = bt
     return logits[:, 0], hidden[:, 0], new_cache

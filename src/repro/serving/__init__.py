@@ -1,1 +1,2 @@
 from repro.serving.engine import EngineState, Request, Result, ServeEngine  # noqa: F401
+from repro.serving.page_pool import PagePool, PagePoolError  # noqa: F401

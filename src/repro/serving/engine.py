@@ -26,10 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import CAMDConfig, SamplingConfig
+from repro.config import CAMDConfig, PagedKVConfig, SamplingConfig
 from repro.core import controller as ctrl
 from repro.models.model import Model
 from repro.sampling.samplers import sample_token
+from repro.serving.page_pool import PagePool
 
 
 # ---------------------------------------------------------------------------
@@ -87,8 +88,10 @@ class ServeEngine:
                  eos_id: int = 1,
                  max_new_tokens: int = 64,
                  impl: str = "xla",
+                 paged_kv: PagedKVConfig = PagedKVConfig(),
                  seed: int = 0):
         assert mode in ("camd", "best_of_n", "self_consistency", "greedy")
+        assert impl in ("xla", "pallas", "paged", "paged_pallas")
         self.model, self.params = model, params
         self.cfg = model.cfg
         self.B = slots
@@ -102,6 +105,30 @@ class ServeEngine:
         self.eos_id = eos_id
         self.max_new = max_new_tokens
         self.impl = impl
+        # paged serving: KV lives in a shared page pool; "paged" runs the
+        # gather+sdpa XLA attention (bit-identical to the dense path),
+        # "paged_pallas" the block-table flash-decode kernel.
+        self.paged = impl.startswith("paged")
+        self._model_impl = {"paged": "xla", "paged_pallas": "pallas"}[impl] \
+            if self.paged else impl
+        if self.paged:
+            ps = paged_kv.page_size
+            assert cache_len % ps == 0, \
+                f"cache_len {cache_len} must be a multiple of page_size {ps}"
+            self.page_size = ps
+            self.pages_per_slot = cache_len // ps
+            num_pages = paged_kv.num_pages or slots * self.pages_per_slot + 1
+            self.pool = PagePool(num_pages, ps)
+            self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
+            self._slot_pos = np.zeros(slots, np.int64)
+            # admission control: pages a running candidate may still
+            # allocate are *reserved* at admit time, so a candidate that
+            # was admitted can always finish — pool pressure surfaces as
+            # queueing delay at _schedule, never as a mid-decode crash.
+            self._slot_reserved = np.zeros(slots, np.int64)
+            self._reserved = 0
+        else:
+            self.pool = None
         self.key = jax.random.PRNGKey(seed)
         self.has_evidence = bool(self.cfg.num_evidence_tokens)
 
@@ -123,7 +150,12 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def _blank_state(self) -> EngineState:
         B, V, d = self.B, self.V, self.d
-        cache = self.model.make_cache(B, self.cache_len, self._dtype)
+        if self.paged:
+            cache = self.model.make_paged_cache(
+                B, self.cache_len, self._dtype,
+                page_size=self.page_size, num_pages=self.pool.num_pages)
+        else:
+            cache = self.model.make_cache(B, self.cache_len, self._dtype)
         return EngineState(
             cache=cache,
             last_token=jnp.zeros((B,), jnp.int32),
@@ -147,7 +179,7 @@ class ServeEngine:
         @jax.jit
         def prefill(params, tokens, cache_row, evidence=None):
             lg, h, cache = model.prefill(params, tokens, cache_row,
-                                         evidence, impl=self.impl)
+                                         evidence, impl=self._model_impl)
             return lg, h, cache
 
         return prefill
@@ -158,8 +190,8 @@ class ServeEngine:
 
         @jax.jit
         def step(params, st: EngineState, key, evid_norm):
-            logits, hidden, cache = model.decode_step(params, st.last_token,
-                                                      st.cache, impl=self.impl)
+            logits, hidden, cache = model.decode_step(
+                params, st.last_token, st.cache, impl=self._model_impl)
             tok, lp = sample_token(key, logits.astype(jnp.float32), sampling,
                                    st.token_counts, st.bias, greedy=st.greedy)
             act = st.active
@@ -205,6 +237,11 @@ class ServeEngine:
     # host-side scheduling
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        # uids key the request table and results; a reused uid would
+        # resurrect a finished request's bookkeeping (cache_row=None).
+        if req.uid in self._reqs or any(r.uid == req.uid
+                                        for r in self._queue):
+            raise ValueError(f"duplicate request uid {req.uid}")
         self._queue.append(req)
 
     def _cache_batch_axis(self, path) -> int:
@@ -214,17 +251,201 @@ class ServeEngine:
                 return 1
         return 0
 
+    @staticmethod
+    def _scat_rows(big, row, idx, ax: int):
+        """Scatter a 1-row cache leaf into ``idx`` slots on batch axis
+        ``ax`` (0 = per-slot leaves, 1 = layer-stacked leaves)."""
+        r_rep = jnp.repeat(row, idx.shape[0], axis=ax)
+        if ax == 0:
+            return big.at[idx].set(r_rep)
+        return big.at[:, idx].set(r_rep)
+
     def _scatter_cache_rows(self, big, row, slot_ids: List[int]):
         idx = jnp.asarray(slot_ids)
+        return jax.tree_util.tree_map_with_path(
+            lambda path, b, r: self._scat_rows(
+                b, r, idx, self._cache_batch_axis(path)), big, row)
 
-        def scat(path, b, r):
-            ax = self._cache_batch_axis(path)
-            r_rep = jnp.repeat(r, len(slot_ids), axis=ax)
-            if ax == 0:
-                return b.at[idx].set(r_rep)
-            return b.at[:, idx].set(r_rep)
+    # -- paged cache plumbing ------------------------------------------
+    def _seed_paged_slots(self, info, slot_ids: List[int]):
+        """Point ``slot_ids`` at the request's prompt pages.
 
-        return jax.tree_util.tree_map_with_path(scat, big, row)
+        Full prompt pages are written to the pool once per request and
+        *shared* (refcounted) across its candidates; the partially-filled
+        tail page — the first page any candidate will write into, i.e.
+        the CoW divergence point — is copied per candidate. Dense
+        (non-paged: windowed attn / SSM / RG-LRU) entries scatter as in
+        the contiguous path."""
+        cache = self.state.cache
+        row = info["cache_row"]
+        L = int(row["pos"][0])                   # prompt incl. evidence
+        ps = self.page_size
+        assert L + self.max_new <= self.cache_len, \
+            f"prompt {L} + max_new {self.max_new} overflows paged cache " \
+            f"of {self.cache_len} (paged KV does not ring-wrap)"
+        full, tail_len = divmod(L, ps)
+        if "prompt_pages" not in info:
+            # one pool hold per request, released when the request finishes
+            info["prompt_pages"] = self.pool.alloc(full)
+            cache = self._write_pages(cache, row, info["prompt_pages"], 0)
+        bt_rows = np.zeros((len(slot_ids), self.pages_per_slot), np.int32)
+        tails = []
+        for j, s in enumerate(slot_ids):
+            pages = list(info["prompt_pages"])
+            self.pool.share(pages)
+            if tail_len:
+                tail = self.pool.alloc(1)
+                tails += tail
+                pages += tail
+            self._slot_pages[s] = pages
+            self._slot_pos[s] = L
+            future = self._pages_per_candidate(L) - (1 if tail_len else 0)
+            self._slot_reserved[s] = future
+            self._reserved += future
+            bt_rows[j, :len(pages)] = pages
+        if tails:
+            # every candidate's tail page holds the same prompt bytes:
+            # one broadcast scatter, not one full-pool copy per candidate
+            cache = self._write_pages(cache, row, tails, full * ps,
+                                      broadcast=True)
+        idx = jnp.asarray(slot_ids)
+        cache = {**cache,
+                 "block_table": cache["block_table"].at[idx].set(
+                     jnp.asarray(bt_rows)),
+                 "pos": cache["pos"].at[idx].set(jnp.int32(L))}
+        return self._scatter_dense_entries(cache, row, slot_ids)
+
+    def _pages_per_candidate(self, prompt_len: int) -> int:
+        """Pages a candidate may allocate beyond the shared prompt pages:
+        its private tail copy plus every boundary crossed while decoding
+        up to ``max_new`` tokens."""
+        ps = self.page_size
+        total = -((prompt_len + self.max_new) // -ps)        # ceil
+        return total - prompt_len // ps
+
+    def _paged_affordable(self, info, want: int) -> int:
+        """How many candidates of this request fit in the pool right now
+        (free pages minus reservations held by running candidates)."""
+        L = int(info["cache_row"]["pos"][0])
+        per_cand = self._pages_per_candidate(L)
+        need_hold = 0 if "prompt_pages" in info else L // self.page_size
+        avail = self.pool.free_pages - self._reserved - need_hold
+        return max(0, min(want, avail // max(per_cand, 1)))
+
+    def _write_pages(self, cache, row, pages: List[int], start: int,
+                     broadcast: bool = False):
+        """Copy prefill KV of the 1-row dense prefill cache into the given
+        pool pages, every attention layer at once (stacked super entries +
+        tail). Consecutive spans per page by default; ``broadcast=True``
+        writes the single page-sized span at ``start`` into ALL pages
+        (identical CoW tail copies for a round's candidates)."""
+        if not pages:
+            return cache
+        n, ps = len(pages), self.page_size
+        span = ps if broadcast else n * ps
+        pg = jnp.asarray(pages)
+
+        def seed(pool, rk):
+            if pool.ndim == 5:        # stacked: (n_super, P, ps, Hkv, hd)
+                seg = jax.lax.dynamic_slice_in_dim(rk[:, 0], start, span,
+                                                   axis=1)
+                seg = seg.reshape(pool.shape[0], -1, *pool.shape[2:])
+                if broadcast:
+                    seg = jnp.broadcast_to(seg, (pool.shape[0], n)
+                                           + pool.shape[2:])
+                return pool.at[:, pg].set(seg.astype(pool.dtype))
+            seg = jax.lax.dynamic_slice_in_dim(rk[0], start, span, axis=0)
+            seg = seg.reshape(-1, *pool.shape[1:])
+            if broadcast:
+                seg = jnp.broadcast_to(seg, (n,) + pool.shape[1:])
+            return pool.at[pg].set(seg.astype(pool.dtype))
+
+        def seed_entries(entries, row_entries):
+            out = []
+            for ce, re_ in zip(entries, row_entries):
+                if isinstance(ce, dict) and "k_pages" in ce:
+                    ce = {"k_pages": seed(ce["k_pages"], re_["k"]),
+                          "v_pages": seed(ce["v_pages"], re_["v"])}
+                out.append(ce)
+            return tuple(out)
+
+        return {**cache,
+                "super": seed_entries(cache["super"], row["super"]),
+                "tail": seed_entries(cache["tail"], row["tail"])}
+
+    def _scatter_dense_entries(self, cache, row, slot_ids: List[int]):
+        """Scatter the non-paged cache entries (windowed attn rings, SSM
+        and RG-LRU states) of the prefill row into the given slots.
+        Axes follow ``_cache_batch_axis``: "super" leaves are
+        layer-stacked (batch at 1), tail leaves are per-slot (batch 0)."""
+        idx = jnp.asarray(slot_ids)
+
+        def scatter_entries(entries, row_entries, ax):
+            out = []
+            for ce, re_ in zip(entries, row_entries):
+                if not (isinstance(ce, dict) and "k_pages" in ce):
+                    ce = jax.tree.map(
+                        lambda b, r: self._scat_rows(b, r, idx, ax), ce, re_)
+                out.append(ce)
+            return tuple(out)
+
+        return {**cache,
+                "super": scatter_entries(cache["super"], row["super"], 1),
+                "tail": scatter_entries(cache["tail"], row["tail"], 0)}
+
+    def _alloc_step_pages(self):
+        """Before each decode step, hand a fresh page to every live slot
+        whose next write crosses a page boundary, and mirror the
+        allocation into the device block table."""
+        rows, cols, vals = [], [], []
+        for s in range(self.B):
+            if self._slot_req[s] < 0:
+                continue
+            p = int(self._slot_pos[s])
+            if p % self.page_size == 0:
+                li = p // self.page_size
+                if li >= self.pages_per_slot:
+                    raise RuntimeError(
+                        f"slot {s} ran past the paged cache "
+                        f"({p} >= {self.cache_len})")
+                page = self.pool.alloc(1)[0]
+                self._slot_pages[s].append(page)
+                if self._slot_reserved[s] > 0:
+                    self._slot_reserved[s] -= 1
+                    self._reserved -= 1
+                rows.append(s)
+                cols.append(li)
+                vals.append(page)
+            self._slot_pos[s] += 1
+        if rows:
+            cache = self.state.cache
+            bt = cache["block_table"].at[
+                jnp.asarray(rows), jnp.asarray(cols)].set(
+                    jnp.asarray(vals, jnp.int32))
+            self.state = self.state._replace(
+                cache={**cache, "block_table": bt})
+
+    def kv_stats(self) -> Dict[str, Any]:
+        """Pool accounting incl. resident KV bytes vs. the dense
+        worst case (slots × cache_len) the paged layout replaces."""
+        assert self.paged
+        stats = self.pool.stats()
+
+        def bytes_per_page(leaf):
+            P = leaf.shape[1] if leaf.ndim == 5 else leaf.shape[0]
+            return leaf.size // P * leaf.dtype.itemsize
+
+        bpp = 0
+        for entries in (self.state.cache["super"], self.state.cache["tail"]):
+            for e in entries:
+                if isinstance(e, dict) and "k_pages" in e:
+                    bpp += bytes_per_page(e["k_pages"])
+                    bpp += bytes_per_page(e["v_pages"])
+        stats["bytes_per_page"] = bpp
+        stats["resident_kv_bytes"] = stats["in_use"] * bpp
+        stats["peak_kv_bytes"] = stats["max_in_use"] * bpp
+        stats["dense_equiv_bytes"] = self.B * self.pages_per_slot * bpp
+        return stats
 
     def _admit(self, req: Request, slot_ids: List[int], bias_row=None,
                first_logits=None):
@@ -232,7 +453,11 @@ class ServeEngine:
         token of each candidate from the prefill logits."""
         info = self._reqs[req.uid]
         st = self.state
-        cache = self._scatter_cache_rows(st.cache, info["cache_row"], slot_ids)
+        if self.paged:
+            cache = self._seed_paged_slots(info, slot_ids)
+        else:
+            cache = self._scatter_cache_rows(st.cache, info["cache_row"],
+                                             slot_ids)
         idx = jnp.asarray(slot_ids)
         n = len(slot_ids)
 
@@ -337,12 +562,23 @@ class ServeEngine:
         return min(self.n_candidates, self.B)
 
     def _schedule(self):
-        """Fill free slots: queued requests first, then next rounds."""
+        """Fill free slots: queued requests first, then next rounds.
+
+        Paged backpressure: a request is only admitted when the pool can
+        cover its candidates' worst-case pages (``_paged_affordable``);
+        otherwise it waits in the queue / stays pending until running
+        candidates finish and return pages."""
         free = self._free_slots()
         while free and self._queue:
-            req = self._queue.pop(0)
-            self._prefill_request(req)
+            req = self._queue[0]
+            if req.uid not in self._reqs:
+                self._prefill_request(req)
             take = min(self._per_round(), len(free))
+            if self.paged:
+                take = self._paged_affordable(self._reqs[req.uid], take)
+                if take <= 0:
+                    break             # wait for pages, keep queue order
+            self._queue.pop(0)
             ids, free = free[:take], free[take:]
             self._admit(req, ids)
         # continuing requests wanting another round
@@ -352,6 +588,8 @@ class ServeEngine:
             if not free:
                 break
             take = min(self._needed(info), len(free))
+            if self.paged:
+                take = self._paged_affordable(info, take)
             if take <= 0:
                 continue
             ids, free = free[:take], free[take:]
@@ -392,6 +630,18 @@ class ServeEngine:
         self._slot_req[slot] = -1
         self._slot_cand[slot] = -1
         self.total_tokens += n
+        if self.paged:
+            # return the candidate's pages (shared prompt pages just drop
+            # a holder) and quarantine the slot's block table so its dead
+            # writes land on page 0.
+            self.pool.free(self._slot_pages[slot])
+            self._slot_pages[slot] = []
+            self._reserved -= int(self._slot_reserved[slot])
+            self._slot_reserved[slot] = 0
+            cache = self.state.cache
+            bt = cache["block_table"].at[slot].set(0)
+            self.state = self.state._replace(
+                cache={**cache, "block_table": bt})
 
         # round complete when no slots of this request remain active
         if not any(self._slot_req[s] == uid for s in range(self.B)):
@@ -429,6 +679,8 @@ class ServeEngine:
         if stopped:
             info["done"] = True
             info["cache_row"] = None  # free the prompt cache
+            if self.paged and "prompt_pages" in info:
+                self.pool.free(info.pop("prompt_pages"))
         else:
             info["pending_round"] = True
 
@@ -444,11 +696,29 @@ class ServeEngine:
                 if self._queue or any(not i["done"] and i.get("pending_round")
                                       for i in self._reqs.values()):
                     self._schedule()
+                    if self.paged and not bool(jnp.any(self.state.active)):
+                        # nothing running and nothing admissible: the pool
+                        # cannot cover even one candidate of the waiting
+                        # work (FIFO head-of-line) — a sizing error, not a
+                        # transient.
+                        blocked = self._queue[0].uid if self._queue else \
+                            next(uid for uid, i in self._reqs.items()
+                                 if not i["done"])
+                        done_n = sum(1 for i in self._reqs.values()
+                                     if i["done"])
+                        raise RuntimeError(
+                            f"paged KV pool ({self.pool.num_pages} pages of "
+                            f"{self.page_size}) cannot admit request "
+                            f"{blocked} ({done_n} completed results "
+                            f"discarded) — raise num_pages or lower "
+                            f"max_new_tokens/prompt lengths")
                     if self.has_evidence:
                         evid = self._gather_evid()
                     continue
                 break
             self.key, k = jax.random.split(self.key)
+            if self.paged:
+                self._alloc_step_pages()
             self.state, done = self._step_fn(self.params, self.state, k, evid)
             self.total_steps += 1
             done_np = np.asarray(done)

@@ -1,0 +1,121 @@
+"""Host-side KV page-pool allocator for the paged serving path.
+
+The device side holds a single shared pool of KV pages per attention
+layer (``models.attention.make_paged_kv_cache``); this class owns the
+*ids*: which pages are free, and how many holders reference each live
+page. Reference counting is what makes candidate prefill cheap — a
+request's R candidates `share()` the prompt's full pages and only copy
+the partially-filled tail page (copy-on-write at the first diverging
+token), so prompt KV is resident once per request, not once per
+candidate.
+
+Page 0 is reserved as the quarantine page: idle slots' block tables
+point at it and their dead writes land there. It is never allocated and
+never freed.
+
+All methods raise on misuse (double free, free of an unallocated page,
+over-allocation) rather than corrupting the table — the serving tests
+lean on these invariants.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+import numpy as np
+
+
+class PagePoolError(RuntimeError):
+    pass
+
+
+class PagePool:
+    def __init__(self, num_pages: int, page_size: int, *, reserved: int = 1):
+        if num_pages <= reserved:
+            raise PagePoolError(f"pool of {num_pages} pages has no "
+                                f"allocatable pages (reserved={reserved})")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.reserved = reserved
+        # LIFO free list: recently freed pages are re-used first (their
+        # contents are hot in cache and get overwritten anyway).
+        self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
+        self._refs = np.zeros(num_pages, np.int64)
+        self.max_in_use = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def in_use(self) -> int:
+        """Pages currently referenced by at least one holder."""
+        return int(np.count_nonzero(self._refs))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return int(self._refs[page])
+
+    def live_tokens_capacity(self) -> int:
+        return self.in_use * self.page_size
+
+    # ------------------------------------------------------------------
+    def alloc(self, n: int = 1) -> List[int]:
+        """Take ``n`` fresh pages (refcount 1 each)."""
+        if n < 0:
+            raise PagePoolError(f"alloc({n})")
+        if n > len(self._free):
+            raise PagePoolError(
+                f"out of KV pages: need {n}, have {len(self._free)} free of "
+                f"{self.num_pages} (in use: {self.in_use}) — raise num_pages "
+                f"or reduce slots/cache_len")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
+        self.max_in_use = max(self.max_in_use, self.in_use)
+        return pages
+
+    def share(self, pages: Iterable[int]):
+        """Add one holder to each page (prompt pages shared by a new
+        candidate)."""
+        for p in pages:
+            if self._refs[p] <= 0:
+                raise PagePoolError(f"share of unallocated page {p}")
+            self._refs[p] += 1
+
+    def free(self, pages: Iterable[int]):
+        """Drop one holder from each page; pages reaching zero return to
+        the free list (this is what lets an early-stopped easy request
+        immediately fund a hard one)."""
+        for p in pages:
+            if p < self.reserved:
+                raise PagePoolError(f"free of reserved page {p}")
+            if self._refs[p] <= 0:
+                raise PagePoolError(f"double free of page {p}")
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+
+    # ------------------------------------------------------------------
+    def check(self):
+        """Conservation invariant: every non-reserved page is either on
+        the free list (ref 0) or held (ref > 0), never both/neither."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise PagePoolError("free list contains duplicates")
+        for p in range(self.reserved, self.num_pages):
+            held = self._refs[p] > 0
+            if held == (p in free):
+                raise PagePoolError(
+                    f"page {p} violates conservation (refs={self._refs[p]}, "
+                    f"on_free_list={p in free})")
+        if any(p < self.reserved for p in free):
+            raise PagePoolError("reserved page on the free list")
+
+    def stats(self) -> dict:
+        return {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "in_use": self.in_use,
+            "free": self.free_pages,
+            "max_in_use": self.max_in_use,
+        }

@@ -4,8 +4,12 @@ shapes, expert counts, and top-k."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis;
+# a bare interpreter must still collect the suite (module-level skip)
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.config import ATTN, ModelConfig, MoEConfig
 from repro.models.moe import moe_apply, moe_apply_dense, moe_init

@@ -1,0 +1,78 @@
+"""PagePool invariants: alloc/free conservation, refcounted sharing
+(the CoW prompt-page mechanism), and misuse detection."""
+import pytest
+
+from repro.serving.page_pool import PagePool, PagePoolError
+
+
+def test_alloc_free_conservation():
+    pool = PagePool(17, 16)
+    a = pool.alloc(5)
+    b = pool.alloc(3)
+    assert len(set(a) | set(b)) == 8          # all distinct
+    assert 0 not in a + b                      # quarantine never handed out
+    assert pool.in_use == 8 and pool.free_pages == 8
+    pool.check()
+    pool.free(a)
+    assert pool.in_use == 3 and pool.free_pages == 13
+    pool.check()
+    pool.free(b)
+    assert pool.in_use == 0 and pool.free_pages == 16
+    pool.check()
+
+
+def test_freed_pages_are_reusable():
+    pool = PagePool(5, 16)                     # 4 allocatable
+    a = pool.alloc(4)
+    with pytest.raises(PagePoolError):
+        pool.alloc(1)                          # exhausted
+    pool.free(a[:2])
+    assert sorted(pool.alloc(2)) == sorted(a[:2])
+    pool.check()
+
+
+def test_share_refcounts():
+    """Prompt pages shared across R candidates survive R-1 frees — the
+    conservation CoW relies on."""
+    pool = PagePool(10, 16)
+    prompt = pool.alloc(2)                     # request hold
+    for _ in range(3):                         # 3 candidates share
+        pool.share(prompt)
+    assert all(pool.refcount(p) == 4 for p in prompt)
+    for _ in range(3):
+        pool.free(prompt)                      # candidates finish
+    assert pool.in_use == 2                    # request hold keeps them live
+    pool.check()
+    pool.free(prompt)                          # request done
+    assert pool.in_use == 0
+    pool.check()
+
+
+def test_double_free_raises():
+    pool = PagePool(10, 16)
+    a = pool.alloc(1)
+    pool.free(a)
+    with pytest.raises(PagePoolError):
+        pool.free(a)
+    pool.check()
+
+
+def test_share_unallocated_raises():
+    pool = PagePool(10, 16)
+    with pytest.raises(PagePoolError):
+        pool.share([3])
+
+
+def test_free_reserved_raises():
+    pool = PagePool(10, 16)
+    with pytest.raises(PagePoolError):
+        pool.free([0])
+
+
+def test_max_in_use_high_water():
+    pool = PagePool(10, 16)
+    a = pool.alloc(6)
+    pool.free(a)
+    pool.alloc(2)
+    assert pool.max_in_use == 6
+    assert pool.live_tokens_capacity() == 2 * 16
