@@ -1,0 +1,147 @@
+"""Serving throughput — macro-step fused decode vs the per-token loop.
+
+Measures the engine-level win of the device-resident decode loop
+(``ServeEngine(macro_steps=K)``, a ``lax.while_loop`` over K
+decode+sample+CAMD steps with pre-staged page frontiers) against the
+legacy host loop (``macro_steps=0``): tokens/sec, wall-clock, and —
+the quantity the refactor exists to shrink — host synchronizations per
+generated token.
+
+Grid: macro-step K ∈ {0 (per-token loop), 1, 8, 32} × impl ∈ {xla, paged}
+× mode ∈ {camd, best_of_n}. Each cell warms up once (jit compile +
+first-run allocation on a throwaway request batch), then times a fresh
+request batch on the same engine so compiled functions are reused.
+
+Writes ``BENCH_serve.json``; ``--smoke`` runs a reduced grid for CI.
+
+  python -m benchmarks.bench_serve [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CAMDConfig, ModelConfig, PagedKVConfig, SamplingConfig
+from repro.models import build_model
+from repro.serving import Request, ServeEngine
+
+
+def _bench_model():
+    cfg = ModelConfig(
+        name="bench-serve-lm", family="dense", num_layers=4, d_model=256,
+        num_heads=4, num_kv_heads=2, d_ff=768, vocab_size=512,
+        head_dim=64, tie_embeddings=True, dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _submit(eng, cfg, n, uid0=0, seed=0, plen=12):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        eng.submit(Request(uid=uid0 + i, prompt=rng.integers(
+            2, cfg.vocab_size, plen).astype(np.int32)))
+
+
+def _run_cell(cfg, model, params, *, impl, mode, macro_steps, requests,
+              max_new):
+    eng = ServeEngine(
+        model, params, slots=8, cache_len=128,
+        sampling=SamplingConfig(max_new_tokens=max_new, temperature=0.8),
+        camd=CAMDConfig(samples_per_round=4, max_rounds=2, min_samples=4),
+        mode=mode, n_candidates=4, max_new_tokens=max_new, eos_id=1,
+        impl=impl, paged_kv=PagedKVConfig(page_size=16),
+        macro_steps=macro_steps,
+        # the pre-refactor loop also predates bucketed prefill
+        bucket_prefill=macro_steps > 0,
+        seed=0)
+    # warmup: compile every jitted fn on a throwaway batch of the SAME
+    # size as the timed one (prefill buckets / admission widths are
+    # shape-specialized — a mismatch would put recompiles on the clock)
+    _submit(eng, cfg, requests, uid0=10_000, seed=1)
+    eng.run()
+    eng.total_steps = eng.total_tokens = 0
+    eng.macro_launches = eng.host_syncs = 0
+    _submit(eng, cfg, requests, uid0=0, seed=2)
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    return {
+        "impl": impl,
+        "mode": mode,
+        "macro_steps": macro_steps,
+        "wall_s": wall,
+        "tokens": eng.total_tokens,
+        "device_steps": eng.total_steps,
+        "tokens_per_s": eng.total_tokens / max(wall, 1e-9),
+        "host_syncs": eng.host_syncs,
+        "syncs_per_token": eng.host_syncs / max(eng.total_tokens, 1),
+        "macro_launches": eng.macro_launches,
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    cfg, model, params = _bench_model()
+    if smoke:
+        impls, modes, ks = ["xla", "paged"], ["camd"], [0, 8]
+        requests, max_new = 3, 16
+    else:
+        impls, modes, ks = ["xla", "paged"], ["camd", "best_of_n"], \
+            [0, 1, 8, 32]
+        requests, max_new = 6, 32
+    rows = []
+    for impl in impls:
+        for mode in modes:
+            for k in ks:
+                row = _run_cell(cfg, model, params, impl=impl, mode=mode,
+                                macro_steps=k, requests=requests,
+                                max_new=max_new)
+                rows.append(row)
+                print(f"{impl:6s} {mode:10s} K={k:<3d} "
+                      f"{row['tokens_per_s']:9.1f} tok/s  "
+                      f"{row['syncs_per_token']:.4f} syncs/tok  "
+                      f"wall {row['wall_s']:.2f}s")
+    # headline: fused-vs-legacy speedup per (impl, mode)
+    speedups = {}
+    for impl in impls:
+        for mode in modes:
+            base = next(r for r in rows if r["impl"] == impl
+                        and r["mode"] == mode and r["macro_steps"] == ks[0])
+            best = max((r for r in rows if r["impl"] == impl
+                        and r["mode"] == mode), key=lambda r: r["tokens_per_s"])
+            speedups[f"{impl}/{mode}"] = {
+                "best_k": best["macro_steps"],
+                "tokens_per_s_legacy": base["tokens_per_s"],
+                "tokens_per_s_best": best["tokens_per_s"],
+                "speedup": best["tokens_per_s"] / max(base["tokens_per_s"],
+                                                      1e-9),
+                "sync_reduction":
+                    base["syncs_per_token"] / max(best["syncs_per_token"],
+                                                  1e-9),
+            }
+    out = {"config": {"smoke": smoke, "requests": requests,
+                      "max_new": max_new, "slots": 8,
+                      "backend": jax.default_backend()},
+           "rows": rows, "speedups": speedups}
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print("wrote BENCH_serve.json")
+    if smoke:
+        # CI sanity: the fused path must actually amortize host syncs
+        fused = [r for r in rows if r["macro_steps"] >= 8]
+        legacy = [r for r in rows if r["macro_steps"] == 0]
+        assert all(r["tokens"] > 0 for r in rows)
+        assert min(f["syncs_per_token"] for f in fused) < \
+            min(l["syncs_per_token"] for l in legacy), \
+            "macro-step loop did not reduce host syncs per token"
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(smoke="--smoke" in sys.argv)

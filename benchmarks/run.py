@@ -19,6 +19,7 @@ def main() -> None:
     import benchmarks.bench_hallucination as halluc
     import benchmarks.bench_fig4 as fig4
     import benchmarks.bench_kernels as kernels
+    import benchmarks.bench_serve as serve
     import benchmarks.bench_table1 as table1
     import benchmarks.bench_theory as theory
     import benchmarks.roofline as roofline
@@ -34,6 +35,9 @@ def main() -> None:
         "hallucination": (halluc.run,
                           lambda r: f"-{r['reduction_pts']:.1f}pts_halluc"),
         "kernels": (kernels.run, lambda r: f"{len(r)}kernels"),
+        "serve": (serve.run,
+                  lambda r: "max_speedup={:.2f}x".format(
+                      max(s["speedup"] for s in r["speedups"].values()))),
         "roofline": (roofline.run,
                      lambda r: f"{r.get('summary', {}).get('fits', 0)}/{r.get('summary', {}).get('n', 0)}fit16GB"
                      if r.get("summary") else "no-dryrun-data"),

@@ -13,7 +13,9 @@ from repro.core.controller import (  # noqa: F401
     RoundInputs,
     batched_init,
     batched_round_update,
+    batched_round_update_assign,
     init_state,
     round_update,
+    round_update_assign,
     score_candidates,
 )

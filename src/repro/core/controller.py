@@ -67,6 +67,15 @@ def round_update(cfg: CAMDConfig, state: CAMDState, inp: RoundInputs
     Returns (new_state, guidance_bias (V,)) — the Eq. 16 mixture bias to
     apply to the next round's logits (zeros once stopped).
     """
+    state, bias, _ = round_update_assign(cfg, state, inp)
+    return state, bias
+
+
+def round_update_assign(cfg: CAMDConfig, state: CAMDState, inp: RoundInputs
+                        ) -> Tuple[CAMDState, jax.Array, jax.Array]:
+    """``round_update`` that also returns the per-candidate cluster
+    assignment (R,) int32 (-1 for invalid rows) — the serving engine
+    records it so self-consistency can vote by majority cluster."""
     valid = inp.valid & ~state.stopped
     scores = inp.scores * cfg.score_scale
     table, cluster_idx = clustering.assign_batch(
@@ -104,12 +113,21 @@ def round_update(cfg: CAMDConfig, state: CAMDState, inp: RoundInputs
         table=table, alpha=alpha, hist=hist, k_t=k_t, rounds=rounds,
         stopped=stopped, p_star=p_star, best_score=best_score,
         best_uid=best_uid, best_cluster=best_cluster, tokens_spent=tokens)
-    return new_state, bias
+    return new_state, bias, cluster_idx
 
 
 def batched_round_update(cfg: CAMDConfig):
     """vmapped round_update over a batch of requests (engine hot path)."""
     return jax.vmap(lambda s, i: round_update(cfg, s, i))
+
+
+def batched_round_update_assign(cfg: CAMDConfig):
+    """vmapped ``round_update_assign`` over a batch of requests.
+
+    This is the serving engine's round entry point: when a macro-step
+    returns several simultaneously-completed rounds, they all fold in one
+    jit call instead of one dispatch per request."""
+    return jax.vmap(lambda s, i: round_update_assign(cfg, s, i))
 
 
 def batched_init(cfg: CAMDConfig, n: int, emb_dim: int, vocab: int) -> CAMDState:

@@ -33,6 +33,13 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV pool size; 0 = dense-equivalent worst case")
+    ap.add_argument("--macro-steps", type=int, default=8,
+                    help="device decode steps per lax.while_loop launch; "
+                         "0 = legacy per-token host loop")
+    ap.add_argument("--no-bucket-prefill", action="store_true",
+                    help="disable length-bucketed batched prefill")
+    ap.add_argument("--prefill-bucket-min", type=int, default=16,
+                    help="smallest power-of-two prompt bucket")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -53,6 +60,9 @@ def main():
         impl=args.impl,
         paged_kv=PagedKVConfig(page_size=args.page_size,
                                num_pages=args.num_pages),
+        macro_steps=args.macro_steps,
+        bucket_prefill=not args.no_bucket_prefill,
+        prefill_bucket_min=args.prefill_bucket_min,
         seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -69,6 +79,9 @@ def main():
     print(f"engine: {eng.total_steps} steps, {eng.total_tokens} tokens, "
           f"{eng.total_tokens / max(eng.total_steps * eng.B, 1):.2f} "
           f"slot-efficiency")
+    print(f"macro-step: K={eng.macro_steps}, {eng.macro_launches} launches, "
+          f"{eng.host_syncs} host syncs "
+          f"({eng.host_syncs / max(eng.total_tokens, 1):.3f} per token)")
     if eng.paged:
         s = eng.kv_stats()
         print(f"paged kv: peak {s['max_in_use']}/{s['num_pages']} pages "

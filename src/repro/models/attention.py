@@ -129,12 +129,21 @@ def sdpa(q, k, v, *, causal: bool, window: int = 0,
 
 
 def attn_prefill(params, cfg: ModelConfig, x, positions, *, window: int = 0,
-                 impl: str = "xla", cross_kv=None, causal: bool = True):
+                 impl: str = "xla", cross_kv=None, causal: bool = True,
+                 kv_mask=None):
     """Full-sequence attention. Returns (out, (k, v)) for cache seeding.
 
     ``cross_kv``: optional (k, v) from an encoder — if given, performs
     cross-attention (no causal mask, no rope on q/k mismatch handled by
     caller passing rope=False-projected kv).
+
+    ``kv_mask``: optional (B, L) key-validity mask for length-bucketed
+    batched prefill (rows right-padded to the bucket length). Causal
+    masking already keeps every *real* position exact under right-padding
+    (position i < L only attends j <= i < L), so the mask is defensive —
+    it additionally pins the pad positions' outputs. The Pallas flash
+    kernel has no mask argument; bucketed prefill on the pallas impl
+    relies on causality alone (real rows identical either way).
     """
     B, L, _ = x.shape
     if cross_kv is not None:
@@ -160,7 +169,7 @@ def attn_prefill(params, cfg: ModelConfig, x, positions, *, window: int = 0,
         # HBM cost on TPU. (§Perf iteration 12.)
         out = sdpa(q, _expand_kv(k, cfg.num_heads),
                    _expand_kv(v, cfg.num_heads),
-                   causal=causal, window=window)
+                   causal=causal, window=window, kv_mask=kv_mask)
     out = dense(params["wo"], out.reshape(B, L, -1))
     return out, (k, v)
 

@@ -69,14 +69,29 @@ class Model:
                                        page_size, num_pages)
 
     def prefill(self, params: Params, tokens, cache, evidence=None, *,
-                impl: str = "xla", unroll: bool = False):
+                impl: str = "xla", unroll: bool = False, lengths=None):
+        """``lengths``: optional (B,) int32 true per-row lengths (counting
+        evidence tokens) for length-bucketed batched prefill over
+        right-padded rows — see ``transformer_prefill``. Requires
+        ``supports_bucketed_prefill``."""
         if self.cfg.is_encoder_decoder:
             assert evidence is not None
+            assert lengths is None, "bucketed prefill is decoder-only"
             return encdec_lib.encdec_prefill(params, self.cfg, tokens, cache,
                                              evidence, impl=impl,
                                              unroll=unroll)
         return tf_lib.transformer_prefill(params, self.cfg, tokens, cache,
-                                          evidence, impl=impl, unroll=unroll)
+                                          evidence, impl=impl, unroll=unroll,
+                                          lengths=lengths)
+
+    @property
+    def supports_bucketed_prefill(self) -> bool:
+        """Right-padded bucketed prefill is exact only when every layer is
+        attention (causal masking makes pads invisible to real positions);
+        recurrent layers (SSM/RG-LRU) fold pads into their state."""
+        from repro.config import ATTN, LOCAL_ATTN
+        return (not self.cfg.is_encoder_decoder and
+                all(k in (ATTN, LOCAL_ATTN) for k in self.cfg.layer_kinds))
 
     def decode_step(self, params: Params, token, cache, *, impl: str = "xla",
                     unroll: bool = False):

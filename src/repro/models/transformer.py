@@ -73,13 +73,13 @@ def _window_for(cfg: ModelConfig, kind: str) -> int:
 
 
 def block_prefill(params: Params, cfg: ModelConfig, kind: str, x, positions,
-                  impl: str) -> Tuple[jax.Array, Any, Dict]:
+                  impl: str, kv_mask=None) -> Tuple[jax.Array, Any, Dict]:
     aux: Dict[str, jax.Array] = {}
     h = rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind in (ATTN, LOCAL_ATTN):
         y, (k, v) = attn_lib.attn_prefill(params["attn"], cfg, h, positions,
                                           window=_window_for(cfg, kind),
-                                          impl=impl)
+                                          impl=impl, kv_mask=kv_mask)
         x = x + y
         if _has_mlp(cfg, kind):
             x, aux = _mlp_part(params, cfg, x)
@@ -285,23 +285,36 @@ def make_paged_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
 
 def transformer_prefill(params: Params, cfg: ModelConfig, tokens, cache,
                         evidence=None, *, impl: str = "xla",
-                        unroll: bool = False):
+                        unroll: bool = False, lengths=None):
     """Prefill: run the full prompt, seed the cache.
 
-    Assumes every row of the batch has the same prompt length L (the
-    serving engine prefills per request group). Returns (logits_last (B,V),
+    Without ``lengths``, every row of the batch shares the same prompt
+    length L (the per-request serving path). With ``lengths`` ((B,) int32,
+    counting evidence tokens), rows are right-padded to a common bucket
+    length: last-token logits/hidden are gathered at each row's true last
+    position and the cache ``pos`` is seeded per row. Right-padding is
+    sound for attention layers because causal masking means a real
+    position never attends a pad; the pad K/V written beyond ``pos`` are
+    exactly the ring slots the decode validity mask rejects until they
+    are overwritten. Recurrent layers (SSM/RG-LRU) fold pad tokens into
+    their state, so callers must not bucket those architectures — the
+    serving engine gates on layer kinds. Returns (logits_last (B,V),
     hidden_last (B,d), cache).
     """
     pat, n_super, tail = _pattern_split(cfg)
     x = embed_inputs(params, cfg, tokens, evidence)
     B, L, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    kv_mask = None
+    if lengths is not None and impl == "xla":
+        kv_mask = jnp.arange(L)[None, :] < lengths[:, None]
 
     def scan_body(x, inp):
         layer_params, cache_entries = inp
         new_entries = []
         for p, kind, ce in zip(layer_params, pat, cache_entries):
-            x, entry, _ = block_prefill(p, cfg, kind, x, positions, impl)
+            x, entry, _ = block_prefill(p, cfg, kind, x, positions, impl,
+                                        kv_mask=kv_mask)
             new_entries.append(_seed_entry(cfg, kind, ce, entry))
         return x, tuple(new_entries)
 
@@ -318,11 +331,18 @@ def transformer_prefill(params: Params, cfg: ModelConfig, tokens, cache,
                                     (params["super"], cache["super"]))
     new_tail = []
     for p, kind, ce in zip(params["tail"], tail, cache["tail"]):
-        x, entry, _ = block_prefill(p, cfg, kind, x, positions, impl)
+        x, entry, _ = block_prefill(p, cfg, kind, x, positions, impl,
+                                    kv_mask=kv_mask)
         new_tail.append(_seed_entry(cfg, kind, ce, entry))
-    logits, hidden = _logits(params, cfg, x[:, -1:])
-    new_cache = {"super": new_super, "tail": tuple(new_tail),
-                 "pos": jnp.full((B,), L, jnp.int32)}
+    if lengths is None:
+        x_last = x[:, -1:]
+        pos = jnp.full((B,), L, jnp.int32)
+    else:
+        x_last = jnp.take_along_axis(
+            x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
+        pos = lengths.astype(jnp.int32)
+    logits, hidden = _logits(params, cfg, x_last)
+    new_cache = {"super": new_super, "tail": tuple(new_tail), "pos": pos}
     return logits[:, 0], hidden[:, 0], new_cache
 
 

@@ -75,6 +75,35 @@ def process_logits(logits, cfg: SamplingConfig, token_counts=None, bias=None):
     return logits
 
 
+def decode_step_key(base_key, step):
+    """PRNG key for global decode step ``step``.
+
+    The serving engine's fused loop derives per-step keys by *folding* the
+    step index into one base key instead of threading a split chain
+    through the loop carry — so the sampled stream at step t is a pure
+    function of (base_key, t), independent of how many steps each
+    ``lax.while_loop`` launch covers. This is what makes macro_steps=1 and
+    macro_steps=32 decode bit-identical token streams.
+    """
+    return jax.random.fold_in(base_key, step)
+
+
+def sample_token_batch(keys, logits, cfg: SamplingConfig, bias=None,
+                       greedy=None):
+    """Sample n first tokens from ONE shared logits row with n keys.
+
+    keys: (n, key_dim); logits: (1, V); bias: optional (1, V); greedy:
+    optional (1,) bool. Returns (tokens (n,), logprobs (n,)). vmap over
+    the keys keeps per-key results identical to n separate
+    ``sample_token`` calls while costing a single dispatch — the serving
+    engine uses this to admit a whole round of candidates at once.
+    """
+    tok, lp = jax.vmap(
+        lambda k: sample_token(k, logits, cfg, bias=bias, greedy=greedy)
+    )(keys)
+    return tok[:, 0], lp[:, 0]
+
+
 def sample_token(key, logits, cfg: SamplingConfig, token_counts=None,
                  bias=None, greedy=None):
     """Returns (token (B,), logprob (B,)) — logprob of the *sampled* token

@@ -6,11 +6,31 @@ adaptive allocation — more samples for hard requests, fewer for easy —
 falls out of slot scheduling: when a request reaches coverage its slots
 are freed and refilled from the queue, so the batch never decodes padding.
 
-The per-token hot path is ONE jit'd ``step``: decode -> sample ->
-incremental CAMD aggregates (S_gen, S_coh, S_align term-1, pooled
-embedding) with O(B·d) state — no (B, L, d) trajectory buffers. The
-round-level math (clustering, coverage, Dirichlet, mixture bias) runs in
-``repro.core.controller`` when a request's round completes.
+The decode hot path is a device-resident **macro-step**: one jitted call
+runs up to ``macro_steps`` decode+sample+CAMD-aggregate steps inside a
+``jax.lax.while_loop`` (the "outer while" serving idiom), early-exiting
+the moment any slot finishes so the host can fold the round. The host
+regains control only at candidate-completion / round boundaries — host
+synchronizations per generated token drop from ~1 (per-token loop) to
+O(1/macro_steps), which is what keeps dispatch latency off the hot path.
+
+Paged KV works inside the fused loop through *pre-staged page frontiers*:
+before each launch the host reserves every live slot's next
+⌈K/page_size⌉+1 pages from the ``PagePool`` into a ``(B, F)`` frontier
+array, and the device advances ``block_table`` itself as slots cross page
+boundaries. Unconsumed frontier pages are returned after the macro-step,
+so pool accounting stays exact.
+
+Per-step sampling keys are *folded* from one base key and the global step
+index (``samplers.decode_step_key``), so the token stream is independent
+of how many steps each launch covers — ``macro_steps=1`` and
+``macro_steps=32`` decode bit-identical tokens. ``macro_steps=0``
+preserves the legacy per-token host loop for benchmarking.
+
+Prefill is length-bucketed: queued prompts are right-padded to
+power-of-two buckets and prefilled in one batched call per bucket
+(attention-only architectures; recurrent archs fall back to per-request
+prefill because pads would leak into their state).
 
 Modes: "camd" (adaptive), "best_of_n", "self_consistency", "greedy" —
 the paper's baselines share the engine so efficiency comparisons are
@@ -19,17 +39,18 @@ apples-to-apples.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, List, NamedTuple, Optional
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import CAMDConfig, PagedKVConfig, SamplingConfig
+from repro.config import (ATTN, LOCAL_ATTN, CAMDConfig, PagedKVConfig,
+                          SamplingConfig)
 from repro.core import controller as ctrl
 from repro.models.model import Model
-from repro.sampling.samplers import sample_token
+from repro.sampling.samplers import (decode_step_key, sample_token,
+                                     sample_token_batch)
 from repro.serving.page_pool import PagePool
 
 
@@ -78,6 +99,10 @@ class EngineState(NamedTuple):
     greedy: jax.Array          # (B,) bool
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
 class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int = 8,
                  cache_len: int = 512,
@@ -89,9 +114,13 @@ class ServeEngine:
                  max_new_tokens: int = 64,
                  impl: str = "xla",
                  paged_kv: PagedKVConfig = PagedKVConfig(),
+                 macro_steps: int = 8,
+                 bucket_prefill: bool = True,
+                 prefill_bucket_min: int = 16,
                  seed: int = 0):
         assert mode in ("camd", "best_of_n", "self_consistency", "greedy")
         assert impl in ("xla", "pallas", "paged", "paged_pallas")
+        assert macro_steps >= 0
         self.model, self.params = model, params
         self.cfg = model.cfg
         self.B = slots
@@ -105,6 +134,10 @@ class ServeEngine:
         self.eos_id = eos_id
         self.max_new = max_new_tokens
         self.impl = impl
+        # macro_steps K: device steps per lax.while_loop launch. 0 keeps
+        # the legacy per-token host loop (one dispatch + one sync per
+        # token) for A/B benchmarking against the fused path.
+        self.macro_steps = macro_steps
         # paged serving: KV lives in a shared page pool; "paged" runs the
         # gather+sdpa XLA attention (bit-identical to the dense path),
         # "paged_pallas" the block-table flash-decode kernel.
@@ -121,15 +154,27 @@ class ServeEngine:
             self.pool = PagePool(num_pages, ps)
             self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
             self._slot_pos = np.zeros(slots, np.int64)
+            self._slot_limit = np.zeros(slots, np.int64)  # L + max_new
             # admission control: pages a running candidate may still
             # allocate are *reserved* at admit time, so a candidate that
             # was admitted can always finish — pool pressure surfaces as
             # queueing delay at _schedule, never as a mid-decode crash.
             self._slot_reserved = np.zeros(slots, np.int64)
             self._reserved = 0
+            # frontier width: the most page boundaries one slot can cross
+            # in K device steps, plus one for the boundary the first step
+            # may land on.
+            self._frontier_width = max(1, -(-max(macro_steps, 1) // ps) + 1)
         else:
             self.pool = None
         self.key = jax.random.PRNGKey(seed)
+        # decode-loop keys are folded from a dedicated base key and the
+        # global step index (not split per step), so the sampled stream is
+        # invariant to macro-step partitioning; self.key keeps feeding the
+        # admission-time first-token sampling.
+        self._decode_key = jax.random.fold_in(jax.random.PRNGKey(seed),
+                                              0x6d6163)
+        self._t = 0                      # global decode step counter
         self.has_evidence = bool(self.cfg.num_evidence_tokens)
 
         self._queue: List[Request] = []
@@ -139,13 +184,52 @@ class ServeEngine:
         self._next_cand = 0
         self._dtype = model.param_dtype
 
+        # bucketed prefill: only exact for attention-only decoders, and
+        # only when the padded bucket fits every attention ring without
+        # wrapping (_bucket_fits).
+        self.bucket_prefill = bool(bucket_prefill) and \
+            model.supports_bucketed_prefill
+        self.prefill_bucket_min = prefill_bucket_min
+        rings = []
+        for kind in self.cfg.layer_kinds:
+            if kind == ATTN:
+                rings.append(cache_len if self.cfg.attn_window == 0
+                             else min(cache_len, self.cfg.attn_window))
+            elif kind == LOCAL_ATTN:
+                rings.append(min(cache_len, self.cfg.local_window))
+        self._min_ring = min(rings) if rings else cache_len
+
         self.state = self._blank_state()
-        self._step_fn = self._build_step()
+        self._step_body = self._make_step_body()
+        self._step_fn = jax.jit(self._step_body)
+        self._macro_fn = self._build_macro_step()
         self._prefill_fn = self._build_prefill()
-        self._round_fn = jax.jit(partial(ctrl.round_update, self.camd))
-        # telemetry
+        self._bucket_fn = self._build_bucket_prefill()
+        self._first_fn = self._build_first_tokens()
+        self._greedy_row = jnp.asarray([self.mode == "greedy"])
+        self._round_fn = jax.jit(ctrl.batched_round_update_assign(self.camd))
+        self._dummy_frontier = jnp.zeros((slots, 1), jnp.int32)
+        # telemetry: total_steps counts device decode steps;
+        # macro_launches counts while_loop dispatches; host_syncs counts
+        # decode-loop host<->device synchronizations (the quantity the
+        # macro-step refactor exists to amortize).
         self.total_steps = 0
         self.total_tokens = 0
+        self.macro_launches = 0
+        self.host_syncs = 0
+
+    # ------------------------------------------------------------------
+    def _sync(self, tree):
+        """Decode-loop host readback: one counted synchronization."""
+        self.host_syncs += 1
+        return jax.device_get(tree)
+
+    def _any_live(self) -> bool:
+        """Host-side activity check — live slots mirror device ``active``
+        exactly (slots are freed the moment their candidate finishes), so
+        the per-iteration ``jnp.any(state.active)`` device round-trip of
+        the old loop is free."""
+        return bool((self._slot_req >= 0).any())
 
     # ------------------------------------------------------------------
     def _blank_state(self) -> EngineState:
@@ -184,11 +268,33 @@ class ServeEngine:
 
         return prefill
 
-    def _build_step(self):
-        model, sampling, eos, max_new = self.model, self.sampling, self.eos_id, self.max_new
-        has_ev = self.has_evidence
+    def _build_bucket_prefill(self):
+        model, impl = self.model, self._model_impl
 
         @jax.jit
+        def prefill(params, tokens, lengths, cache, evidence=None):
+            return model.prefill(params, tokens, cache, evidence,
+                                 impl=impl, lengths=lengths)
+
+        return prefill
+
+    def _build_first_tokens(self):
+        sampling = self.sampling
+
+        @jax.jit
+        def first(keys, logits, bias, greedy):
+            return sample_token_batch(keys, logits, sampling, bias=bias,
+                                      greedy=greedy)
+
+        return first
+
+    def _make_step_body(self):
+        """One decode+sample+aggregate step — the body shared by the
+        legacy jitted per-token step and the macro-step while_loop."""
+        model, sampling, eos, max_new = self.model, self.sampling, \
+            self.eos_id, self.max_new
+        has_ev = self.has_evidence
+
         def step(params, st: EngineState, key, evid_norm):
             logits, hidden, cache = model.decode_step(
                 params, st.last_token, st.cache, impl=self._model_impl)
@@ -233,6 +339,56 @@ class ServeEngine:
 
         return step
 
+    def _build_macro_step(self):
+        """Fused decode loop: up to K steps of ``_step_body`` inside
+        ``lax.while_loop``, exiting early when every slot goes inactive or
+        any slot finishes (the host must fold the candidate / round).
+
+        The paged block-table advance is inverted relative to the legacy
+        host loop: instead of the host scattering a freshly-allocated page
+        before every step, the device pulls the next page from the
+        pre-staged ``frontier`` row whenever a slot's write position
+        crosses a page boundary.
+        """
+        K = max(self.macro_steps, 1)
+        paged = self.paged
+        ps = self.page_size if paged else 0
+        step_body = self._step_body
+        B = self.B
+
+        @jax.jit
+        def macro(params, st: EngineState, base_key, t0, evid_norm, frontier):
+            F = frontier.shape[1]
+
+            def cond(carry):
+                st, fidx, done, i = carry
+                return (i < K) & jnp.any(st.active) & ~jnp.any(done)
+
+            def body(carry):
+                st, fidx, done, i = carry
+                if paged:
+                    pos = st.cache["pos"]
+                    bt = st.cache["block_table"]
+                    need = st.active & (jnp.mod(pos, ps) == 0)
+                    li = jnp.clip(pos // ps, 0, bt.shape[1] - 1)
+                    page = jnp.take_along_axis(
+                        frontier, jnp.clip(fidx, 0, F - 1)[:, None],
+                        axis=1)[:, 0]
+                    hit = jnp.arange(bt.shape[1])[None, :] == li[:, None]
+                    bt = jnp.where(need[:, None] & hit, page[:, None], bt)
+                    st = st._replace(cache={**st.cache, "block_table": bt})
+                    fidx = fidx + need.astype(jnp.int32)
+                key = decode_step_key(base_key, t0 + i)
+                st, done = step_body(params, st, key, evid_norm)
+                return st, fidx, done, i + jnp.int32(1)
+
+            carry = (st, jnp.zeros((B,), jnp.int32),
+                     jnp.zeros((B,), bool), jnp.int32(0))
+            st, fidx, done, i = jax.lax.while_loop(cond, body, carry)
+            return st, done, i
+
+        return macro
+
     # ------------------------------------------------------------------
     # host-side scheduling
     # ------------------------------------------------------------------
@@ -266,6 +422,13 @@ class ServeEngine:
             lambda path, b, r: self._scat_rows(
                 b, r, idx, self._cache_batch_axis(path)), big, row)
 
+    def _slice_cache_row(self, cache, i: int):
+        """A 1-row view of a batched prefill cache (row ``i``), matching
+        the shapes ``_scatter_cache_rows`` / ``_write_pages`` expect."""
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: leaf[:, i:i + 1]
+            if self._cache_batch_axis(path) == 1 else leaf[i:i + 1], cache)
+
     # -- paged cache plumbing ------------------------------------------
     def _seed_paged_slots(self, info, slot_ids: List[int]):
         """Point ``slot_ids`` at the request's prompt pages.
@@ -278,7 +441,7 @@ class ServeEngine:
         the contiguous path."""
         cache = self.state.cache
         row = info["cache_row"]
-        L = int(row["pos"][0])                   # prompt incl. evidence
+        L = info["prompt_len"]                   # prompt incl. evidence
         ps = self.page_size
         assert L + self.max_new <= self.cache_len, \
             f"prompt {L} + max_new {self.max_new} overflows paged cache " \
@@ -299,6 +462,7 @@ class ServeEngine:
                 pages += tail
             self._slot_pages[s] = pages
             self._slot_pos[s] = L
+            self._slot_limit[s] = L + self.max_new
             future = self._pages_per_candidate(L) - (1 if tail_len else 0)
             self._slot_reserved[s] = future
             self._reserved += future
@@ -326,7 +490,7 @@ class ServeEngine:
     def _paged_affordable(self, info, want: int) -> int:
         """How many candidates of this request fit in the pool right now
         (free pages minus reservations held by running candidates)."""
-        L = int(info["cache_row"]["pos"][0])
+        L = info["prompt_len"]
         per_cand = self._pages_per_candidate(L)
         need_hold = 0 if "prompt_pages" in info else L // self.page_size
         avail = self.pool.free_pages - self._reserved - need_hold
@@ -393,10 +557,65 @@ class ServeEngine:
                 "super": scatter_entries(cache["super"], row["super"], 1),
                 "tail": scatter_entries(cache["tail"], row["tail"], 0)}
 
+    # -- page frontiers (macro-step paged decode) ----------------------
+    @staticmethod
+    def _page_crossings(lo: int, hi: int, ps: int) -> int:
+        """Number of page boundaries (multiples of ``ps``) a slot's write
+        position crosses over the half-open span [lo, hi)."""
+        return -(-hi // ps) - (-(-lo // ps))
+
+    def _stage_frontier(self) -> Tuple[Dict[int, Tuple[int, List[int]]],
+                                       jax.Array]:
+        """Reserve each live slot's next pages for one macro-step launch.
+
+        Staged pages come out of the slot's admission-time reservation, so
+        staging can never fail nor starve queued work: free-minus-reserved
+        is invariant. Returns ({slot: (start_pos, pages)}, (B, F) frontier
+        array; idle rows point at the quarantine page 0)."""
+        F = self._frontier_width
+        fr = np.zeros((self.B, F), np.int32)
+        staged: Dict[int, Tuple[int, List[int]]] = {}
+        ps = self.page_size
+        for s in range(self.B):
+            if self._slot_req[s] < 0:
+                continue
+            p = int(self._slot_pos[s])
+            hi = min(p + max(self.macro_steps, 1), int(self._slot_limit[s]))
+            need = self._page_crossings(p, hi, ps)
+            if need > 0:
+                assert need <= self._slot_reserved[s], \
+                    (s, need, self._slot_reserved[s])
+                pages = self.pool.stage_frontier(need)
+                self._slot_reserved[s] -= need
+                self._reserved -= need
+                fr[s, :need] = pages
+            else:
+                pages = []
+            staged[s] = (p, pages)
+        return staged, jnp.asarray(fr)
+
+    def _reclaim_frontier(self, staged, pos_np):
+        """After a macro-step: keep the consumed frontier prefix as slot
+        pages (the device advanced the block table through them, in
+        order), return the rest to the pool and to the slot's
+        reservation."""
+        for s, (p0, pages) in staged.items():
+            p1 = int(pos_np[s])
+            used = self._page_crossings(p0, p1, self.page_size)
+            assert used <= len(pages), (s, p0, p1, used, len(pages))
+            self._slot_pages[s] += pages[:used]
+            unused = pages[used:]
+            if unused:
+                self.pool.return_frontier(unused)
+                self._slot_reserved[s] += len(unused)
+                self._reserved += len(unused)
+            self._slot_pos[s] = p1
+
     def _alloc_step_pages(self):
-        """Before each decode step, hand a fresh page to every live slot
-        whose next write crosses a page boundary, and mirror the
-        allocation into the device block table."""
+        """Legacy per-token loop only: before each decode step, hand a
+        fresh page to every live slot whose next write crosses a page
+        boundary, and mirror the allocation into the device block
+        table."""
         rows, cols, vals = [], [], []
         for s in range(self.B):
             if self._slot_req[s] < 0:
@@ -447,10 +666,11 @@ class ServeEngine:
         stats["dense_equiv_bytes"] = self.B * self.pages_per_slot * bpp
         return stats
 
-    def _admit(self, req: Request, slot_ids: List[int], bias_row=None,
-               first_logits=None):
+    def _admit(self, req: Request, slot_ids: List[int]):
         """Seed slots with the request's prompt cache and sample the first
-        token of each candidate from the prefill logits."""
+        token of each candidate from the prefill logits — one batched
+        ``sample_token_batch`` dispatch over the round's split keys, not a
+        Python loop of single-row samples."""
         info = self._reqs[req.uid]
         st = self.state
         if self.paged:
@@ -464,23 +684,15 @@ class ServeEngine:
         self.key, *keys = jax.random.split(self.key, n + 1)
         lg = info["prefill_logits"]                      # (1, V) fp32
         bias = info.get("bias")
-        first_toks, first_lps = [], []
-        for i in range(n):
-            b = bias if bias is not None else None
-            greedy = jnp.asarray([self.mode == "greedy"])
-            tok, lp = sample_token(keys[i], lg, self.sampling,
-                                   bias=b, greedy=greedy)
-            first_toks.append(int(tok[0]))
-            first_lps.append(float(lp[0]))
-
-        toks = jnp.asarray(first_toks, jnp.int32)
-        lps = jnp.asarray(first_lps, jnp.float32)
+        toks, lps = self._first_fn(jnp.stack(keys), lg, bias,
+                                   self._greedy_row)
         h0 = info["prefill_hidden"]                      # (1, d) fp32
         hn0 = h0 / (jnp.linalg.norm(h0, axis=-1, keepdims=True) + 1e-8)
         V, d = self.V, self.d
 
-        emb_t = jnp.take(self.params["embed"]["table"], toks, axis=0).astype(jnp.float32)
         if self.has_evidence:
+            emb_t = jnp.take(self.params["embed"]["table"], toks,
+                             axis=0).astype(jnp.float32)
             emb_n = emb_t / (jnp.linalg.norm(emb_t, axis=-1, keepdims=True) + 1e-8)
             ev = info["evid_row"]                        # (1, Ne, d) normalized
             a0 = jnp.mean(jnp.einsum("nd,bd->bn", ev[0], emb_n), axis=-1)
@@ -512,18 +724,22 @@ class ServeEngine:
             info["cand_slots"].append((self._next_cand, s))
             self._next_cand += 1
 
-    def _prefill_request(self, req: Request):
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        cache_row = self.model.make_cache(1, self.cache_len, self._dtype)
-        ev = None
-        if req.evidence is not None:
-            ev = jnp.asarray(req.evidence, self._dtype)[None]
-        lg, h, cache_row = self._prefill_fn(self.params, prompt, cache_row, ev)
+    # -- prefill -------------------------------------------------------
+    def _prompt_span(self, req: Request) -> int:
+        """Cache positions the prompt occupies, incl. prepended evidence
+        (decoder-only; enc-dec evidence feeds the encoder instead)."""
+        ne = self.cfg.num_evidence_tokens \
+            if (req.evidence is not None and
+                not self.cfg.is_encoder_decoder) else 0
+        return len(req.prompt) + ne
+
+    def _init_info(self, req: Request, cache_row, lg, h, prompt_len: int):
         info = {
             "req": req,
             "cache_row": cache_row,
             "prefill_logits": lg.astype(jnp.float32),
             "prefill_hidden": h.astype(jnp.float32),
+            "prompt_len": prompt_len,
             "camd": ctrl.init_state(self.camd, self.d, self.V),
             "bias": None,
             "round": 0,
@@ -543,13 +759,80 @@ class ServeEngine:
             # Eq. 8 term 2: text-evidence ↔ visual-evidence consistency —
             # prompt token embeddings vs evidence features, constant per req.
             temb = jnp.take(self.params["embed"]["table"],
-                            prompt[0], axis=0).astype(jnp.float32)
+                            jnp.asarray(req.prompt, jnp.int32),
+                            axis=0).astype(jnp.float32)
             temb = temb / (jnp.linalg.norm(temb, axis=-1, keepdims=True) + 1e-8)
             sim = temb @ evn.T                               # (L, Ne)
             info["align_const"] = float(jnp.mean(jnp.max(sim, axis=-1)))
         else:
             info["evid_row"] = jnp.zeros((1, 1, self.d), jnp.float32)
         self._reqs[req.uid] = info
+
+    def _prefill_request(self, req: Request):
+        """Unbucketed fallback: one prefill call per request (recompiles
+        per distinct prompt length)."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        cache_row = self.model.make_cache(1, self.cache_len, self._dtype)
+        ev = None
+        if req.evidence is not None:
+            ev = jnp.asarray(req.evidence, self._dtype)[None]
+        lg, h, cache_row = self._prefill_fn(self.params, prompt, cache_row, ev)
+        self._init_info(req, cache_row, lg, h, self._prompt_span(req))
+
+    def _bucket_len(self, prompt_len: int) -> int:
+        return _next_pow2(max(prompt_len, self.prefill_bucket_min))
+
+    def _prefill_pending(self):
+        """Prefill queued requests that have no cache yet, batching
+        same-bucket prompts (right-padded to power-of-two lengths) into
+        one prefill call each — instead of one recompile-per-length call
+        per request. Only a bounded queue prefix is prefilled (admission
+        is FIFO, so a prefix is always the next work): each prefilled
+        request pins a dense cache row until admission, and an unbounded
+        queue must not pin O(queue) rows of KV."""
+        ahead = max(self.B, 4)
+        pending = [r for r in self._queue[:ahead] if r.uid not in self._reqs]
+        if not pending:
+            return
+        if not self.bucket_prefill:
+            for r in pending:
+                self._prefill_request(r)
+            return
+        groups: Dict[Tuple[int, int], List[Request]] = {}
+        for r in pending:
+            ne = self.cfg.num_evidence_tokens if r.evidence is not None else 0
+            groups.setdefault((self._bucket_len(len(r.prompt)), ne),
+                              []).append(r)
+        for (Lb, ne), reqs in sorted(groups.items()):
+            if Lb + ne > min(self._min_ring, self.cache_len):
+                # padded bucket would wrap an attention ring — the padded
+                # tail analysis no longer holds, take the exact 1-row path
+                for r in reqs:
+                    self._prefill_request(r)
+                continue
+            self._prefill_bucket(Lb, ne, reqs)
+
+    def _prefill_bucket(self, Lb: int, ne: int, reqs: List[Request]):
+        n = len(reqs)
+        nb = _next_pow2(n)          # row count buckets too: bounded recompiles
+        toks = np.zeros((nb, Lb), np.int32)
+        lens = np.full((nb,), Lb + ne, np.int32)   # dummy rows: full length
+        for i, r in enumerate(reqs):
+            toks[i, :len(r.prompt)] = r.prompt
+            lens[i] = len(r.prompt) + ne
+        ev = None
+        if ne:
+            De = self.cfg.evidence_dim or self.d
+            ev_np = np.zeros((nb, ne, De), np.float32)
+            for i, r in enumerate(reqs):
+                ev_np[i] = r.evidence
+            ev = jnp.asarray(ev_np, self._dtype)
+        cache = self.model.make_cache(nb, self.cache_len, self._dtype)
+        lg, h, cache = self._bucket_fn(self.params, jnp.asarray(toks),
+                                       jnp.asarray(lens), cache, ev)
+        for i, r in enumerate(reqs):
+            self._init_info(r, self._slice_cache_row(cache, i),
+                            lg[i:i + 1], h[i:i + 1], int(lens[i]))
 
     def _free_slots(self) -> List[int]:
         return [i for i in range(self.B) if self._slot_req[i] < 0]
@@ -568,11 +851,10 @@ class ServeEngine:
         cover its candidates' worst-case pages (``_paged_affordable``);
         otherwise it waits in the queue / stays pending until running
         candidates finish and return pages."""
+        self._prefill_pending()
         free = self._free_slots()
         while free and self._queue:
             req = self._queue[0]
-            if req.uid not in self._reqs:
-                self._prefill_request(req)
             take = min(self._per_round(), len(free))
             if self.paged:
                 take = self._paged_affordable(self._reqs[req.uid], take)
@@ -605,132 +887,236 @@ class ServeEngine:
         return max(0, self.n_candidates - done_cands - running)
 
     # ------------------------------------------------------------------
-    def _finish_candidate(self, slot: int):
-        uid = int(self._slot_req[slot])
-        cand = int(self._slot_cand[slot])
-        info = self._reqs[uid]
+    def _finish_candidates(self, slots: List[int]):
+        """Fold finished slots into candidate records: ONE batched
+        ``device_get`` of the finished rows (the legacy loop issued ~7
+        scalar readbacks per slot), then host bookkeeping."""
         st = self.state
-        n = int(st.n_tok[slot])
-        rec = {
-            "uid": cand,
-            "tokens": np.asarray(st.out_buf[slot])[:n],
-            "sum_lp": float(st.sum_lp[slot]),
-            "n": n,
-            "sum_coh": float(st.sum_coh[slot]),
-            "emb": np.asarray(st.sum_emb[slot]) / max(n, 1),
-            "align": float(st.align_sum[slot]) / max(n, 1),
-            "counts": np.asarray(st.token_counts[slot]),
-        }
-        # Eq. 12 evidence-weighted score from the incremental aggregates
-        s_gen = rec["sum_lp"] / max(n, 1)
-        s_coh = rec["sum_coh"] / max(n - 1, 1)
-        s_align = 0.5 * (rec["align"] + info["align_const"]) if self.has_evidence else 0.0
-        rec["score"] = s_gen + self.camd.lambda_g * s_align + self.camd.lambda_c * s_coh
-        info["records"][cand] = rec
-        self._slot_req[slot] = -1
-        self._slot_cand[slot] = -1
-        self.total_tokens += n
+        idx = jnp.asarray(slots)
+        out_buf, sum_lp, n_tok, sum_coh, sum_emb, align_sum, counts = \
+            self._sync((st.out_buf[idx], st.sum_lp[idx], st.n_tok[idx],
+                        st.sum_coh[idx], st.sum_emb[idx], st.align_sum[idx],
+                        st.token_counts[idx]))
+        uids: List[int] = []
+        for j, slot in enumerate(slots):
+            uid = int(self._slot_req[slot])
+            cand = int(self._slot_cand[slot])
+            info = self._reqs[uid]
+            n = int(n_tok[j])
+            rec = {
+                "uid": cand,
+                "tokens": np.asarray(out_buf[j])[:n],
+                "sum_lp": float(sum_lp[j]),
+                "n": n,
+                "sum_coh": float(sum_coh[j]),
+                "emb": np.asarray(sum_emb[j]) / max(n, 1),
+                "align": float(align_sum[j]) / max(n, 1),
+                "counts": np.asarray(counts[j]),
+            }
+            # Eq. 12 evidence-weighted score from incremental aggregates
+            s_gen = rec["sum_lp"] / max(n, 1)
+            s_coh = rec["sum_coh"] / max(n - 1, 1)
+            s_align = 0.5 * (rec["align"] + info["align_const"]) \
+                if self.has_evidence else 0.0
+            rec["score"] = s_gen + self.camd.lambda_g * s_align \
+                + self.camd.lambda_c * s_coh
+            info["records"][cand] = rec
+            self._slot_req[slot] = -1
+            self._slot_cand[slot] = -1
+            self.total_tokens += n
+            if self.paged:
+                # return the candidate's pages (shared prompt pages just
+                # drop a holder)
+                self.pool.free(self._slot_pages[slot])
+                self._slot_pages[slot] = []
+                self._reserved -= int(self._slot_reserved[slot])
+                self._slot_reserved[slot] = 0
+            if uid not in uids:
+                uids.append(uid)
         if self.paged:
-            # return the candidate's pages (shared prompt pages just drop
-            # a holder) and quarantine the slot's block table so its dead
-            # writes land on page 0.
-            self.pool.free(self._slot_pages[slot])
-            self._slot_pages[slot] = []
-            self._reserved -= int(self._slot_reserved[slot])
-            self._slot_reserved[slot] = 0
+            # quarantine the freed slots' block tables in one scatter so
+            # their dead writes land on page 0
             cache = self.state.cache
-            bt = cache["block_table"].at[slot].set(0)
+            bt = cache["block_table"].at[idx].set(0)
             self.state = self.state._replace(
                 cache={**cache, "block_table": bt})
+        # rounds complete when no slots of the request remain live
+        due = [u for u in uids
+               if not any(self._slot_req[s] == u for s in range(self.B))]
+        if due:
+            self._finish_rounds(due)
 
-        # round complete when no slots of this request remain active
-        if not any(self._slot_req[s] == uid for s in range(self.B)):
-            self._finish_round(uid)
-
-    def _finish_round(self, uid: int):
-        info = self._reqs[uid]
-        round_recs = [info["records"][c] for c, _ in info["cand_slots"]
-                      if c in info["records"] and
-                      "scored" not in info["records"][c]]
+    def _finish_rounds(self, uids: List[int]):
+        """Fold completed rounds — ALL of them in one call to the vmapped
+        ``batched_round_update_assign`` (a macro-step often retires several
+        requests' rounds at once; the legacy loop dispatched one round
+        update per request)."""
         R = self._per_round()
-        if not round_recs:
+        batch = []
+        for uid in uids:
+            info = self._reqs[uid]
+            round_recs = [info["records"][c] for c, _ in info["cand_slots"]
+                          if c in info["records"] and
+                          "scored" not in info["records"][c]]
+            if not round_recs:
+                continue
+            for r in round_recs:
+                r["scored"] = True
+            assert len(round_recs) <= R, \
+                (len(round_recs), R)   # scheduler admits ≤ per_round/round
+            pad = R - len(round_recs)
+            recs = round_recs + round_recs[:1] * pad
+            inp = ctrl.RoundInputs(
+                scores=np.asarray([r["score"] for r in recs], np.float32),
+                embs=np.stack([r["emb"] for r in recs]).astype(np.float32),
+                token_counts=np.stack([r["counts"] for r in recs]
+                                      ).astype(np.float32),
+                lengths=np.asarray([r["n"] for r in recs], np.int32),
+                valid=np.asarray([True] * len(round_recs) + [False] * pad),
+                uids=np.asarray([r["uid"] for r in recs], np.int32),
+            )
+            batch.append((uid, round_recs, inp))
+        if not batch:
             return
-        for r in round_recs:
-            r["scored"] = True
-        pad = R - len(round_recs)
-        recs = round_recs + round_recs[:1] * pad if pad > 0 else round_recs[:R]
-
-        inp = ctrl.RoundInputs(
-            scores=jnp.asarray([r["score"] for r in recs], jnp.float32),
-            embs=jnp.asarray(np.stack([r["emb"] for r in recs])),
-            token_counts=jnp.asarray(np.stack([r["counts"] for r in recs])),
-            lengths=jnp.asarray([r["n"] for r in recs], jnp.int32),
-            valid=jnp.asarray([True] * len(round_recs) + [False] * max(pad, 0)),
-            uids=jnp.asarray([r["uid"] for r in recs], jnp.int32),
-        )
-        info["camd"], bias = self._round_fn(info["camd"], inp)
-        info["round"] += 1
-        if self.mode == "camd":
-            info["bias"] = bias[None]
-            stopped = bool(info["camd"].stopped)
-        else:
-            info["bias"] = None
-            stopped = len(info["records"]) >= self.n_candidates
-        if stopped:
-            info["done"] = True
-            info["cache_row"] = None  # free the prompt cache
-            if self.paged and "prompt_pages" in info:
-                self.pool.free(info.pop("prompt_pages"))
-        else:
-            info["pending_round"] = True
+        states = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[self._reqs[u]["camd"] for u, _, _ in batch])
+        inps = jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[b[2] for b in batch])
+        if self.mode != "camd":
+            # the coverage/max_rounds stop rule is CAMD's token-budget
+            # policy; the fixed-budget baselines must keep folding every
+            # round into the cluster table (a frozen table would orphan
+            # late candidates from self-consistency's majority vote and
+            # freeze best_of_n's best-candidate tracking).
+            states = states._replace(stopped=jnp.zeros_like(states.stopped))
+        # pad the batch to a power of two (repeat row 0, discard results)
+        # so the vmapped round update compiles for O(log B) shapes, not
+        # one per distinct simultaneous-completion count
+        n = len(batch)
+        nb = _next_pow2(n)
+        if nb > n:
+            states, inps = jax.tree.map(
+                lambda x: jnp.concatenate(
+                    [x, jnp.repeat(x[:1], nb - n, axis=0)]), (states, inps))
+        new_states, biases, clusters = self._round_fn(states, inps)
+        stopped_np, clusters_np = self._sync((new_states.stopped, clusters))
+        for i, (uid, round_recs, _) in enumerate(batch):
+            info = self._reqs[uid]
+            info["camd"] = jax.tree.map(lambda x, i=i: x[i], new_states)
+            for j, r in enumerate(round_recs[:R]):
+                r["cluster"] = int(clusters_np[i, j])
+            info["round"] += 1
+            if self.mode == "camd":
+                info["bias"] = biases[i][None]
+                stopped = bool(stopped_np[i])
+            else:
+                info["bias"] = None
+                stopped = len(info["records"]) >= self.n_candidates
+            if stopped:
+                info["done"] = True
+                info["cache_row"] = None  # free the prompt cache
+                if self.paged and "prompt_pages" in info:
+                    self.pool.free(info.pop("prompt_pages"))
+            else:
+                info["pending_round"] = True
 
     # ------------------------------------------------------------------
+    def _has_pending(self) -> bool:
+        return bool(self._queue) or any(
+            not i["done"] and i.get("pending_round")
+            for i in self._reqs.values())
+
+    def _raise_pool_sizing(self):
+        # nothing running and nothing admissible: the pool cannot cover
+        # even one candidate of the waiting work (FIFO head-of-line) — a
+        # sizing error, not a transient.
+        blocked = self._queue[0].uid if self._queue else \
+            next(uid for uid, i in self._reqs.items() if not i["done"])
+        done_n = sum(1 for i in self._reqs.values() if i["done"])
+        raise RuntimeError(
+            f"paged KV pool ({self.pool.num_pages} pages of "
+            f"{self.page_size}) cannot admit request "
+            f"{blocked} ({done_n} completed results "
+            f"discarded) — raise num_pages or lower "
+            f"max_new_tokens/prompt lengths")
+
+    def _refill_idle(self) -> bool:
+        """No slot is live: drain the queue / pending rounds back into
+        slots. Returns True when all work is complete (caller breaks)."""
+        if not self._has_pending():
+            return True
+        self._schedule()
+        if self.paged and not self._any_live():
+            self._raise_pool_sizing()
+        return False
+
     def run(self) -> List[Result]:
-        results = []
+        if self.macro_steps <= 0:
+            return self._run_legacy()
         self._schedule()
         evid = jnp.zeros((self.B, 1, self.d), jnp.float32)
         if self.has_evidence:
             evid = self._gather_evid()
         while True:
-            if not bool(jnp.any(self.state.active)):
-                if self._queue or any(not i["done"] and i.get("pending_round")
-                                      for i in self._reqs.values()):
-                    self._schedule()
-                    if self.paged and not bool(jnp.any(self.state.active)):
-                        # nothing running and nothing admissible: the pool
-                        # cannot cover even one candidate of the waiting
-                        # work (FIFO head-of-line) — a sizing error, not a
-                        # transient.
-                        blocked = self._queue[0].uid if self._queue else \
-                            next(uid for uid, i in self._reqs.items()
-                                 if not i["done"])
-                        done_n = sum(1 for i in self._reqs.values()
-                                     if i["done"])
-                        raise RuntimeError(
-                            f"paged KV pool ({self.pool.num_pages} pages of "
-                            f"{self.page_size}) cannot admit request "
-                            f"{blocked} ({done_n} completed results "
-                            f"discarded) — raise num_pages or lower "
-                            f"max_new_tokens/prompt lengths")
-                    if self.has_evidence:
-                        evid = self._gather_evid()
-                    continue
-                break
+            if not self._any_live():
+                if self._refill_idle():
+                    break
+                if self.has_evidence:
+                    evid = self._gather_evid()
+                continue
+            staged, frontier = (self._stage_frontier() if self.paged
+                                else (None, self._dummy_frontier))
+            self.state, done, steps = self._macro_fn(
+                self.params, self.state, self._decode_key,
+                jnp.int32(self._t), evid, frontier)
+            self.macro_launches += 1
+            done_np, pos_np, steps_np = self._sync(
+                (done, self.state.cache["pos"], steps))
+            steps_n = int(steps_np)
+            self.total_steps += steps_n
+            self._t += steps_n
+            if self.paged:
+                self._reclaim_frontier(staged, pos_np)
+            if done_np.any():
+                self._finish_candidates(
+                    [int(s) for s in np.nonzero(done_np)[0]])
+                self._schedule()
+                if self.has_evidence:
+                    evid = self._gather_evid()
+        return [self._result(uid) for uid in self._reqs]
+
+    def _run_legacy(self) -> List[Result]:
+        """Pre-macro-step per-token host loop (macro_steps=0): one jitted
+        step, one host sync, and one block-table scatter per generated
+        token. Kept as the benchmarking baseline the fused loop is
+        measured against."""
+        self._schedule()
+        evid = jnp.zeros((self.B, 1, self.d), jnp.float32)
+        if self.has_evidence:
+            evid = self._gather_evid()
+        while True:
+            if not self._any_live():
+                if self._refill_idle():
+                    break
+                if self.has_evidence:
+                    evid = self._gather_evid()
+                continue
             self.key, k = jax.random.split(self.key)
             if self.paged:
                 self._alloc_step_pages()
             self.state, done = self._step_fn(self.params, self.state, k, evid)
             self.total_steps += 1
-            done_np = np.asarray(done)
+            self._t += 1
+            done_np = self._sync(done)
             if done_np.any():
+                # per-slot finishes, as the pre-refactor loop did — this
+                # is the readback pattern the macro path amortizes away
                 for s in np.nonzero(done_np)[0]:
-                    self._finish_candidate(int(s))
+                    self._finish_candidates([int(s)])
                 self._schedule()
                 if self.has_evidence:
                     evid = self._gather_evid()
-        for uid, info in self._reqs.items():
-            results.append(self._result(uid))
-        return results
+        return [self._result(uid) for uid in self._reqs]
 
     def _gather_evid(self):
         rows = []
@@ -752,13 +1138,16 @@ class ServeEngine:
         cs = info["camd"]
         recs = list(info["records"].values())
         if self.mode == "self_consistency":
-            # majority cluster -> best member (sizes from the cluster table)
-            sizes = np.asarray(cs.table.sizes)
-            best_k = int(np.argmax(sizes))
-            # fall back to global best score if cluster bookkeeping is empty
-            best = max(recs, key=lambda r: (0, r["score"]))
-            best_uid = int(cs.best_uid) if int(cs.best_uid) >= 0 else best["uid"]
-            chosen = info["records"].get(best_uid, best)
+            # majority vote: the largest cluster wins, then its
+            # best-scoring member is the answer (falling back to the
+            # global best score only when cluster bookkeeping is empty)
+            n_cl = int(cs.table.n_clusters)
+            members: List[Dict[str, Any]] = []
+            if n_cl > 0:
+                sizes = np.asarray(cs.table.sizes)[:n_cl]
+                best_k = int(np.argmax(sizes))
+                members = [r for r in recs if r.get("cluster", -1) == best_k]
+            chosen = max(members or recs, key=lambda r: r["score"])
         else:
             bu = int(cs.best_uid)
             chosen = info["records"].get(bu) or max(recs, key=lambda r: r["score"])

@@ -41,6 +41,10 @@ class PagePool:
         self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
         self._refs = np.zeros(num_pages, np.int64)
         self.max_in_use = 0
+        # frontier accounting (macro-step serving): pages handed out ahead
+        # of the device loop and how many came back unconsumed.
+        self.frontier_staged = 0
+        self.frontier_returned = 0
 
     # ------------------------------------------------------------------
     @property
@@ -96,6 +100,27 @@ class PagePool:
                 self._free.append(p)
 
     # ------------------------------------------------------------------
+    # Page frontiers (macro-step decode)
+    # ------------------------------------------------------------------
+    def stage_frontier(self, n: int) -> List[int]:
+        """Reserve ``n`` pages for a slot's decode *frontier*: the pages
+        the device-resident macro-step loop may advance into without host
+        intervention. Staged pages are ordinary allocations (refcount 1) —
+        the caller writes their ids into the (B, F) frontier array before
+        launch and, after the macro-step returns, keeps the consumed
+        prefix and hands the rest back via ``return_frontier``."""
+        pages = self.alloc(n)
+        self.frontier_staged += n
+        return pages
+
+    def return_frontier(self, pages: Iterable[int]):
+        """Return staged-but-unconsumed frontier pages (slot finished or
+        the macro-step early-exited before crossing into them)."""
+        pages = list(pages)
+        self.free(pages)
+        self.frontier_returned += len(pages)
+
+    # ------------------------------------------------------------------
     def check(self):
         """Conservation invariant: every non-reserved page is either on
         the free list (ref 0) or held (ref > 0), never both/neither."""
@@ -118,4 +143,6 @@ class PagePool:
             "in_use": self.in_use,
             "free": self.free_pages,
             "max_in_use": self.max_in_use,
+            "frontier_staged": self.frontier_staged,
+            "frontier_returned": self.frontier_returned,
         }
