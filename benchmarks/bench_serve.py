@@ -1,4 +1,5 @@
-"""Serving throughput — macro-step fused decode vs the per-token loop.
+"""Serving throughput — macro-step fused decode vs the per-token loop —
+plus the coverage-aware traffic-scheduler scenario.
 
 Measures the engine-level win of the device-resident decode loop
 (``ServeEngine(macro_steps=K)``, a ``lax.while_loop`` over K
@@ -11,6 +12,14 @@ Grid: macro-step K ∈ {0 (per-token loop), 1, 8, 32} × impl ∈ {xla, paged}
 × mode ∈ {camd, best_of_n}. Each cell warms up once (jit compile +
 first-run allocation on a throwaway request batch), then times a fresh
 request batch on the same engine so compiled functions are reused.
+
+The **scheduler scenario** trains a small LM on the arithmetic-chain
+oracle task, builds heavy-tailed traffic (Pareto-distributed chain
+difficulty — many easy, few hard — over a shared page-aligned prompt
+preamble) and serves the SAME workload under ``fifo`` and ``coverage``
+policies at an equal global token budget, reporting oracle accuracy,
+easy/hard token allocation, starvation, and prefix-cache reuse in a
+``scheduler`` section of ``BENCH_serve.json``.
 
 Writes ``BENCH_serve.json``; ``--smoke`` runs a reduced grid for CI.
 
@@ -26,9 +35,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.config import CAMDConfig, ModelConfig, PagedKVConfig, SamplingConfig
+from repro.config import (CAMDConfig, ModelConfig, PagedKVConfig,
+                          SamplingConfig, TrainConfig)
+from repro.data import ChainTask, lm_batches
+from repro.data.synthetic import SEP
 from repro.models import build_model
 from repro.serving import Request, ServeEngine
+from repro.training import train
 
 
 def _bench_model():
@@ -85,6 +98,129 @@ def _run_cell(cfg, model, params, *, impl, mode, macro_steps, requests,
     }
 
 
+# ---------------------------------------------------------------------------
+# Scheduler scenario: heavy-tailed difficulty at an equal global budget
+# ---------------------------------------------------------------------------
+
+CHAIN_BASE = 16
+
+
+def _train_chain_model(steps: int):
+    cfg = ModelConfig(
+        name="bench-sched-lm", family="dense", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=2, d_ff=384, vocab_size=64, head_dim=32,
+        tie_embeddings=True, dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    data = ({"tokens": jnp.asarray(b["tokens"]),
+             "labels": jnp.asarray(b["labels"])}
+            for b in lm_batches(cfg.vocab_size, 16, 48, seed=0,
+                                base=CHAIN_BASE, max_chain=3))
+    params, _, _ = train(
+        model, TrainConfig(total_steps=steps, warmup_steps=steps // 10,
+                           learning_rate=3e-3, remat=False),
+        data, steps=steps, log_every=steps)
+    return cfg, model, params
+
+
+def _heavy_tail_requests(task: ChainTask, n: int, seed: int = 7):
+    """Pareto difficulty mix (many chain_len 0, few 3) over a shared
+    page-aligned-ish preamble of solved segments (in-distribution for
+    the trained LM, and 14 tokens => one full page at page_size 8 for
+    the prefix cache to reuse)."""
+    rng = np.random.default_rng(seed)
+
+    def seg(k):
+        p, ans, _ = task.sample(rng, chain_len=k)
+        return np.concatenate([p, [ans, SEP]])
+
+    preamble = np.concatenate([seg(2), seg(2)]).astype(np.int32)
+    reqs = []
+    for _ in range(n):
+        k = min(3, int(rng.pareto(1.0)))
+        p, ans, _ = task.sample(rng, chain_len=k)
+        reqs.append((np.concatenate([preamble, p]).astype(np.int32),
+                     int(ans), int(k)))
+    return reqs
+
+
+def _serve_policy(model, params, reqs, *, policy, budget):
+    eng = ServeEngine(
+        model, params, slots=4, cache_len=64,
+        sampling=SamplingConfig(temperature=1.0, top_p=0.95,
+                                repetition_penalty=1.0, max_new_tokens=3),
+        camd=CAMDConfig(samples_per_round=2, max_rounds=4, min_samples=2,
+                        delta=0.05, score_scale=3.0, lambda_c=0.2,
+                        guidance_strength=0.5),
+        mode="camd", n_candidates=8, eos_id=1, max_new_tokens=3,
+        impl="paged", paged_kv=PagedKVConfig(page_size=8),
+        sched_policy=policy, global_budget=budget, prefix_cache=True,
+        seed=0)
+    for i, (p, _ans, _k) in enumerate(reqs):
+        eng.submit(Request(uid=i, prompt=p))
+    res = {r.uid: r for r in eng.run()}
+    acc = float(np.mean([
+        len(res[i].tokens) > 0 and int(res[i].tokens[0]) == reqs[i][1]
+        for i in range(len(reqs))]))
+    easy_ids = [i for i in range(len(reqs)) if reqs[i][2] <= 1]
+    hard_ids = [i for i in range(len(reqs)) if reqs[i][2] >= 2]
+    served_easy = [res[i].tokens_spent for i in easy_ids
+                   if res[i].tokens_spent > 0]
+    row = {
+        "policy": policy,
+        "global_budget": budget,
+        "accuracy": acc,
+        "total_tokens": eng.total_tokens,
+        "easy_tokens": int(sum(res[i].tokens_spent for i in easy_ids)),
+        "hard_tokens": int(sum(res[i].tokens_spent for i in hard_ids)),
+        "easy_tokens_per_served": float(np.mean(served_easy))
+        if served_easy else 0.0,
+        "served": int(sum(res[i].tokens_spent > 0 for i in res)),
+        "sched": eng.sched_stats(),
+        "prefix_cache": eng.kv_stats().get("prefix_cache"),
+    }
+    return row
+
+
+def run_scheduler_scenario(smoke: bool = False) -> dict:
+    """fifo vs coverage on heavy-tailed traffic at equal token budget."""
+    steps = 240 if smoke else 300
+    n_req = 12 if smoke else 16
+    cfg, model, params = _train_chain_model(steps)
+    reqs = _heavy_tail_requests(ChainTask(base=CHAIN_BASE), n_req)
+    # unbudgeted fifo reference sets the equal budget for the comparison
+    ref = _serve_policy(model, params, reqs, policy="fifo", budget=0)
+    budget = max(2, int(0.72 * ref["total_tokens"]))
+    rows = [ref]
+    for policy in ("fifo", "coverage"):
+        row = _serve_policy(model, params, reqs, policy=policy,
+                            budget=budget)
+        rows.append(row)
+        print(f"sched {policy:9s} @ budget {budget}: "
+              f"acc={row['accuracy']:.3f} "
+              f"easy/served={row['easy_tokens_per_served']:.1f} "
+              f"starved={row['sched']['starved']}")
+    out = {
+        "n_requests": n_req,
+        "difficulty_mix": [k for _, _, k in reqs],
+        "train_steps": steps,
+        "equal_budget": budget,
+        "rows": rows,
+    }
+    fifo_b = next(r for r in rows[1:] if r["policy"] == "fifo")
+    cov_b = next(r for r in rows[1:] if r["policy"] == "coverage")
+    out["headline"] = {
+        "accuracy_fifo": fifo_b["accuracy"],
+        "accuracy_coverage": cov_b["accuracy"],
+        "easy_per_served_fifo": fifo_b["easy_tokens_per_served"],
+        "easy_per_served_coverage": cov_b["easy_tokens_per_served"],
+        "coverage_beats_fifo":
+            cov_b["accuracy"] >= fifo_b["accuracy"] and
+            cov_b["easy_tokens_per_served"] <
+            fifo_b["easy_tokens_per_served"],
+    }
+    return out
+
+
 def run(smoke: bool = False) -> dict:
     cfg, model, params = _bench_model()
     if smoke:
@@ -124,10 +260,12 @@ def run(smoke: bool = False) -> dict:
                     base["syncs_per_token"] / max(best["syncs_per_token"],
                                                   1e-9),
             }
+    scheduler = run_scheduler_scenario(smoke)
     out = {"config": {"smoke": smoke, "requests": requests,
                       "max_new": max_new, "slots": 8,
                       "backend": jax.default_backend()},
-           "rows": rows, "speedups": speedups}
+           "rows": rows, "speedups": speedups,
+           "scheduler": scheduler}
     with open("BENCH_serve.json", "w") as f:
         json.dump(out, f, indent=2)
     print("wrote BENCH_serve.json")
@@ -139,6 +277,19 @@ def run(smoke: bool = False) -> dict:
         assert min(f["syncs_per_token"] for f in fused) < \
             min(l["syncs_per_token"] for l in legacy), \
             "macro-step loop did not reduce host syncs per token"
+        # ... and at equal budget, coverage-aware traffic scheduling must
+        # match-or-beat fifo on quality (one request of sampling slack —
+        # the trained-LM comparison is stochastic and CI's jax is
+        # unpinned) while spending strictly fewer tokens per served easy
+        # request, with the prefix cache actually reusing KV
+        h = scheduler["headline"]
+        slack = 1.0 / scheduler["n_requests"]
+        assert h["accuracy_coverage"] + slack >= h["accuracy_fifo"], h
+        assert h["easy_per_served_coverage"] < h["easy_per_served_fifo"], h
+        cov = next(r for r in scheduler["rows"][1:]
+                   if r["policy"] == "coverage")
+        assert cov["prefix_cache"]["hits"] > 0
+        assert cov["total_tokens"] <= scheduler["equal_budget"]
     return out
 
 

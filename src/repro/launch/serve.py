@@ -36,6 +36,17 @@ def main():
     ap.add_argument("--macro-steps", type=int, default=8,
                     help="device decode steps per lax.while_loop launch; "
                          "0 = legacy per-token host loop")
+    ap.add_argument("--sched-policy", default="fifo",
+                    choices=["fifo", "coverage"],
+                    help="traffic policy: fifo (arrival order) or coverage "
+                         "(rank pending work by posterior coverage deficit "
+                         "+ expected marginal gain, with aging)")
+    ap.add_argument("--global-budget", type=int, default=0,
+                    help="hard token budget across the whole request "
+                         "stream (0 = unlimited)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prompt-prefix KV reuse (paged "
+                         "impls on all-attention decoders)")
     ap.add_argument("--no-bucket-prefill", action="store_true",
                     help="disable length-bucketed batched prefill")
     ap.add_argument("--prefill-bucket-min", type=int, default=16,
@@ -63,6 +74,9 @@ def main():
         macro_steps=args.macro_steps,
         bucket_prefill=not args.no_bucket_prefill,
         prefill_bucket_min=args.prefill_bucket_min,
+        sched_policy=args.sched_policy,
+        global_budget=args.global_budget,
+        prefix_cache=args.prefix_cache,
         seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -82,11 +96,20 @@ def main():
     print(f"macro-step: K={eng.macro_steps}, {eng.macro_launches} launches, "
           f"{eng.host_syncs} host syncs "
           f"({eng.host_syncs / max(eng.total_tokens, 1):.3f} per token)")
+    ss = eng.sched_stats()
+    print(f"scheduler: {ss['policy']} admitted={ss['admitted_candidates']} "
+          f"spent={ss['spent']}/{ss['global_budget'] or 'inf'} "
+          f"declined={ss['declined_rounds']} starved={ss['starved']}")
     if eng.paged:
         s = eng.kv_stats()
         print(f"paged kv: peak {s['max_in_use']}/{s['num_pages']} pages "
               f"({s['peak_kv_bytes'] / 1e6:.2f} MB resident at peak vs "
               f"{s['dense_equiv_bytes'] / 1e6:.2f} MB dense-equivalent)")
+        if "prefix_cache" in s:
+            pc = s["prefix_cache"]
+            print(f"prefix cache: {pc['hits']} page hits, "
+                  f"{pc['hit_tokens']} prefill tokens skipped, "
+                  f"{pc['bytes_saved'] / 1e6:.2f} MB KV writes saved")
 
 
 if __name__ == "__main__":

@@ -130,7 +130,7 @@ def sdpa(q, k, v, *, causal: bool, window: int = 0,
 
 def attn_prefill(params, cfg: ModelConfig, x, positions, *, window: int = 0,
                  impl: str = "xla", cross_kv=None, causal: bool = True,
-                 kv_mask=None):
+                 kv_mask=None, ctx_kv=None, q_offset=0):
     """Full-sequence attention. Returns (out, (k, v)) for cache seeding.
 
     ``cross_kv``: optional (k, v) from an encoder — if given, performs
@@ -144,6 +144,15 @@ def attn_prefill(params, cfg: ModelConfig, x, positions, *, window: int = 0,
     it additionally pins the pad positions' outputs. The Pallas flash
     kernel has no mask argument; bucketed prefill on the pallas impl
     relies on causality alone (real rows identical either way).
+
+    ``ctx_kv``: optional (k, v) of already-computed *self*-attention
+    context occupying absolute positions [0, q_offset) — the
+    continuation-prefill path for cross-request prefix-cache hits. The
+    suffix queries (at absolute positions ``positions``, rope applied
+    there) attend causally over [context; new]. Only the NEW (k, v) is
+    returned for cache seeding — the context already lives in the KV
+    pool. Always runs the XLA sdpa (the flash kernel has no context
+    argument; KV values are impl-independent so the cache stays exact).
     """
     B, L, _ = x.shape
     if cross_kv is not None:
@@ -154,6 +163,14 @@ def attn_prefill(params, cfg: ModelConfig, x, positions, *, window: int = 0,
         out = dense(params["wo"], out.reshape(B, L, -1))
         return out, (k, v)
     q, k, v = _project_qkv(params, cfg, x, positions)
+    if ctx_kv is not None:
+        kc = jnp.concatenate([ctx_kv[0].astype(k.dtype), k], axis=1)
+        vc = jnp.concatenate([ctx_kv[1].astype(v.dtype), v], axis=1)
+        out = sdpa(q, _expand_kv(kc, cfg.num_heads),
+                   _expand_kv(vc, cfg.num_heads),
+                   causal=causal, window=window, q_offset=q_offset)
+        out = dense(params["wo"], out.reshape(B, L, -1))
+        return out, (k, v)
     if impl == "pallas":
         from repro.kernels import ops
         out = ops.flash_attention(q, _expand_kv(k, cfg.num_heads),

@@ -93,6 +93,27 @@ class Model:
         return (not self.cfg.is_encoder_decoder and
                 all(k in (ATTN, LOCAL_ATTN) for k in self.cfg.layer_kinds))
 
+    def prefill_suffix(self, params: Params, tokens, cache, ctx_kv, start,
+                       *, impl: str = "xla"):
+        """Continuation prefill for cross-request prefix-cache hits: run
+        only the suffix ``tokens`` (absolute positions start..), attending
+        to ``ctx_kv`` — the cached pages' K/V for positions [0, start).
+        Requires ``supports_prefix_cache``."""
+        return tf_lib.transformer_prefill_suffix(params, self.cfg, tokens,
+                                                 cache, ctx_kv, start,
+                                                 impl=impl)
+
+    @property
+    def supports_prefix_cache(self) -> bool:
+        """Cross-request prompt-prefix KV reuse needs every layer's
+        prompt state to live in the shared KV pages: all-attention,
+        full-context (no windows — windowed rings are dense per-slot
+        state), decoder-only."""
+        from repro.config import ATTN
+        return (not self.cfg.is_encoder_decoder and
+                self.cfg.attn_window == 0 and
+                all(k == ATTN for k in self.cfg.layer_kinds))
+
     def decode_step(self, params: Params, token, cache, *, impl: str = "xla",
                     unroll: bool = False):
         if self.cfg.is_encoder_decoder:

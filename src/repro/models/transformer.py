@@ -73,13 +73,15 @@ def _window_for(cfg: ModelConfig, kind: str) -> int:
 
 
 def block_prefill(params: Params, cfg: ModelConfig, kind: str, x, positions,
-                  impl: str, kv_mask=None) -> Tuple[jax.Array, Any, Dict]:
+                  impl: str, kv_mask=None, ctx_kv=None, q_offset=0
+                  ) -> Tuple[jax.Array, Any, Dict]:
     aux: Dict[str, jax.Array] = {}
     h = rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind in (ATTN, LOCAL_ATTN):
         y, (k, v) = attn_lib.attn_prefill(params["attn"], cfg, h, positions,
                                           window=_window_for(cfg, kind),
-                                          impl=impl, kv_mask=kv_mask)
+                                          impl=impl, kv_mask=kv_mask,
+                                          ctx_kv=ctx_kv, q_offset=q_offset)
         x = x + y
         if _has_mlp(cfg, kind):
             x, aux = _mlp_part(params, cfg, x)
@@ -344,6 +346,59 @@ def transformer_prefill(params: Params, cfg: ModelConfig, tokens, cache,
     logits, hidden = _logits(params, cfg, x_last)
     new_cache = {"super": new_super, "tail": tuple(new_tail), "pos": pos}
     return logits[:, 0], hidden[:, 0], new_cache
+
+
+def transformer_prefill_suffix(params: Params, cfg: ModelConfig, tokens,
+                               cache, ctx_kv, start, *, impl: str = "xla"):
+    """Continuation prefill: run only the prompt *suffix* whose first
+    ``start`` absolute positions' KV already exist (the cross-request
+    prefix cache), attending to the supplied context K/V.
+
+    ``tokens``: (B, s) suffix tokens occupying absolute positions
+    [start, start+s). ``ctx_kv``: {"super": tuple of per-pattern-entry
+    (k, v) stacked (n_super, B, start, Hkv, hd), "tail": tuple of
+    (B, start, Hkv, hd) pairs} gathered from the cached pages. ``start``
+    may be a traced int32 scalar (no recompile per prefix length; the
+    suffix length s and the context length are shape-specializing).
+
+    All-attention full-context decoders only — every layer's prompt
+    state must live in the (cached) KV pages; recurrent or windowed
+    layers would need their private prompt state replayed. The cache
+    is seeded with the SUFFIX K/V at row positions [0, s) — callers
+    track the ``start`` offset (engine: ``info["prefix_len"]``).
+    Returns (logits_last (B, V), hidden_last (B, d), cache).
+    """
+    assert not cfg.is_encoder_decoder and cfg.attn_window == 0 and \
+        all(k == ATTN for k in cfg.layer_kinds), \
+        "prefix-cache continuation prefill needs an all-attention decoder"
+    pat, n_super, tail = _pattern_split(cfg)
+    x = embed_inputs(params, cfg, tokens)
+    B, s, _ = x.shape
+    positions = start + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32),
+                                         (B, s))
+
+    def scan_body(x, inp):
+        layer_params, cache_entries, ctx_entries = inp
+        new_entries = []
+        for p, kind, ce, cx in zip(layer_params, pat, cache_entries,
+                                   ctx_entries):
+            x, entry, _ = block_prefill(p, cfg, kind, x, positions, impl,
+                                        ctx_kv=cx, q_offset=start)
+            new_entries.append(_seed_entry(cfg, kind, ce, entry))
+        return x, tuple(new_entries)
+
+    x, new_super = jax.lax.scan(
+        scan_body, x, (params["super"], cache["super"], ctx_kv["super"]))
+    new_tail = []
+    for p, kind, ce, cx in zip(params["tail"], tail, cache["tail"],
+                               ctx_kv["tail"]):
+        x, entry, _ = block_prefill(p, cfg, kind, x, positions, impl,
+                                    ctx_kv=cx, q_offset=start)
+        new_tail.append(_seed_entry(cfg, kind, ce, entry))
+    logits, hidden = _logits(params, cfg, x[:, -1:])
+    pos = jnp.full((B,), s, jnp.int32) + start
+    return logits[:, 0], hidden[:, 0], \
+        {"super": new_super, "tail": tuple(new_tail), "pos": pos}
 
 
 def _seed_entry(cfg: ModelConfig, kind: str, cache_entry, prefill_entry):

@@ -1,2 +1,7 @@
 from repro.serving.engine import EngineState, Request, Result, ServeEngine  # noqa: F401
-from repro.serving.page_pool import PagePool, PagePoolError  # noqa: F401
+from repro.serving.page_pool import (PagePool, PagePoolError,  # noqa: F401
+                                     PrefixCache, prefix_page_keys)
+from repro.serving.scheduler import (CoverageScheduler,  # noqa: F401
+                                     FifoScheduler, NewWork, RoundWork,
+                                     Scheduler, SchedulerContext,
+                                     make_scheduler)

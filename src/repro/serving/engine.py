@@ -35,6 +35,16 @@ prefill because pads would leak into their state).
 Modes: "camd" (adaptive), "best_of_n", "self_consistency", "greedy" —
 the paper's baselines share the engine so efficiency comparisons are
 apples-to-apples.
+
+Traffic-level decisions (which queued request or pending round gets the
+free slots, with how many candidates and what per-candidate token limit)
+are delegated to a pluggable scheduler (``serving/scheduler.py``):
+``fifo`` reproduces the historical loop bit-exactly; ``coverage`` ranks
+work by posterior coverage deficit + expected marginal gain under an
+optional stream-wide token budget. The paged path can additionally
+share page-aligned prompt prefixes across requests (``prefix_cache=True``,
+``PagePool``'s content-hash chain): hits skip the shared pages' prefill
+entirely via ``Model.prefill_suffix`` against the cached pages' KV.
 """
 from __future__ import annotations
 
@@ -51,7 +61,9 @@ from repro.core import controller as ctrl
 from repro.models.model import Model
 from repro.sampling.samplers import (decode_step_key, sample_token,
                                      sample_token_batch)
-from repro.serving.page_pool import PagePool
+from repro.serving.page_pool import PagePool, prefix_page_keys
+from repro.serving.scheduler import (NewWork, RoundWork, SchedulerContext,
+                                     make_scheduler)
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +109,9 @@ class EngineState(NamedTuple):
     out_buf: jax.Array         # (B, max_new)
     bias: jax.Array            # (B, V) CAMD mixture guidance
     greedy: jax.Array          # (B,) bool
+    limit: jax.Array           # (B,) int32 per-candidate token limit
+                               # (= max_new unless the scheduler granted a
+                               # tighter budget-constrained limit)
 
 
 def _next_pow2(n: int) -> int:
@@ -117,6 +132,10 @@ class ServeEngine:
                  macro_steps: int = 8,
                  bucket_prefill: bool = True,
                  prefill_bucket_min: int = 16,
+                 sched_policy="fifo",
+                 global_budget: int = 0,
+                 sched_kwargs: Optional[Dict[str, Any]] = None,
+                 prefix_cache: bool = False,
                  seed: int = 0):
         assert mode in ("camd", "best_of_n", "self_consistency", "greedy")
         assert impl in ("xla", "pallas", "paged", "paged_pallas")
@@ -144,6 +163,10 @@ class ServeEngine:
         self.paged = impl.startswith("paged")
         self._model_impl = {"paged": "xla", "paged_pallas": "pallas"}[impl] \
             if self.paged else impl
+        # cross-request prefix cache: paged engines on all-attention
+        # decoders only (cached pages must cover every layer's prompt KV).
+        self.prefix_cache = bool(prefix_cache) and self.paged and \
+            model.supports_prefix_cache
         if self.paged:
             ps = paged_kv.page_size
             assert cache_len % ps == 0, \
@@ -151,7 +174,8 @@ class ServeEngine:
             self.page_size = ps
             self.pages_per_slot = cache_len // ps
             num_pages = paged_kv.num_pages or slots * self.pages_per_slot + 1
-            self.pool = PagePool(num_pages, ps)
+            self.pool = PagePool(num_pages, ps,
+                                 prefix_cache=self.prefix_cache)
             self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
             self._slot_pos = np.zeros(slots, np.int64)
             self._slot_limit = np.zeros(slots, np.int64)  # L + max_new
@@ -180,9 +204,23 @@ class ServeEngine:
         self._queue: List[Request] = []
         self._slot_req = np.full(slots, -1, np.int64)   # uid per slot
         self._slot_cand = np.full(slots, -1, np.int64)  # candidate uid per slot
+        self._slot_lim = np.full(slots, max_new_tokens, np.int64)
         self._reqs: Dict[int, Dict[str, Any]] = {}      # uid -> bookkeeping
         self._next_cand = 0
         self._dtype = model.param_dtype
+
+        # traffic-level policy: every admission / round decision is
+        # delegated to the scheduler (serving/scheduler.py). "fifo"
+        # reproduces the pre-scheduler engine decision for decision.
+        self.scheduler = make_scheduler(sched_policy,
+                                        global_budget=global_budget,
+                                        **(sched_kwargs or {}))
+        self._arrival: Dict[int, int] = {}              # uid -> submit order
+        self._submit_seq = 0
+        self.starved_uids: List[int] = []               # budget-starved
+        # prefill telemetry (the prefix cache exists to shrink these)
+        self.prefill_calls = 0
+        self.prefill_tokens = 0
 
         # bucketed prefill: only exact for attention-only decoders, and
         # only when the padded bucket fits every attention ring without
@@ -206,6 +244,8 @@ class ServeEngine:
         self._prefill_fn = self._build_prefill()
         self._bucket_fn = self._build_bucket_prefill()
         self._first_fn = self._build_first_tokens()
+        self._suffix_fn = self._build_suffix_prefill() \
+            if self.prefix_cache else None
         self._greedy_row = jnp.asarray([self.mode == "greedy"])
         self._round_fn = jax.jit(ctrl.batched_round_update_assign(self.camd))
         self._dummy_frontier = jnp.zeros((slots, 1), jnp.int32)
@@ -254,6 +294,7 @@ class ServeEngine:
             out_buf=jnp.zeros((B, self.max_new), jnp.int32),
             bias=jnp.zeros((B, V), jnp.float32),
             greedy=jnp.zeros((B,), bool),
+            limit=jnp.full((B,), self.max_new, jnp.int32),
         )
 
     # ------------------------------------------------------------------
@@ -287,6 +328,19 @@ class ServeEngine:
                                       greedy=greedy)
 
         return first
+
+    def _build_suffix_prefill(self):
+        """Continuation prefill for prefix-cache hits: only the prompt
+        *suffix* runs, attending to the cached pages' K/V as context.
+        Compiles once per (suffix_len, prefix_pages) shape pair."""
+        model, impl = self.model, self._model_impl
+
+        @jax.jit
+        def suffix(params, tokens, cache_row, ctx, start):
+            return model.prefill_suffix(params, tokens, cache_row, ctx,
+                                        start, impl=impl)
+
+        return suffix
 
     def _make_step_body(self):
         """One decode+sample+aggregate step — the body shared by the
@@ -327,14 +381,17 @@ class ServeEngine:
                 (jnp.arange(max_new)[None, :] == st.n_tok[:, None]) & act[:, None],
                 tok[:, None], st.out_buf)
             n_tok = st.n_tok + act.astype(jnp.int32)
-            done = act & ((tok == eos) | (n_tok >= max_new))
+            # per-slot limit (== max_new unless the scheduler granted a
+            # tighter budget-constrained one) ends the candidate exactly
+            # where the budget accounting assumed it would.
+            done = act & ((tok == eos) | (n_tok >= st.limit))
             new_state = EngineState(
                 cache=cache, last_token=jnp.where(act, tok, st.last_token),
                 token_counts=counts, sum_lp=sum_lp, n_tok=n_tok,
                 prev_h=jnp.where(act[:, None], hn, st.prev_h),
                 sum_coh=sum_coh, sum_emb=sum_emb, align_sum=align_sum,
                 active=act & ~done, out_buf=out_buf, bias=st.bias,
-                greedy=st.greedy)
+                greedy=st.greedy, limit=st.limit)
             return new_state, done
 
         return step
@@ -398,6 +455,8 @@ class ServeEngine:
         if req.uid in self._reqs or any(r.uid == req.uid
                                         for r in self._queue):
             raise ValueError(f"duplicate request uid {req.uid}")
+        self._arrival[req.uid] = self._submit_seq
+        self._submit_seq += 1
         self._queue.append(req)
 
     def _cache_batch_axis(self, path) -> int:
@@ -430,7 +489,49 @@ class ServeEngine:
             if self._cache_batch_axis(path) == 1 else leaf[i:i + 1], cache)
 
     # -- paged cache plumbing ------------------------------------------
-    def _seed_paged_slots(self, info, slot_ids: List[int]):
+    def _seed_prompt_pages(self, info):
+        """Allocate + write the request's full prompt pages (once per
+        request — one pool hold each, released when the request
+        finishes) and register them in the prefix cache. Prefix-cache
+        hits arrive here already holding the cached prefix pages; only
+        the remainder is written, from the suffix row (row positions =
+        prompt positions - prefix_len)."""
+        if info.get("prompt_seeded"):
+            return
+        ps = self.page_size
+        full = info["prompt_len"] // ps
+        held = info.setdefault("prompt_pages", [])
+        assert len(held) * ps == info.get("prefix_len", 0), \
+            (len(held), info.get("prefix_len", 0))
+        new_full = self.pool.alloc(full - len(held))
+        if new_full:
+            self.state = self.state._replace(cache=self._write_pages(
+                self.state.cache, info["cache_row"], new_full, 0))
+        info["prompt_pages"] = held + new_full
+        if self.prefix_cache and info.get("cacheable"):
+            self.pool.prefix.insert(info["page_keys"], info["prompt_pages"])
+        info["prompt_seeded"] = True
+
+    def _maybe_seed_early(self, req: Request):
+        """Prefix-cache mode: seed + register prompt pages at *prefill*
+        time (not first admission) so same-prefix requests later in the
+        same batch already hit. Skipped when the pool lacks headroom —
+        seeding then happens at admission, under admission control."""
+        info = self._reqs[req.uid]
+        if not info.get("cacheable") or info.get("prompt_seeded"):
+            return
+        L = info["prompt_len"]
+        need = L // self.page_size - len(info.get("prompt_pages", ()))
+        headroom = self.pool.free_pages + self.pool.evictable() \
+            - self._reserved
+        # keep at least one worst-case candidate fundable after seeding
+        if headroom - need < self._pages_per_candidate(L):
+            return
+        self._seed_prompt_pages(info)
+        # early seeding must not eat into pages backing live reservations
+        self.pool.ensure_free(self._reserved)
+
+    def _seed_paged_slots(self, info, slot_ids: List[int], lim: int):
         """Point ``slot_ids`` at the request's prompt pages.
 
         Full prompt pages are written to the pool once per request and
@@ -438,19 +539,24 @@ class ServeEngine:
         tail page — the first page any candidate will write into, i.e.
         the CoW divergence point — is copied per candidate. Dense
         (non-paged: windowed attn / SSM / RG-LRU) entries scatter as in
-        the contiguous path."""
-        cache = self.state.cache
+        the contiguous path.
+
+        With the cross-request prefix cache, ``info["prompt_pages"]`` may
+        already hold the cached page-aligned prefix (request hold taken
+        at prefill time); only the remaining full pages are allocated and
+        written here, from the *suffix* prefill row (row positions are
+        prompt positions minus ``info["prefix_len"]``). Newly written
+        full pages are registered in the cache for future requests."""
         row = info["cache_row"]
         L = info["prompt_len"]                   # prompt incl. evidence
         ps = self.page_size
-        assert L + self.max_new <= self.cache_len, \
-            f"prompt {L} + max_new {self.max_new} overflows paged cache " \
+        assert L + lim <= self.cache_len, \
+            f"prompt {L} + limit {lim} overflows paged cache " \
             f"of {self.cache_len} (paged KV does not ring-wrap)"
         full, tail_len = divmod(L, ps)
-        if "prompt_pages" not in info:
-            # one pool hold per request, released when the request finishes
-            info["prompt_pages"] = self.pool.alloc(full)
-            cache = self._write_pages(cache, row, info["prompt_pages"], 0)
+        row_off = info.get("prefix_len", 0)      # cache row starts here
+        self._seed_prompt_pages(info)
+        cache = self.state.cache
         bt_rows = np.zeros((len(slot_ids), self.pages_per_slot), np.int32)
         tails = []
         for j, s in enumerate(slot_ids):
@@ -462,16 +568,23 @@ class ServeEngine:
                 pages += tail
             self._slot_pages[s] = pages
             self._slot_pos[s] = L
-            self._slot_limit[s] = L + self.max_new
-            future = self._pages_per_candidate(L) - (1 if tail_len else 0)
+            self._slot_limit[s] = L + lim
+            future = self._pages_per_candidate(L, lim) - (1 if tail_len else 0)
             self._slot_reserved[s] = future
             self._reserved += future
             bt_rows[j, :len(pages)] = pages
         if tails:
             # every candidate's tail page holds the same prompt bytes:
             # one broadcast scatter, not one full-pool copy per candidate
-            cache = self._write_pages(cache, row, tails, full * ps,
+            cache = self._write_pages(cache, row, tails, full * ps - row_off,
                                       broadcast=True)
+        if self.prefix_cache:
+            # admission counted cache-evictable pages as headroom; convert
+            # that headroom into ACTUALLY free pages now, before a later
+            # prefix hit can re-pin them — reservations must always be
+            # backed by the free list or frontier staging could fail
+            # mid-decode
+            self.pool.ensure_free(self._reserved)
         idx = jnp.asarray(slot_ids)
         cache = {**cache,
                  "block_table": cache["block_table"].at[idx].set(
@@ -479,21 +592,27 @@ class ServeEngine:
                  "pos": cache["pos"].at[idx].set(jnp.int32(L))}
         return self._scatter_dense_entries(cache, row, slot_ids)
 
-    def _pages_per_candidate(self, prompt_len: int) -> int:
+    def _pages_per_candidate(self, prompt_len: int,
+                             lim: Optional[int] = None) -> int:
         """Pages a candidate may allocate beyond the shared prompt pages:
         its private tail copy plus every boundary crossed while decoding
-        up to ``max_new`` tokens."""
+        up to ``lim`` (default ``max_new``) tokens."""
         ps = self.page_size
-        total = -((prompt_len + self.max_new) // -ps)        # ceil
+        lim = self.max_new if lim is None else lim
+        total = -((prompt_len + lim) // -ps)                 # ceil
         return total - prompt_len // ps
 
-    def _paged_affordable(self, info, want: int) -> int:
+    def _paged_affordable(self, info, want: int,
+                          lim: Optional[int] = None) -> int:
         """How many candidates of this request fit in the pool right now
-        (free pages minus reservations held by running candidates)."""
+        (free + cache-evictable pages minus reservations held by running
+        candidates and the request's unseeded prompt-page hold)."""
         L = info["prompt_len"]
-        per_cand = self._pages_per_candidate(L)
-        need_hold = 0 if "prompt_pages" in info else L // self.page_size
-        avail = self.pool.free_pages - self._reserved - need_hold
+        per_cand = self._pages_per_candidate(L, lim)
+        need_hold = 0 if info.get("prompt_seeded") else \
+            L // self.page_size - len(info.get("prompt_pages", ()))
+        avail = self.pool.free_pages + self.pool.evictable() \
+            - self._reserved - need_hold
         return max(0, min(want, avail // max(per_cand, 1)))
 
     def _write_pages(self, cache, row, pages: List[int], start: int,
@@ -664,17 +783,42 @@ class ServeEngine:
         stats["resident_kv_bytes"] = stats["in_use"] * bpp
         stats["peak_kv_bytes"] = stats["max_in_use"] * bpp
         stats["dense_equiv_bytes"] = self.B * self.pages_per_slot * bpp
+        if self.pool.prefix is not None:
+            pc = self.pool.prefix
+            stats["prefix_cache"] = {
+                "probes": pc.probes,
+                "hits": pc.hits,                    # pages reused
+                "misses": pc.misses,                # probes short of full hit
+                "hit_tokens": pc.hit_tokens,        # prefill tokens skipped
+                "bytes_saved": pc.hits * bpp,       # KV bytes not re-written
+                "cached_pages": pc.cached_pages,
+                "insertions": pc.insertions,
+                "evictions": pc.evictions,
+            }
         return stats
 
-    def _admit(self, req: Request, slot_ids: List[int]):
+    def sched_stats(self) -> Dict[str, Any]:
+        """Traffic-policy telemetry: budget accounting, admissions,
+        declined rounds, starvation."""
+        s = dict(self.scheduler.stats())
+        s["starved"] = len(self.starved_uids)
+        s["prefill_calls"] = self.prefill_calls
+        s["prefill_tokens"] = self.prefill_tokens
+        return s
+
+    def _admit(self, req: Request, slot_ids: List[int],
+               limit: Optional[int] = None):
         """Seed slots with the request's prompt cache and sample the first
         token of each candidate from the prefill logits — one batched
         ``sample_token_batch`` dispatch over the round's split keys, not a
-        Python loop of single-row samples."""
+        Python loop of single-row samples. ``limit`` is the scheduler's
+        per-candidate token grant (``None`` = the engine-wide max)."""
+        lim = self.max_new if limit is None else min(int(limit), self.max_new)
+        assert lim >= 1
         info = self._reqs[req.uid]
         st = self.state
         if self.paged:
-            cache = self._seed_paged_slots(info, slot_ids)
+            cache = self._seed_paged_slots(info, slot_ids, lim)
         else:
             cache = self._scatter_cache_rows(st.cache, info["cache_row"],
                                              slot_ids)
@@ -716,11 +860,13 @@ class ServeEngine:
             bias=st.bias.at[idx].set(
                 jnp.repeat(bias if bias is not None else jnp.zeros((1, V)), n, axis=0)),
             greedy=st.greedy.at[idx].set(self.mode == "greedy"),
+            limit=st.limit.at[idx].set(lim),
         )
         self.state = new
         for s in slot_ids:
             self._slot_req[s] = req.uid
             self._slot_cand[s] = self._next_cand
+            self._slot_lim[s] = lim
             info["cand_slots"].append((self._next_cand, s))
             self._next_cand += 1
 
@@ -777,7 +923,78 @@ class ServeEngine:
         if req.evidence is not None:
             ev = jnp.asarray(req.evidence, self._dtype)[None]
         lg, h, cache_row = self._prefill_fn(self.params, prompt, cache_row, ev)
+        self.prefill_calls += 1
+        self.prefill_tokens += self._prompt_span(req)
         self._init_info(req, cache_row, lg, h, self._prompt_span(req))
+
+    # -- cross-request prefix cache ------------------------------------
+    def _mark_cacheable(self, req: Request):
+        """Record the request's page-key chain so its prompt pages get
+        registered in the prefix cache at seed time."""
+        if not self.prefix_cache or req.evidence is not None:
+            return
+        info = self._reqs[req.uid]
+        info["page_keys"] = prefix_page_keys(
+            np.asarray(req.prompt, np.int64), self.page_size)
+        info["cacheable"] = True
+
+    def _try_prefill_suffix(self, req: Request) -> bool:
+        """Prefix-cache fast path: if a page-aligned prefix of the prompt
+        is cached (same content hash chain), take a request hold on those
+        pages and prefill only the *suffix*, attending to the cached
+        pages' KV as context — the shared pages' prefill is skipped
+        entirely. The hit is capped at ``(L-1)//page_size`` pages so at
+        least one prompt token remains to produce last-token logits."""
+        if not self.prefix_cache or req.evidence is not None:
+            return False
+        prompt = np.asarray(req.prompt, np.int64)
+        usable = (len(prompt) - 1) // self.page_size
+        if usable <= 0:
+            return False
+        keys = prefix_page_keys(prompt, self.page_size)
+        pages = self.pool.prefix.match_and_hold(keys[:usable])
+        if not pages:
+            return False
+        start = len(pages) * self.page_size
+        suffix = jnp.asarray(prompt[start:], jnp.int32)[None, :]
+        ctx = self._gather_prefix_ctx(pages)
+        cache_row = self.model.make_cache(1, self.cache_len, self._dtype)
+        lg, h, cache_row = self._suffix_fn(
+            self.params, suffix, cache_row, ctx, jnp.int32(start))
+        self.prefill_calls += 1
+        self.prefill_tokens += len(prompt) - start          # suffix only
+        self._init_info(req, cache_row, lg, h, len(prompt))
+        info = self._reqs[req.uid]
+        info["prompt_pages"] = pages         # request hold already taken
+        info["prefix_len"] = start
+        info["page_keys"] = keys
+        info["cacheable"] = True
+        return True
+
+    def _gather_prefix_ctx(self, pages: List[int]):
+        """Assemble per-layer context K/V from cached pool pages:
+        (n_super, 1, h*ps, Hkv, hd) per stacked super entry (batch axis
+        inserted), (1, h*ps, Hkv, hd) per tail entry."""
+        idx = jnp.asarray(pages, jnp.int32)
+
+        def gather(entries):
+            out = []
+            for e in entries:
+                assert isinstance(e, dict) and "k_pages" in e, \
+                    "prefix cache requires all-attention paged layers"
+                kp, vp = e["k_pages"], e["v_pages"]
+                if kp.ndim == 5:            # stacked: (n_super, P, ps, ..)
+                    k = kp[:, idx].reshape(kp.shape[0], 1, -1, *kp.shape[3:])
+                    v = vp[:, idx].reshape(vp.shape[0], 1, -1, *vp.shape[3:])
+                else:
+                    k = kp[idx].reshape(1, -1, *kp.shape[2:])
+                    v = vp[idx].reshape(1, -1, *vp.shape[2:])
+                out.append((k, v))
+            return tuple(out)
+
+        cache = self.state.cache
+        return {"super": gather(cache["super"]),
+                "tail": gather(cache["tail"])}
 
     def _bucket_len(self, prompt_len: int) -> int:
         return _next_pow2(max(prompt_len, self.prefill_bucket_min))
@@ -794,9 +1011,29 @@ class ServeEngine:
         pending = [r for r in self._queue[:ahead] if r.uid not in self._reqs]
         if not pending:
             return
+        # prefix-cache hits take the suffix path (skipping the shared
+        # pages' prefill). Cacheable misses are prefilled one by one with
+        # their pages seeded immediately, so same-prefix requests later
+        # in the SAME batch hit too (the trade against bucketed batching
+        # applies only when the prefix cache is on).
+        if self.prefix_cache:
+            misses = []
+            for r in pending:
+                if self._try_prefill_suffix(r):
+                    self._maybe_seed_early(r)
+                elif r.evidence is None:
+                    self._prefill_request(r)
+                    self._mark_cacheable(r)
+                    self._maybe_seed_early(r)
+                else:
+                    misses.append(r)
+            pending = misses
+            if not pending:
+                return
         if not self.bucket_prefill:
             for r in pending:
                 self._prefill_request(r)
+                self._mark_cacheable(r)
             return
         groups: Dict[Tuple[int, int], List[Request]] = {}
         for r in pending:
@@ -809,8 +1046,10 @@ class ServeEngine:
                 # tail analysis no longer holds, take the exact 1-row path
                 for r in reqs:
                     self._prefill_request(r)
-                continue
-            self._prefill_bucket(Lb, ne, reqs)
+            else:
+                self._prefill_bucket(Lb, ne, reqs)
+            for r in reqs:
+                self._mark_cacheable(r)
 
     def _prefill_bucket(self, Lb: int, ne: int, reqs: List[Request]):
         n = len(reqs)
@@ -830,6 +1069,8 @@ class ServeEngine:
         cache = self.model.make_cache(nb, self.cache_len, self._dtype)
         lg, h, cache = self._bucket_fn(self.params, jnp.asarray(toks),
                                        jnp.asarray(lens), cache, ev)
+        self.prefill_calls += 1
+        self.prefill_tokens += int(sum(lens[:n]))
         for i, r in enumerate(reqs):
             self._init_info(r, self._slice_cache_row(cache, i),
                             lg[i:i + 1], h[i:i + 1], int(lens[i]))
@@ -845,38 +1086,16 @@ class ServeEngine:
         return min(self.n_candidates, self.B)
 
     def _schedule(self):
-        """Fill free slots: queued requests first, then next rounds.
+        """Fill free slots — every admission/round decision is delegated
+        to the traffic policy (``self.scheduler``) through the
+        ``SchedulerContext`` facade.
 
         Paged backpressure: a request is only admitted when the pool can
         cover its candidates' worst-case pages (``_paged_affordable``);
         otherwise it waits in the queue / stays pending until running
         candidates finish and return pages."""
         self._prefill_pending()
-        free = self._free_slots()
-        while free and self._queue:
-            req = self._queue[0]
-            take = min(self._per_round(), len(free))
-            if self.paged:
-                take = self._paged_affordable(self._reqs[req.uid], take)
-                if take <= 0:
-                    break             # wait for pages, keep queue order
-            self._queue.pop(0)
-            ids, free = free[:take], free[take:]
-            self._admit(req, ids)
-        # continuing requests wanting another round
-        for uid, info in self._reqs.items():
-            if info["done"] or info.get("pending_round") is not True:
-                continue
-            if not free:
-                break
-            take = min(self._needed(info), len(free))
-            if self.paged:
-                take = self._paged_affordable(info, take)
-            if take <= 0:
-                continue
-            ids, free = free[:take], free[take:]
-            info["pending_round"] = False
-            self._admit(info["req"], ids)
+        self.scheduler.schedule(_EngineSchedContext(self))
 
     def _needed(self, info) -> int:
         if self.mode == "camd":
@@ -924,6 +1143,10 @@ class ServeEngine:
             self._slot_req[slot] = -1
             self._slot_cand[slot] = -1
             self.total_tokens += n
+            # release the candidate's worst-case token commitment; its
+            # unspent remainder immediately funds queued work
+            self.scheduler.on_finish(uid, n, int(self._slot_lim[slot]))
+            self._slot_lim[slot] = self.max_new
             if self.paged:
                 # return the candidate's pages (shared prompt pages just
                 # drop a holder)
@@ -999,10 +1222,16 @@ class ServeEngine:
                 lambda x: jnp.concatenate(
                     [x, jnp.repeat(x[:1], nb - n, axis=0)]), (states, inps))
         new_states, biases, clusters = self._round_fn(states, inps)
-        stopped_np, clusters_np = self._sync((new_states.stopped, clusters))
+        stopped_np, clusters_np, pstar_np, best_np = self._sync(
+            (new_states.stopped, clusters, new_states.p_star,
+             new_states.best_score))
         for i, (uid, round_recs, _) in enumerate(batch):
             info = self._reqs[uid]
             info["camd"] = jax.tree.map(lambda x, i=i: x[i], new_states)
+            # host copies the traffic scheduler ranks by (folded into the
+            # round sync above — no extra device round-trip)
+            info["p_star"] = float(pstar_np[i])
+            info["best_score_host"] = float(best_np[i])
             for j, r in enumerate(round_recs[:R]):
                 r["cluster"] = int(clusters_np[i, j])
             info["round"] += 1
@@ -1013,12 +1242,21 @@ class ServeEngine:
                 info["bias"] = None
                 stopped = len(info["records"]) >= self.n_candidates
             if stopped:
-                info["done"] = True
-                info["cache_row"] = None  # free the prompt cache
-                if self.paged and "prompt_pages" in info:
-                    self.pool.free(info.pop("prompt_pages"))
+                self._finish_request(uid)
             else:
                 info["pending_round"] = True
+
+    def _finish_request(self, uid: int):
+        """Finalize a request with the candidates it has: free its prompt
+        cache row and paged prompt-page holds. Used when the stop rule
+        trips, when the coverage policy declines further rounds, and by
+        the budget-exhaustion drain."""
+        info = self._reqs[uid]
+        info["done"] = True
+        info["pending_round"] = False
+        info["cache_row"] = None          # free the prompt cache
+        if self.paged and info.get("prompt_pages"):
+            self.pool.free(info.pop("prompt_pages"))
 
     # ------------------------------------------------------------------
     def _has_pending(self) -> bool:
@@ -1040,14 +1278,40 @@ class ServeEngine:
             f"discarded) — raise num_pages or lower "
             f"max_new_tokens/prompt lengths")
 
+    def _finalize_starved(self):
+        """Terminal drain under an exhausted global token budget: pending
+        work that can never be funded again finalizes with whatever
+        candidates it already has (possibly none — ``Result.tokens``
+        empty, recorded in ``starved_uids``). The budget invariant
+        (total tokens <= budget) is preserved; nothing hangs."""
+        for req in self._queue:
+            if req.uid not in self._reqs:
+                self._reqs[req.uid] = {
+                    "req": req, "cache_row": None,
+                    "camd": ctrl.init_state(self.camd, self.d, self.V),
+                    "bias": None, "round": 0, "cand_slots": [],
+                    "records": {}, "align_const": 0.0, "done": False}
+        self._queue.clear()
+        for uid, info in self._reqs.items():
+            if not info["done"]:
+                if not info["records"]:
+                    self.starved_uids.append(uid)
+                self._finish_request(uid)
+
     def _refill_idle(self) -> bool:
         """No slot is live: drain the queue / pending rounds back into
         slots. Returns True when all work is complete (caller breaks)."""
         if not self._has_pending():
             return True
         self._schedule()
-        if self.paged and not self._any_live():
-            self._raise_pool_sizing()
+        if not self._any_live():
+            if self.scheduler.exhausted():
+                # global token budget spent: nothing can ever be admitted
+                # again — finalize instead of spinning
+                self._finalize_starved()
+                return True
+            if self.paged:
+                self._raise_pool_sizing()
         return False
 
     def run(self) -> List[Result]:
@@ -1137,6 +1401,14 @@ class ServeEngine:
         info = self._reqs[uid]
         cs = info["camd"]
         recs = list(info["records"].values())
+        if not recs:
+            # budget-starved: never admitted before the stream's global
+            # token budget ran out
+            return Result(
+                uid=uid, tokens=np.zeros((0,), np.int32), n_candidates=0,
+                tokens_spent=0, rounds=info["round"],
+                p_star=float(cs.p_star), best_score=float(cs.best_score),
+                stopped_early=False, candidates=[])
         if self.mode == "self_consistency":
             # majority vote: the largest cluster wins, then its
             # best-scoring member is the answer (falling back to the
@@ -1164,3 +1436,67 @@ class ServeEngine:
             candidates=[{k: v for k, v in r.items() if k not in ("counts", "emb")}
                         for r in recs],
         )
+
+
+class _EngineSchedContext(SchedulerContext):
+    """The engine-side implementation of the scheduler facade. Slot ids
+    are handed out in ascending order (``_free_slots``) exactly as the
+    pre-scheduler loop did, so the fifo policy's slot assignment — and
+    therefore its token streams — stay bit-identical."""
+
+    def __init__(self, eng: ServeEngine):
+        self.eng = eng
+        self.max_new = eng.max_new
+
+    def free_slots(self) -> int:
+        return len(self.eng._free_slots())
+
+    def queued_new(self) -> List[NewWork]:
+        eng = self.eng
+        out = []
+        for r in eng._queue:
+            if r.uid not in eng._reqs:
+                break                    # prefill covers a queue prefix
+            out.append(NewWork(uid=r.uid, arrival=eng._arrival[r.uid],
+                               want=eng._per_round()))
+        return out
+
+    def pending_rounds(self) -> List[RoundWork]:
+        eng = self.eng
+        out = []
+        for uid, info in eng._reqs.items():
+            if info["done"] or info.get("pending_round") is not True:
+                continue
+            recs = list(info["records"].values())
+            scores = [r["score"] for r in recs]
+            out.append(RoundWork(
+                uid=uid, arrival=eng._arrival.get(uid, 0),
+                want=eng._needed(info), rounds=info["round"],
+                p_star=info.get("p_star", 0.0), delta=eng.camd.delta,
+                best_score=info.get("best_score_host",
+                                    max(scores, default=0.0)),
+                scores=scores,
+                mean_len=float(np.mean([r["n"] for r in recs]))
+                if recs else 0.0))
+        return out
+
+    def affordable(self, uid: int, want: int, limit: int) -> int:
+        eng = self.eng
+        if not eng.paged:
+            return want
+        return eng._paged_affordable(eng._reqs[uid], want, limit)
+
+    def admit_new(self, uid: int, take: int, limit: int) -> None:
+        eng = self.eng
+        i = next(i for i, r in enumerate(eng._queue) if r.uid == uid)
+        req = eng._queue.pop(i)
+        eng._admit(req, eng._free_slots()[:take], limit=limit)
+
+    def admit_round(self, uid: int, take: int, limit: int) -> None:
+        eng = self.eng
+        info = eng._reqs[uid]
+        info["pending_round"] = False
+        eng._admit(info["req"], eng._free_slots()[:take], limit=limit)
+
+    def finish_request(self, uid: int) -> None:
+        self.eng._finish_request(uid)

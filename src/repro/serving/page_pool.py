@@ -9,6 +9,17 @@ the partially-filled tail page (copy-on-write at the first diverging
 token), so prompt KV is resident once per request, not once per
 candidate.
 
+The optional **cross-request prefix cache** (``prefix_cache=True``)
+generalizes that sharing across requests and across time: page-aligned
+prompt prefixes are content-hashed into a chain (page i's key commits to
+pages 0..i's tokens, radix-tree style), and the cache itself holds one
+refcount on each registered page so finished requests' prompt KV stays
+resident. A later request whose prompt starts with the same bytes
+shares those pages CoW — its prefill skips them entirely. Cached-only
+pages (refcount 1, held by nobody but the cache) are *evictable*:
+``alloc`` reclaims them LRU-leaf-first under pool pressure, so the
+cache can never starve live traffic.
+
 Page 0 is reserved as the quarantine page: idle slots' block tables
 point at it and their dead writes land there. It is never allocated and
 never freed.
@@ -19,7 +30,8 @@ lean on these invariants.
 """
 from __future__ import annotations
 
-from typing import Iterable, List
+import hashlib
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
@@ -28,8 +40,168 @@ class PagePoolError(RuntimeError):
     pass
 
 
+def prefix_page_keys(tokens, page_size: int) -> List[str]:
+    """Content-hash chain over the page-aligned prefix of ``tokens``:
+    key[i] = H(key[i-1] || tokens[i*ps:(i+1)*ps]), so equal keys imply
+    equal prompt bytes for the whole prefix up to and including page i.
+    Only *full* pages get keys (the partial tail page is per-candidate
+    CoW, never shared)."""
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int64))
+    keys: List[str] = []
+    prev = b""
+    for i in range(len(toks) // page_size):
+        d = hashlib.sha256(
+            prev + toks[i * page_size:(i + 1) * page_size].tobytes()).digest()
+        keys.append(d.hex())
+        prev = d
+    return keys
+
+
+class _Node:
+    __slots__ = ("page", "parent", "children", "tick")
+
+    def __init__(self, page: int, parent: Optional[str], tick: int):
+        self.page = page
+        self.parent = parent
+        self.children = 0
+        self.tick = tick
+
+
+class PrefixCache:
+    """Content-hash chain -> resident KV page map (see module docstring).
+
+    The cache holds exactly one pool refcount per registered page; the
+    pool stays the single source of truth for page liveness. Invariants
+    (checked by ``PagePool.check``): every cached page has refcount >= 1,
+    and every node's parent is cached (chains are prefix-closed, which
+    LRU *leaf-first* eviction preserves)."""
+
+    def __init__(self, pool: "PagePool"):
+        self.pool = pool
+        self._nodes: Dict[str, _Node] = {}
+        self._tick = 0
+        self._evictable_memo = None
+        self.probes = 0        # lookup calls
+        self.hits = 0          # pages reused across requests
+        self.misses = 0        # lookups that fell short of a full hit
+        self.hit_tokens = 0    # prefill tokens skipped
+        self.insertions = 0
+        self.evictions = 0
+
+    @property
+    def cached_pages(self) -> int:
+        return len(self._nodes)
+
+    def match_and_hold(self, keys: Sequence[str]) -> List[int]:
+        """Pages of the longest cached prefix of ``keys``, with one
+        holder added per page (the caller's request hold) and the chain
+        LRU-touched. Empty list on a complete miss."""
+        self._tick += 1
+        self.probes += 1
+        pages: List[int] = []
+        for k in keys:
+            node = self._nodes.get(k)
+            if node is None:
+                break
+            pages.append(node.page)
+        if len(pages) < len(keys):
+            self.misses += 1
+        if not pages:
+            return []
+        self.pool.share(pages)
+        for k in keys[:len(pages)]:
+            self._nodes[k].tick = self._tick
+        self.hits += len(pages)
+        self.hit_tokens += len(pages) * self.pool.page_size
+        return pages
+
+    def insert(self, keys: Sequence[str], pages: Sequence[int]):
+        """Register ``pages`` under ``keys`` (chain order, equal length).
+        New nodes take one cache hold; already-cached keys keep their
+        existing page (two requests that raced the same prefix keep the
+        first writer's pages — the loser's stay private to it)."""
+        assert len(keys) == len(pages), (len(keys), len(pages))
+        self._tick += 1
+        parent: Optional[str] = None
+        for k, page in zip(keys, pages):
+            node = self._nodes.get(k)
+            if node is None:
+                self.pool.share([page])
+                node = _Node(int(page), parent, self._tick)
+                self._nodes[k] = node
+                if parent is not None:
+                    self._nodes[parent].children += 1
+                self.insertions += 1
+            else:
+                node.tick = self._tick
+            parent = k
+
+    # -- eviction -------------------------------------------------------
+    def _reclaimable_blocked(self) -> set:
+        """Keys that cannot be evicted: pages some request still holds,
+        plus all their ancestors (evicting an ancestor would break the
+        chain under a live descendant)."""
+        blocked: set = set()
+        for k, node in self._nodes.items():
+            if self.pool.refcount(node.page) > 1:
+                p: Optional[str] = k
+                while p is not None and p not in blocked:
+                    blocked.add(p)
+                    p = self._nodes[p].parent
+        return blocked
+
+    def evictable_pages(self) -> int:
+        """Pages the cache could hand back to the pool right now.
+        Memoized on the pool's mutation counter — the admission path
+        calls this per decision, and the blocked-set walk is O(nodes)."""
+        key = (self.pool.mutations, self._tick, len(self._nodes))
+        if self._evictable_memo is not None and \
+                self._evictable_memo[0] == key:
+            return self._evictable_memo[1]
+        val = len(self._nodes) - len(self._reclaimable_blocked())
+        self._evictable_memo = (key, val)
+        return val
+
+    def evict(self, n: int) -> int:
+        """Free up to ``n`` cached pages, least-recently-used leaves
+        first (a leaf eviction may expose its parent as the next leaf —
+        chains shrink from the deep end, staying prefix-closed)."""
+        freed = 0
+        while freed < n:
+            victim = None
+            for k, node in self._nodes.items():
+                if node.children == 0 and self.pool.refcount(node.page) == 1:
+                    if victim is None or node.tick < self._nodes[victim].tick:
+                        victim = k
+            if victim is None:
+                break
+            node = self._nodes.pop(victim)
+            if node.parent is not None and node.parent in self._nodes:
+                self._nodes[node.parent].children -= 1
+            self.pool.free([node.page])
+            self.evictions += 1
+            freed += 1
+        return freed
+
+    def drop_all(self):
+        """Release every cache hold (tests / shutdown). Pages still held
+        by live requests survive with their remaining holders."""
+        for node in self._nodes.values():
+            self.pool.free([node.page])
+        self._nodes.clear()
+
+    def stats(self) -> dict:
+        return {
+            "probes": self.probes, "hits": self.hits,
+            "misses": self.misses, "hit_tokens": self.hit_tokens,
+            "cached_pages": self.cached_pages,
+            "insertions": self.insertions, "evictions": self.evictions,
+        }
+
+
 class PagePool:
-    def __init__(self, num_pages: int, page_size: int, *, reserved: int = 1):
+    def __init__(self, num_pages: int, page_size: int, *, reserved: int = 1,
+                 prefix_cache: bool = False):
         if num_pages <= reserved:
             raise PagePoolError(f"pool of {num_pages} pages has no "
                                 f"allocatable pages (reserved={reserved})")
@@ -41,10 +213,16 @@ class PagePool:
         self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
         self._refs = np.zeros(num_pages, np.int64)
         self.max_in_use = 0
+        # bumped on every refcount mutation (memo key for the prefix
+        # cache's evictable-page computation)
+        self.mutations = 0
         # frontier accounting (macro-step serving): pages handed out ahead
         # of the device loop and how many came back unconsumed.
         self.frontier_staged = 0
         self.frontier_returned = 0
+        # cross-request prefix cache (None when disabled)
+        self.prefix: Optional[PrefixCache] = \
+            PrefixCache(self) if prefix_cache else None
 
     # ------------------------------------------------------------------
     @property
@@ -63,10 +241,35 @@ class PagePool:
         return self.in_use * self.page_size
 
     # ------------------------------------------------------------------
+    def evictable(self) -> int:
+        """Pages reclaimable from the prefix cache under pool pressure
+        (admission-control headroom beyond the free list)."""
+        return self.prefix.evictable_pages() if self.prefix is not None else 0
+
+    def ensure_free(self, n: int):
+        """Evict cached-only pages until the free list holds at least
+        ``n`` pages. The serving engine calls this after every admission
+        so reservations are always backed by *actually free* pages —
+        evictable pages counted at admission time could otherwise be
+        re-pinned by a later prefix-cache hit, turning reservation-backed
+        frontier staging into a mid-decode failure."""
+        if n <= len(self._free):
+            return
+        if self.prefix is not None:
+            self.prefix.evict(n - len(self._free))
+        if n > len(self._free):
+            raise PagePoolError(
+                f"cannot secure {n} free pages ({len(self._free)} free, "
+                f"{self.evictable()} evictable of {self.num_pages})")
+
     def alloc(self, n: int = 1) -> List[int]:
-        """Take ``n`` fresh pages (refcount 1 each)."""
+        """Take ``n`` fresh pages (refcount 1 each). Under pressure,
+        cached-only prefix pages are evicted LRU-first to cover the
+        request before giving up."""
         if n < 0:
             raise PagePoolError(f"alloc({n})")
+        if n > len(self._free) and self.prefix is not None:
+            self.prefix.evict(n - len(self._free))
         if n > len(self._free):
             raise PagePoolError(
                 f"out of KV pages: need {n}, have {len(self._free)} free of "
@@ -75,6 +278,7 @@ class PagePool:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._refs[p] = 1
+        self.mutations += 1
         self.max_in_use = max(self.max_in_use, self.in_use)
         return pages
 
@@ -85,6 +289,7 @@ class PagePool:
             if self._refs[p] <= 0:
                 raise PagePoolError(f"share of unallocated page {p}")
             self._refs[p] += 1
+        self.mutations += 1
 
     def free(self, pages: Iterable[int]):
         """Drop one holder from each page; pages reaching zero return to
@@ -98,6 +303,7 @@ class PagePool:
             self._refs[p] -= 1
             if self._refs[p] == 0:
                 self._free.append(p)
+        self.mutations += 1
 
     # ------------------------------------------------------------------
     # Page frontiers (macro-step decode)
@@ -135,9 +341,18 @@ class PagePool:
                     f"on_free_list={p in free})")
         if any(p < self.reserved for p in free):
             raise PagePoolError("reserved page on the free list")
+        if self.prefix is not None:
+            for k, node in self.prefix._nodes.items():
+                if self._refs[node.page] <= 0:
+                    raise PagePoolError(
+                        f"prefix cache maps {k[:8]} to dead page {node.page}")
+                if node.parent is not None and \
+                        node.parent not in self.prefix._nodes:
+                    raise PagePoolError(
+                        f"prefix chain broken at {k[:8]} (parent evicted)")
 
     def stats(self) -> dict:
-        return {
+        s = {
             "num_pages": self.num_pages,
             "page_size": self.page_size,
             "in_use": self.in_use,
@@ -146,3 +361,6 @@ class PagePool:
             "frontier_staged": self.frontier_staged,
             "frontier_returned": self.frontier_returned,
         }
+        if self.prefix is not None:
+            s["prefix_cache"] = self.prefix.stats()
+        return s

@@ -5,5 +5,76 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# Shared serving-test setup: one reduced real config ("small") and one
+# hand-rolled 2-layer dense LM ("tiny"), plus engine/submit helpers —
+# previously duplicated across test_engine*.py / test_prefill_bucketed.py.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="session")
+def small_model():
+    """qwen3-0.6b reduced to CPU size — the 'real config' engine tests."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen3-0.6b").reduced().with_overrides(dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="session")
+def tiny_model():
+    """2-layer dense 64-dim LM — the fast engine-mechanics tests."""
+    from repro.config import ModelConfig
+    from repro.models import build_model
+    cfg = ModelConfig(
+        name="tiny-lm", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+        head_dim=16, tie_embeddings=True, dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk_engine(model, params, **kw):
+    """ServeEngine with the shared test defaults; kwargs override."""
+    from repro.config import CAMDConfig, SamplingConfig
+    from repro.serving import ServeEngine
+    max_new = kw.pop("max_new", 8)
+    defaults = dict(
+        slots=6, cache_len=64,
+        sampling=SamplingConfig(max_new_tokens=max_new, temperature=0.8),
+        camd=CAMDConfig(samples_per_round=2, max_rounds=2, min_samples=2,
+                        max_clusters=8),
+        max_new_tokens=max_new, eos_id=1, seed=0)
+    defaults.update(kw)
+    return ServeEngine(model, params, **defaults)
+
+
+def _submit(engine, cfg, n, seed=0, plen=6, uid0=0):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        engine.submit(_request(
+            uid0 + i, rng.integers(2, cfg.vocab_size, plen).astype(np.int32)))
+
+
+def _request(uid, prompt, evidence=None):
+    from repro.serving import Request
+    return Request(uid=uid, prompt=prompt, evidence=evidence)
+
+
+@pytest.fixture(scope="session")
+def mk_engine():
+    return _mk_engine
+
+
+@pytest.fixture(scope="session")
+def submit_prompts():
+    return _submit

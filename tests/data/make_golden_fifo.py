@@ -1,0 +1,103 @@
+"""Regenerate the pinned FIFO golden token streams.
+
+Run this against a KNOWN-GOOD engine (originally: the pre-scheduler-refactor
+engine at commit 656a8ea) to pin the token streams the ``policy="fifo"``
+differential test (`tests/test_scheduler_differential.py`) asserts
+bit-identity against:
+
+    PYTHONPATH=src python tests/data/make_golden_fifo.py
+
+Cells: every mode x impl in {xla, paged} x macro_steps in {0, 8}. The
+JSON records the jax version the goldens were generated under; the test
+soft-skips on a different jax version (CPU float behavior is only pinned
+within a version), falling back to the live legacy-vs-scheduler
+differential which runs everywhere.
+"""
+import json
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CAMDConfig, ModelConfig, PagedKVConfig, SamplingConfig
+from repro.models import build_model
+from repro.serving import Request, ServeEngine
+
+MODES = ["camd", "best_of_n", "self_consistency", "greedy"]
+IMPLS = ["xla", "paged"]
+KS = [0, 8]
+
+
+def tiny_model():
+    cfg = ModelConfig(
+        name="golden-lm", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+        head_dim=16, tie_embeddings=True, dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_engine(model, params, *, mode, impl, macro_steps, **kw):
+    defaults = dict(
+        slots=4, cache_len=32,
+        sampling=SamplingConfig(max_new_tokens=6, temperature=0.8),
+        camd=CAMDConfig(samples_per_round=2, max_rounds=2, min_samples=2,
+                        max_clusters=8),
+        n_candidates=3, max_new_tokens=6, eos_id=1, seed=0,
+        paged_kv=PagedKVConfig(page_size=8),
+        mode=mode, impl=impl, macro_steps=macro_steps)
+    defaults.update(kw)
+    return ServeEngine(model, params, **defaults)
+
+
+def submit(engine, cfg, n=2, seed=0, plen=5):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        engine.submit(Request(uid=i, prompt=rng.integers(
+            2, cfg.vocab_size, plen).astype(np.int32)))
+
+
+def run_cell(model, params, cfg, mode, impl, macro_steps):
+    eng = make_engine(model, params, mode=mode, impl=impl,
+                      macro_steps=macro_steps)
+    submit(eng, cfg)
+    res = sorted(eng.run(), key=lambda r: r.uid)
+    return [{
+        "uid": r.uid,
+        "tokens": r.tokens.tolist(),
+        "tokens_spent": r.tokens_spent,
+        "rounds": r.rounds,
+        "n_candidates": r.n_candidates,
+        "candidates": sorted([c["tokens"].tolist() for c in r.candidates]),
+    } for r in res]
+
+
+def main():
+    cfg, model, params = tiny_model()
+    cells = {}
+    for mode in MODES:
+        for impl in IMPLS:
+            for k in KS:
+                key = f"{mode}/{impl}/K{k}"
+                cells[key] = run_cell(model, params, cfg, mode, impl, k)
+                print("pinned", key)
+    out = {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "model": "golden-lm 2L d64 v64 seed0",
+        "requests": 2,
+        "cells": cells,
+    }
+    path = os.path.join(os.path.dirname(__file__), "golden_fifo_streams.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print("wrote", path, f"({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,39 +1,16 @@
-"""Serving engine integration tests: slot scheduling, CAMD rounds, modes."""
+"""Serving engine integration tests: slot scheduling, CAMD rounds, modes.
+
+Model/engine setup comes from the shared conftest fixtures
+(``small_model``, ``_mk_engine``, ``_submit``)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.config import CAMDConfig, SamplingConfig
+from conftest import _mk_engine, _submit
+from repro.config import CAMDConfig
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import Request, ServeEngine
-
-
-@pytest.fixture(scope="module")
-def small_model():
-    cfg = get_config("qwen3-0.6b").reduced().with_overrides(dtype="float32")
-    model = build_model(cfg, jnp.float32)
-    params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
-
-
-def _mk_engine(model, params, **kw):
-    defaults = dict(
-        slots=6, cache_len=64,
-        sampling=SamplingConfig(max_new_tokens=8, temperature=0.8),
-        camd=CAMDConfig(samples_per_round=2, max_rounds=2, min_samples=2,
-                        max_clusters=8),
-        max_new_tokens=8, eos_id=1, seed=0)
-    defaults.update(kw)
-    return ServeEngine(model, params, **defaults)
-
-
-def _submit(engine, cfg, n, seed=0, plen=6):
-    rng = np.random.default_rng(seed)
-    for i in range(n):
-        engine.submit(Request(
-            uid=i, prompt=rng.integers(2, cfg.vocab_size, plen).astype(np.int32)))
+from repro.serving import Request
 
 
 def test_camd_mode_runs_all_requests(small_model):

@@ -8,43 +8,24 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import CAMDConfig, ModelConfig, PagedKVConfig, SamplingConfig
-from repro.models import build_model
+from conftest import _mk_engine as _mk_base, _submit as _submit_base
+from repro.config import CAMDConfig, PagedKVConfig, SamplingConfig
 from repro.sampling.samplers import sample_token, sample_token_batch
-from repro.serving import Request, ServeEngine
 
 MODES = ["camd", "best_of_n", "self_consistency", "greedy"]
 IMPLS = ["xla", "pallas", "paged", "paged_pallas"]
 PAGE = PagedKVConfig(page_size=8)
 
 
-@pytest.fixture(scope="module")
-def tiny_model():
-    cfg = ModelConfig(
-        name="macro-lm", family="dense", num_layers=2, d_model=64,
-        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
-        head_dim=16, tie_embeddings=True, dtype="float32")
-    model = build_model(cfg, jnp.float32)
-    params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
-
-
 def _mk_engine(model, params, **kw):
-    defaults = dict(
-        slots=4, cache_len=32,
-        sampling=SamplingConfig(max_new_tokens=6, temperature=0.8),
-        camd=CAMDConfig(samples_per_round=2, max_rounds=2, min_samples=2,
-                        max_clusters=8),
-        n_candidates=3, max_new_tokens=6, eos_id=1, seed=0, paged_kv=PAGE)
+    defaults = dict(slots=4, cache_len=32, max_new=6, n_candidates=3,
+                    paged_kv=PAGE)
     defaults.update(kw)
-    return ServeEngine(model, params, **defaults)
+    return _mk_base(model, params, **defaults)
 
 
 def _submit(engine, cfg, n, seed=0, plen=5):
-    rng = np.random.default_rng(seed)
-    for i in range(n):
-        engine.submit(Request(
-            uid=i, prompt=rng.integers(2, cfg.vocab_size, plen).astype(np.int32)))
+    _submit_base(engine, cfg, n, seed=seed, plen=plen)
 
 
 def _run(model, params, cfg, *, mode, impl, macro_steps, n=2):

@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import CAMDConfig, PagedKVConfig, SamplingConfig
+from conftest import _mk_engine as _mk_base, _submit
+from repro.config import PagedKVConfig, SamplingConfig
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import Request, ServeEngine
@@ -15,30 +16,9 @@ from repro.serving import Request, ServeEngine
 PAGE = PagedKVConfig(page_size=16)
 
 
-@pytest.fixture(scope="module")
-def small_model():
-    cfg = get_config("qwen3-0.6b").reduced().with_overrides(dtype="float32")
-    model = build_model(cfg, jnp.float32)
-    params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
-
-
 def _mk_engine(model, params, **kw):
-    defaults = dict(
-        slots=6, cache_len=64,
-        sampling=SamplingConfig(max_new_tokens=8, temperature=0.8),
-        camd=CAMDConfig(samples_per_round=2, max_rounds=2, min_samples=2,
-                        max_clusters=8),
-        n_candidates=4, max_new_tokens=8, eos_id=1, seed=0)
-    defaults.update(kw)
-    return ServeEngine(model, params, **defaults)
-
-
-def _submit(engine, cfg, n, seed=0, plen=6):
-    rng = np.random.default_rng(seed)
-    for i in range(n):
-        engine.submit(Request(
-            uid=i, prompt=rng.integers(2, cfg.vocab_size, plen).astype(np.int32)))
+    kw.setdefault("n_candidates", 4)
+    return _mk_base(model, params, **kw)
 
 
 @pytest.mark.parametrize("mode", ["camd", "best_of_n"])

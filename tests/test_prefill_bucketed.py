@@ -7,22 +7,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import LOCAL_ATTN, RGLRU, CAMDConfig, ModelConfig, \
+from conftest import _mk_engine as _mk_base
+from repro.config import LOCAL_ATTN, RGLRU, ModelConfig, \
     RGLRUConfig, SamplingConfig
 from repro.models import build_model
 from repro.models.transformer import transformer_prefill
-from repro.serving import Request, ServeEngine
-
-
-@pytest.fixture(scope="module")
-def tiny_model():
-    cfg = ModelConfig(
-        name="bucket-lm", family="dense", num_layers=2, d_model=64,
-        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
-        head_dim=16, tie_embeddings=True, dtype="float32")
-    model = build_model(cfg, jnp.float32)
-    params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
+from repro.serving import Request
 
 
 @pytest.fixture(scope="module")
@@ -99,15 +89,10 @@ def test_padded_prefill_with_evidence(tiny_vlm):
 
 
 def _mk_engine(model, params, **kw):
-    defaults = dict(
-        slots=4, cache_len=32,
-        sampling=SamplingConfig(max_new_tokens=6, temperature=0.8),
-        camd=CAMDConfig(samples_per_round=2, max_rounds=2, min_samples=2,
-                        max_clusters=8),
-        n_candidates=2, max_new_tokens=6, eos_id=1, seed=0,
-        prefill_bucket_min=8)
+    defaults = dict(slots=4, cache_len=32, max_new=6, n_candidates=2,
+                    prefill_bucket_min=8)
     defaults.update(kw)
-    return ServeEngine(model, params, **defaults)
+    return _mk_base(model, params, **defaults)
 
 
 def test_engine_bucketed_equals_unbucketed_greedy(tiny_model):

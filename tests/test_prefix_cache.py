@@ -1,0 +1,217 @@
+"""Cross-request prefix cache, engine level: CoW/refcount correctness,
+hit-rate accounting in ``kv_stats()``, prefill-skip verification, and
+byte-identical outputs with the cache on vs off.
+"""
+import numpy as np
+
+from conftest import _mk_engine as _mk_base
+from repro.config import PagedKVConfig
+from repro.serving import Request
+
+PAGE = PagedKVConfig(page_size=8)
+
+
+def _mk(model, params, **kw):
+    defaults = dict(slots=4, cache_len=64, max_new=8, n_candidates=3,
+                    impl="paged", paged_kv=PAGE, bucket_prefill=False)
+    defaults.update(kw)
+    return _mk_base(model, params, **defaults)
+
+
+def _shared_prefix_prompts(cfg, n=4, shared=17, total=21, seed=0):
+    """n prompts sharing their first ``shared`` tokens (2 full pages at
+    page_size 8), diverging after."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(2, cfg.vocab_size, total).astype(np.int32)
+               for _ in range(n)]
+    for p in prompts[1:]:
+        p[:shared] = prompts[0][:shared]
+    return prompts
+
+
+def _submit_all(eng, prompts, uid0=0):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=uid0 + i, prompt=p))
+
+
+def test_cache_on_off_byte_identical(tiny_model):
+    """Suffix prefill against cached page KV must reproduce the full
+    prefill bit-for-bit: every candidate stream identical on/off."""
+    cfg, model, params = tiny_model
+    prompts = _shared_prefix_prompts(cfg)
+    outs = {}
+    for pc in (False, True):
+        eng = _mk(model, params, mode="camd", prefix_cache=pc)
+        _submit_all(eng, prompts)
+        res = sorted(eng.run(), key=lambda r: r.uid)
+        outs[pc] = [(r.tokens.tolist(),
+                     sorted(c["tokens"].tolist() for c in r.candidates))
+                    for r in res]
+        eng.pool.check()
+    assert outs[False] == outs[True]
+
+
+def test_hits_skip_prefill_and_account(tiny_model):
+    """The pool/kv_stats accounting and the prefill-call/token counters
+    must show the shared pages were NOT re-prefilled."""
+    cfg, model, params = tiny_model
+    prompts = _shared_prefix_prompts(cfg)        # 2 shared full pages each
+    off = _mk(model, params, mode="camd", prefix_cache=False)
+    _submit_all(off, prompts)
+    off.run()
+
+    on = _mk(model, params, mode="camd", prefix_cache=True)
+    _submit_all(on, prompts)
+    on.run()
+    pc = on.kv_stats()["prefix_cache"]
+    # 3 of 4 requests hit the 2 shared pages seeded by request 0
+    assert pc["hits"] == 6
+    assert pc["hit_tokens"] == 6 * PAGE.page_size
+    assert pc["bytes_saved"] == 6 * on.kv_stats()["bytes_per_page"]
+    assert pc["probes"] == 4
+    # prefill work shrinks by exactly the hit tokens
+    assert on.prefill_tokens == off.prefill_tokens - pc["hit_tokens"]
+    assert on.prefill_calls == off.prefill_calls      # 1 per request here
+
+    # second wave of identical prompts: every request now hits
+    t0, h0 = on.prefill_tokens, on.kv_stats()["prefix_cache"]["hit_tokens"]
+    _submit_all(on, prompts, uid0=100)
+    on.run()
+    pc2 = on.kv_stats()["prefix_cache"]
+    assert pc2["hit_tokens"] - h0 == 4 * 2 * PAGE.page_size
+    assert on.prefill_tokens - t0 == sum(
+        len(p) - 2 * PAGE.page_size for p in prompts)
+    on.pool.check()
+
+
+def test_refcounts_and_residency(tiny_model):
+    """Cached pages carry exactly one cache hold after the stream drains;
+    during a hit request's run the shared pages carry cache + request +
+    per-candidate holds. drop_all() returns the pool to empty."""
+    cfg, model, params = tiny_model
+    prompts = _shared_prefix_prompts(cfg, n=2)
+    eng = _mk(model, params, mode="best_of_n", n_candidates=3,
+              prefix_cache=True)
+    _submit_all(eng, [prompts[0]])
+    eng.run()
+    shared_pages = [n.page for n in eng.pool.prefix._nodes.values()]
+    assert len(shared_pages) == 2
+    assert all(eng.pool.refcount(p) == 1 for p in shared_pages)
+
+    # admit the second (hitting) request without stepping
+    eng.submit(Request(uid=1, prompt=prompts[1]))
+    eng._schedule()
+    info = eng._reqs[1]
+    assert info["prefix_len"] == 2 * PAGE.page_size
+    n_live = sum(1 for s in range(eng.B) if eng._slot_req[s] >= 0)
+    assert n_live == 3
+    for p in shared_pages:
+        # cache hold + request hold + one per live candidate
+        assert eng.pool.refcount(p) == 2 + n_live
+    eng.pool.check()
+    # drain; only the cache holds remain, then none
+    eng.run()
+    assert all(eng.pool.refcount(p) == 1 for p in shared_pages)
+    eng.pool.prefix.drop_all()
+    assert eng.pool.in_use == 0
+    eng.pool.check()
+
+
+def test_macro_and_legacy_loops_with_cache(tiny_model):
+    """The prefix cache composes with both decode loops (macro_steps 0
+    and 16) and stays byte-identical to cache-off in each."""
+    cfg, model, params = tiny_model
+    prompts = _shared_prefix_prompts(cfg, n=3)
+    for k in (0, 16):
+        outs = {}
+        for pc in (False, True):
+            eng = _mk(model, params, mode="camd", macro_steps=k,
+                      prefix_cache=pc)
+            _submit_all(eng, prompts)
+            outs[pc] = [r.tokens.tolist()
+                        for r in sorted(eng.run(), key=lambda r: r.uid)]
+            eng.pool.check()
+        assert outs[False] == outs[True], f"macro_steps={k}"
+
+
+def test_gating_unsupported_configs(tiny_model):
+    """Prefix caching silently gates off for non-paged engines and for
+    requests with evidence; nothing breaks."""
+    cfg, model, params = tiny_model
+    eng = _mk(model, params, mode="greedy", impl="xla", prefix_cache=True)
+    assert eng.prefix_cache is False             # needs paged KV
+    prompts = _shared_prefix_prompts(cfg, n=2)
+    _submit_all(eng, prompts)
+    assert len(eng.run()) == 2
+
+    from repro.configs import get_config
+    import jax
+    import jax.numpy as jnp
+    from repro.models import build_model
+    vcfg = get_config("internvl2-2b").reduced().with_overrides(
+        dtype="float32")
+    vmodel = build_model(vcfg, jnp.float32)
+    assert vmodel.supports_prefix_cache          # all-ATTN decoder
+    vparams = vmodel.init(jax.random.PRNGKey(0))
+    veng = _mk(vmodel, vparams, mode="greedy", prefix_cache=True,
+               cache_len=64, slots=2)
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        ev = rng.standard_normal((vcfg.num_evidence_tokens,
+                                  vcfg.evidence_dim)).astype(np.float32)
+        veng.submit(Request(uid=i, prompt=rng.integers(
+            2, vcfg.vocab_size, 20).astype(np.int32), evidence=ev))
+    veng.run()
+    # evidence-bearing requests never probe the cache
+    assert veng.kv_stats()["prefix_cache"]["probes"] == 0
+    veng.pool.check()
+
+
+def test_reservations_backed_by_free_pages(tiny_model):
+    """Regression: admission may count cache-evictable pages as headroom,
+    but right after every admission the engine converts that headroom
+    into actually-free pages (``ensure_free``) — a later prefix hit
+    re-pinning cached pages must never be able to strand a live slot's
+    reservation (frontier staging would raise mid-decode)."""
+    cfg, model, params = tiny_model
+    rng = np.random.default_rng(5)
+    shared = rng.integers(2, cfg.vocab_size, 17).astype(np.int32)
+    waves = []
+    for w in range(3):
+        ps = []
+        for _ in range(2):
+            p = rng.integers(2, cfg.vocab_size, 19).astype(np.int32)
+            p[:17] = shared
+            ps.append(p)
+        waves.append(ps)
+    # pool tight enough that cached pages are the margin
+    eng = _mk(model, params, mode="camd", prefix_cache=True, slots=2,
+              cache_len=32, max_new=6, macro_steps=8,
+              paged_kv=PagedKVConfig(page_size=8, num_pages=13))
+    uid = 0
+    for ps in waves:
+        for p in ps:
+            eng.submit(Request(uid=uid, prompt=p))
+            uid += 1
+        eng.run()                                # interleaves hits + decode
+        assert eng.pool.free_pages >= eng._reserved
+        eng.pool.check()
+    assert eng.kv_stats()["prefix_cache"]["hits"] > 0
+
+
+def test_pool_pressure_evicts_instead_of_failing(tiny_model):
+    """A pool sized so cached pages must be reclaimed: traffic still
+    completes, and evictions are recorded."""
+    cfg, model, params = tiny_model
+    rng = np.random.default_rng(3)
+    # distinct prompts (no sharing) so the cache only costs pages
+    prompts = [rng.integers(2, cfg.vocab_size, 17).astype(np.int32)
+               for _ in range(4)]
+    eng = _mk(model, params, mode="greedy", prefix_cache=True, slots=2,
+              cache_len=32, max_new=4,
+              paged_kv=PagedKVConfig(page_size=8, num_pages=9))
+    _submit_all(eng, prompts)
+    res = eng.run()
+    assert sorted(r.uid for r in res) == [0, 1, 2, 3]
+    assert eng.kv_stats()["prefix_cache"]["evictions"] > 0
+    eng.pool.check()

@@ -1,0 +1,124 @@
+"""Real-engine scheduler tests (no hypothesis needed): global-budget
+hard invariants, graceful budget starvation, coverage policy across
+modes/impls, and per-slot limit bookkeeping.
+"""
+import pytest
+
+from conftest import _mk_engine as _mk_base, _submit
+from repro.config import PagedKVConfig
+
+
+def _mk(model, params, **kw):
+    defaults = dict(slots=4, cache_len=32, max_new=6, n_candidates=3,
+                    paged_kv=PagedKVConfig(page_size=8))
+    defaults.update(kw)
+    return _mk_base(model, params, **defaults)
+
+
+@pytest.mark.parametrize("policy", ["fifo", "coverage"])
+@pytest.mark.parametrize("budget", [7, 13, 24, 50])
+def test_budget_never_exceeded_real_engine(tiny_model, policy, budget):
+    """Hard invariant on the real engine, odd budgets included (a budget
+    of 7 can only fund 3 candidates of >= 2 tokens): emitted tokens
+    never pass the budget and the engine terminates (no spin when the
+    remainder is unfundable)."""
+    cfg, model, params = tiny_model
+    eng = _mk(model, params, mode="camd", sched_policy=policy,
+              global_budget=budget)
+    _submit(eng, cfg, 4, plen=5)
+    res = eng.run()
+    assert len(res) == 4                     # starved uids still report
+    assert eng.total_tokens <= budget
+    assert sum(r.tokens_spent for r in res) == eng.total_tokens
+    assert all(eng._slot_req[s] == -1 for s in range(eng.B))
+    sched = eng.sched_stats()
+    assert sched["spent"] == eng.total_tokens
+    assert sched["committed"] == 0
+
+
+def test_budget_starved_results_are_explicit(tiny_model):
+    """A budget too small for everyone: served requests report real
+    candidates, starved ones come back empty and are listed."""
+    cfg, model, params = tiny_model
+    eng = _mk(model, params, mode="best_of_n", sched_policy="coverage",
+              global_budget=12, macro_steps=8)
+    _submit(eng, cfg, 5, plen=5)
+    res = {r.uid: r for r in eng.run()}
+    assert len(res) == 5
+    served = [u for u, r in res.items() if r.n_candidates > 0]
+    starved = [u for u, r in res.items() if r.n_candidates == 0]
+    assert served and starved
+    assert sorted(starved) == sorted(eng.starved_uids)
+    for u in starved:
+        assert res[u].tokens.size == 0 and res[u].tokens_spent == 0
+
+
+@pytest.mark.parametrize("mode", ["camd", "best_of_n", "self_consistency",
+                                  "greedy"])
+def test_coverage_policy_completes_all_modes(tiny_model, mode):
+    cfg, model, params = tiny_model
+    eng = _mk(model, params, mode=mode, sched_policy="coverage",
+              sched_kwargs=dict(decline_low_gain=False))
+    _submit(eng, cfg, 5, plen=5)
+    res = eng.run()
+    assert sorted(r.uid for r in res) == list(range(5))
+    assert all(r.n_candidates >= 1 for r in res)
+
+
+def test_coverage_paged_pool_conservation_under_budget(tiny_model):
+    """Budget-limited paged serving with slot recycling: page
+    conservation and reservation accounting survive tight limits."""
+    cfg, model, params = tiny_model
+    eng = _mk(model, params, mode="camd", impl="paged",
+              sched_policy="coverage", global_budget=30, macro_steps=8,
+              paged_kv=PagedKVConfig(page_size=8, num_pages=11))
+    _submit(eng, cfg, 5, plen=5)
+    res = eng.run()
+    assert len(res) == 5
+    assert eng.total_tokens <= 30
+    eng.pool.check()
+    assert eng.pool.in_use == 0
+    assert eng._reserved == 0
+
+
+def test_scheduler_limit_caps_candidate_length(tiny_model):
+    """A granted limit below max_new ends candidates on device exactly
+    at the limit (eos_id=-1 so nothing ends early)."""
+    cfg, model, params = tiny_model
+    eng = _mk(model, params, mode="best_of_n", n_candidates=2,
+              sched_policy="fifo", global_budget=8, eos_id=-1,
+              macro_steps=8)
+    _submit(eng, cfg, 1, plen=5)
+    (r,) = eng.run()
+    # budget 8, want 2 => take 2, limit 4 each
+    assert r.n_candidates == 2
+    assert all(c["n"] == 4 for c in r.candidates)
+    assert eng.total_tokens == 8
+
+
+def test_coverage_fair_shares_depth_not_just_width(tiny_model):
+    """Regression: with want=1 items (greedy traffic) width cannot be
+    shrunk, so the coverage policy must fair-share the per-candidate
+    token LIMIT — budget 20 across 4 greedy requests serves all four at
+    5 tokens each instead of 8/8/4/starved."""
+    cfg, model, params = tiny_model
+    eng = _mk(model, params, mode="greedy", sched_policy="coverage",
+              global_budget=20, eos_id=-1, macro_steps=8, cache_len=32)
+    _submit(eng, cfg, 4, plen=5)
+    res = sorted(eng.run(), key=lambda r: r.uid)
+    assert [r.tokens_spent for r in res] == [5, 5, 5, 5]
+    assert not eng.starved_uids
+    assert eng.total_tokens == 20
+
+
+def test_fifo_budget_zero_is_default(tiny_model):
+    """global_budget=0 disables budgeting entirely — identical streams
+    to an engine that never heard of budgets."""
+    cfg, model, params = tiny_model
+    outs = []
+    for kw in (dict(), dict(sched_policy="fifo", global_budget=0)):
+        eng = _mk(model, params, mode="camd", **kw)
+        _submit(eng, cfg, 3, plen=5)
+        outs.append([r.tokens.tolist()
+                     for r in sorted(eng.run(), key=lambda r: r.uid)])
+    assert outs[0] == outs[1]

@@ -1,0 +1,347 @@
+"""Property-based invariants of the traffic schedulers and the page
+pool / prefix cache, driven by a model-free fake engine so hypothesis
+can hammer thousands of traffic shapes without touching jax.
+
+Invariants pinned (the issue's acceptance bar):
+  * no slot leaks — free slots stay within [0, slots] and return to
+    ``slots`` when the stream drains
+  * page conservation — staged == consumed + returned frontier pages,
+    the pool drains to zero (or to exactly the cached pages), and
+    ``PagePool.check()`` holds after every step, including preemption
+    (random early candidate finishes) and prefix-cache eviction
+  * the global token budget is NEVER exceeded, under any traffic
+  * aging — every submitted request is eventually admitted (coverage
+    policy never starves queued work), given a fundable budget
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis;
+# a bare interpreter must still collect the suite (module-level skip)
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serving.page_pool import PagePool, PagePoolError, prefix_page_keys
+from repro.serving.scheduler import (CoverageScheduler, FifoScheduler,
+                                     NewWork, RoundWork, SchedulerContext,
+                                     make_scheduler)
+
+
+# ---------------------------------------------------------------------------
+# A model-free engine: slots, queue, rounds, candidate lifetimes — the
+# same control flow ServeEngine drives, minus the model and the KV.
+# ---------------------------------------------------------------------------
+
+class FakeEngine(SchedulerContext):
+    def __init__(self, rng, *, slots, max_new, n_reqs, rounds_per_req,
+                 want, afford_cap=None):
+        self.rng = rng
+        self.slots = slots
+        self.max_new = max_new
+        self.free = slots
+        self.queue = [NewWork(uid=i, arrival=i, want=want)
+                      for i in range(n_reqs)]
+        self.rounds_left = {i: rounds_per_req[i] for i in range(n_reqs)}
+        self.pending = {}            # uid -> RoundWork
+        self.live = []               # (uid, steps_left, limit)
+        self.admitted = []           # admission order (uids, with repeats)
+        self.first_admit = set()
+        self.tokens_emitted = 0
+        self.afford_cap = afford_cap # simulated pool pressure
+
+    # -- SchedulerContext ----------------------------------------------
+    def free_slots(self):
+        return self.free
+
+    def queued_new(self):
+        return list(self.queue)
+
+    def pending_rounds(self):
+        return list(self.pending.values())
+
+    def affordable(self, uid, want, limit):
+        if self.afford_cap is None:
+            return want
+        return min(want, self.afford_cap)
+
+    def _spawn(self, uid, take, limit):
+        assert take >= 1 and take <= self.free, (take, self.free)
+        assert 1 <= limit <= self.max_new
+        self.free -= take
+        self.admitted.extend([uid] * take)
+        self.first_admit.add(uid)
+        for _ in range(take):
+            # actual emitted length <= limit (early EOS possible); the
+            # admission-time first token means at least 1
+            n = int(self.rng.integers(1, limit + 1))
+            self.live.append([uid, int(self.rng.integers(1, 4)), limit, n])
+
+    def admit_new(self, uid, take, limit):
+        self.queue = [w for w in self.queue if w.uid != uid]
+        self._spawn(uid, take, limit)
+
+    def admit_round(self, uid, take, limit):
+        self.pending.pop(uid)
+        self._spawn(uid, take, limit)
+
+    def finish_request(self, uid):
+        self.pending.pop(uid, None)
+        self.rounds_left[uid] = 0
+
+    # -- simulation -----------------------------------------------------
+    def tick(self, sched):
+        """Advance live candidates one step; finished ones release their
+        slot and report to the scheduler (as _finish_candidates does)."""
+        done_uids = set()
+        still = []
+        for cand in self.live:
+            cand[1] -= 1
+            if cand[1] <= 0:
+                uid, _, limit, n = cand
+                self.free += 1
+                self.tokens_emitted += n
+                sched.on_finish(uid, n, limit)
+                done_uids.add(uid)
+            else:
+                still.append(cand)
+        self.live = still
+        for uid in done_uids:
+            if any(c[0] == uid for c in self.live):
+                continue             # round completes when no slots live
+            self.rounds_left[uid] -= 1
+            if self.rounds_left[uid] > 0:
+                self.pending[uid] = RoundWork(
+                    uid=uid, arrival=uid, want=2,
+                    rounds=1, p_star=float(self.rng.uniform(0, 1)),
+                    delta=0.05, best_score=1.0,
+                    scores=[float(self.rng.normal()) for _ in range(3)],
+                    mean_len=float(self.max_new))
+
+    def drained(self):
+        return not self.queue and not self.pending and not self.live
+
+
+def _run_stream(sched, eng, max_ticks=10_000):
+    budget = sched.global_budget
+    for _ in range(max_ticks):
+        eng.tick(sched)
+        sched.schedule(eng)
+        assert 0 <= eng.free <= eng.slots, "slot leak"
+        if budget:
+            assert sched.spent + sched.committed <= budget
+            assert eng.tokens_emitted <= budget, "budget exceeded"
+        if eng.drained():
+            break
+        if not eng.live and not eng.queue and eng.pending and \
+                sched.exhausted():
+            break                    # terminal starvation (engine drains)
+    assert eng.free + len(eng.live) == eng.slots
+    return eng
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10**6), slots=st.integers(1, 8),
+       n_reqs=st.integers(1, 12), want=st.integers(1, 4),
+       policy=st.sampled_from(["fifo", "coverage"]),
+       afford_cap=st.sampled_from([None, 1, 2]))
+def test_no_slot_leaks_and_stream_drains(seed, slots, n_reqs, want, policy,
+                                         afford_cap):
+    rng = np.random.default_rng(seed)
+    eng = FakeEngine(rng, slots=slots, max_new=6, n_reqs=n_reqs,
+                     rounds_per_req=rng.integers(1, 4, n_reqs), want=want,
+                     afford_cap=afford_cap)
+    sched = make_scheduler(policy)
+    eng = _run_stream(sched, eng)
+    assert eng.drained()
+    assert eng.free == eng.slots
+    assert eng.first_admit == set(range(n_reqs))
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10**6), slots=st.integers(1, 6),
+       n_reqs=st.integers(1, 10), budget=st.integers(2, 80),
+       policy=st.sampled_from(["fifo", "coverage"]))
+def test_global_budget_never_exceeded(seed, slots, n_reqs, budget, policy):
+    """Worst-case commitment accounting: total emitted tokens never pass
+    the budget, whatever the traffic shape — and when the budget can
+    fund everyone (aging property), everyone is eventually admitted."""
+    rng = np.random.default_rng(seed)
+    eng = FakeEngine(rng, slots=slots, max_new=6, n_reqs=n_reqs,
+                     rounds_per_req=np.ones(n_reqs, int), want=2)
+    sched = make_scheduler(policy, global_budget=budget)
+    eng = _run_stream(sched, eng)
+    assert eng.tokens_emitted <= budget
+    if budget >= n_reqs * 2 * 6 * 2:     # plenty for everyone
+        assert eng.first_admit == set(range(n_reqs))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10**6), n_reqs=st.integers(2, 10))
+def test_fifo_admits_new_requests_in_arrival_order(seed, n_reqs):
+    rng = np.random.default_rng(seed)
+    eng = FakeEngine(rng, slots=3, max_new=4, n_reqs=n_reqs,
+                     rounds_per_req=np.ones(n_reqs, int), want=2)
+    sched = FifoScheduler()
+    _run_stream(sched, eng)
+    firsts = list(dict.fromkeys(eng.admitted))
+    assert firsts == sorted(firsts)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_coverage_prioritizes_high_deficit_rounds(seed):
+    """With one free slot and two pending rounds, the harder request
+    (larger coverage deficit) is admitted first — the paper's
+    compute-to-difficulty allocation at traffic level."""
+    rng = np.random.default_rng(seed)
+    eng = FakeEngine(rng, slots=1, max_new=4, n_reqs=0,
+                     rounds_per_req={}, want=1)
+    mk = lambda uid, p: RoundWork(
+        uid=uid, arrival=uid, want=1, rounds=1, p_star=p, delta=0.05,
+        best_score=1.0, scores=[0.0, 1.0, 2.0], mean_len=4.0)
+    easy_first = bool(rng.integers(0, 2))
+    rounds = [mk(0, 0.96), mk(1, 0.10)] if easy_first else \
+        [mk(1, 0.10), mk(0, 0.96)]
+    for r in rounds:
+        eng.pending[r.uid] = r
+    sched = CoverageScheduler(decline_low_gain=False)
+    sched.schedule(eng)
+    assert eng.admitted[0] == 1          # the hard one wins the slot
+
+
+def test_coverage_declines_zero_gain_rounds():
+    """Perfect score agreement (std == 0 => EI == 0 < any token cost)
+    triggers the rule-(iii) decline: the request finalizes instead of
+    burning another round."""
+    rng = np.random.default_rng(0)
+    eng = FakeEngine(rng, slots=4, max_new=4, n_reqs=0,
+                     rounds_per_req={7: 3}, want=1)
+    eng.pending[7] = RoundWork(uid=7, arrival=0, want=2, rounds=1,
+                               p_star=0.5, delta=0.05, best_score=1.0,
+                               scores=[1.0, 1.0, 1.0], mean_len=4.0)
+    sched = CoverageScheduler()
+    sched.schedule(eng)
+    assert not eng.pending and not eng.live
+    assert sched.declined_rounds == 1
+
+
+# ---------------------------------------------------------------------------
+# PagePool + prefix cache conservation under random op streams
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10**6), num_pages=st.integers(4, 24),
+       steps=st.integers(1, 60))
+def test_pool_conservation_random_ops(seed, num_pages, steps):
+    """Random alloc/share/free/stage/return streams: ``check()`` holds
+    after every op and staged == consumed(kept) + returned."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages, 8)
+    held = []                      # pages with a plain hold
+    staged = []                    # frontier pages not yet resolved
+    kept = 0
+    for _ in range(steps):
+        op = rng.integers(0, 5)
+        try:
+            if op == 0:
+                held += pool.alloc(int(rng.integers(1, 3)))
+            elif op == 1 and held:
+                pages = [held[int(rng.integers(0, len(held)))]]
+                pool.share(pages)
+                held += pages
+            elif op == 2 and held:
+                i = int(rng.integers(0, len(held)))
+                pool.free([held.pop(i)])
+            elif op == 3:
+                pages = pool.stage_frontier(int(rng.integers(1, 3)))
+                staged += pages
+            elif op == 4 and staged:
+                # resolve a staged page: keep (consumed by the device
+                # loop => becomes a plain hold) or return it
+                i = int(rng.integers(0, len(staged)))
+                page = staged.pop(i)
+                if rng.integers(0, 2):
+                    pool.return_frontier([page])
+                else:
+                    held.append(page)
+                    kept += 1
+        except PagePoolError:
+            pass                   # over-allocation is allowed to fail
+        pool.check()
+    assert pool.stats()["frontier_staged"] == \
+        kept + len(staged) + pool.stats()["frontier_returned"]
+    for p in held + staged:
+        pool.free([p])
+    pool.check()
+    assert pool.in_use == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10**6), ps=st.sampled_from([4, 8]),
+       n_prompts=st.integers(1, 6))
+def test_prefix_cache_conservation_and_determinism(seed, ps, n_prompts):
+    """Random prompt mixes with shared prefixes: inserts/matches/evictions
+    keep the pool conserved, chains prefix-closed, and a match always
+    returns pages whose keys chain-hash the same content."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(64, ps, prefix_cache=True)
+    base = rng.integers(2, 50, 4 * ps)
+    reqs = []
+    for _ in range(n_prompts):
+        cut = int(rng.integers(0, 4)) * ps
+        prompt = np.concatenate([base[:cut],
+                                 rng.integers(2, 50, int(rng.integers(1, 12)))])
+        keys = prefix_page_keys(prompt, ps)
+        usable = (len(prompt) - 1) // ps
+        hit = pool.prefix.match_and_hold(keys[:usable])
+        full = len(prompt) // ps
+        fresh = pool.alloc(full - len(hit))
+        pages = hit + fresh
+        pool.prefix.insert(keys, pages)
+        pool.check()
+        reqs.append(pages)
+    # same content => same pages for the shared prefix
+    k1 = prefix_page_keys(base, ps)
+    again = pool.prefix.match_and_hold(k1[:2])
+    if again:
+        assert again == [pool.prefix._nodes[k].page for k in k1[:len(again)]]
+        pool.free(again)
+    for pages in reqs:
+        pool.free(pages)
+        pool.check()
+    # only cache holds remain; evicting everything drains the pool
+    pool.prefix.evict(pool.num_pages)
+    pool.check()
+    assert pool.in_use == 0
+
+
+def test_prefix_cache_eviction_under_pressure():
+    """alloc() reclaims cached-only pages LRU-leaf-first instead of
+    failing, but never evicts pages a live request still holds."""
+    pool = PagePool(9, 4, prefix_cache=True)     # 8 allocatable
+    a = np.arange(2, 10)                         # 2 full pages
+    b = np.arange(20, 28)
+    ka, kb = prefix_page_keys(a, 4), prefix_page_keys(b, 4)
+    pa = pool.alloc(2)
+    pool.prefix.insert(ka, pa)
+    pb = pool.alloc(2)
+    pool.prefix.insert(kb, pb)
+    pool.free(pa)
+    pool.free(pb)                                # cache-only now
+    assert pool.free_pages == 4 and pool.evictable() == 4
+    got = pool.alloc(6)                          # forces 2 evictions
+    assert len(got) == 6
+    assert pool.prefix.evictions == 2
+    pool.check()
+    # chains stay prefix-closed: any surviving node's parent survives
+    for k, node in pool.prefix._nodes.items():
+        assert node.parent is None or node.parent in pool.prefix._nodes
+    # pages held by a request are never evicted
+    pool.free(got)
+    held = pool.prefix.match_and_hold(prefix_page_keys(
+        np.concatenate([a[:4], [99]]), 4)[:1])
+    if held:
+        with_hold = held[0]
+        pool.alloc(pool.free_pages + pool.evictable())
+        assert pool.refcount(with_hold) >= 1     # still alive
+    pool.check()
