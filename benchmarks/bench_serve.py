@@ -21,6 +21,14 @@ policies at an equal global token budget, reporting oracle accuracy,
 easy/hard token allocation, starvation, and prefix-cache reuse in a
 ``scheduler`` section of ``BENCH_serve.json``.
 
+The **sharded scenario** (multi-device runtimes only — on CPU force
+host devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+serves the same workload on a single device and on an N-way data
+mesh (``ServeEngine(mesh=...)``: decode batch sharded on the data axis,
+KV page pool on the page axis) and records throughput plus the hard
+invariant — byte-identical token streams — in a ``sharded`` section.
+Single-device runtimes record the section as skipped.
+
 Writes ``BENCH_serve.json``; ``--smoke`` runs a reduced grid for CI.
 
   python -m benchmarks.bench_serve [--smoke]
@@ -96,6 +104,79 @@ def _run_cell(cfg, model, params, *, impl, mode, macro_steps, requests,
         "syncs_per_token": eng.host_syncs / max(eng.total_tokens, 1),
         "macro_launches": eng.macro_launches,
     }
+
+
+# ---------------------------------------------------------------------------
+# Sharded scenario: N-way mesh vs single device, identical streams
+# ---------------------------------------------------------------------------
+
+def _stream_digest(results):
+    return [(r.uid, r.tokens.tolist(), r.tokens_spent, r.n_candidates)
+            for r in sorted(results, key=lambda r: r.uid)]
+
+
+def _run_sharded_cell(cfg, model, params, *, impl, mesh, requests, max_new,
+                      macro_steps=8):
+    eng = ServeEngine(
+        model, params, slots=8, cache_len=128,
+        sampling=SamplingConfig(max_new_tokens=max_new, temperature=0.8),
+        camd=CAMDConfig(samples_per_round=4, max_rounds=2, min_samples=4),
+        mode="camd", n_candidates=4, max_new_tokens=max_new, eos_id=1,
+        impl=impl, paged_kv=PagedKVConfig(page_size=16),
+        macro_steps=macro_steps, mesh=mesh, seed=0)
+    _submit(eng, cfg, requests, uid0=10_000, seed=1)      # warmup/compile
+    eng.run()
+    eng.total_steps = eng.total_tokens = 0
+    eng.macro_launches = eng.host_syncs = 0
+    eng.scheduler.admitted_per_shard = {}     # report measured traffic only
+    _submit(eng, cfg, requests, uid0=0, seed=2)
+    t0 = time.perf_counter()
+    res = eng.run()
+    wall = time.perf_counter() - t0
+    row = {
+        "impl": impl,
+        "dp": eng.dp,
+        "wall_s": wall,
+        "tokens": eng.total_tokens,
+        "tokens_per_s": eng.total_tokens / max(wall, 1e-9),
+        "macro_launches": eng.macro_launches,
+    }
+    if eng.paged:
+        row["admitted_per_shard"] = \
+            eng.sched_stats().get("admitted_per_shard", {})
+    return row, _stream_digest(res)
+
+
+def run_sharded_scenario(smoke: bool = False) -> dict:
+    """Single-device vs mesh-sharded serving on the same workload: the
+    streams must be byte-identical; throughput is recorded per impl."""
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        return {"skipped": f"single {jax.default_backend()} device — set "
+                           f"XLA_FLAGS=--xla_force_host_platform_device_"
+                           f"count=8 to exercise the mesh path"}
+    from repro.launch.mesh import make_serve_mesh
+    dp = max(d for d in (2, 4, 8) if d <= n_dev)          # slots=8 divisible
+    mesh = make_serve_mesh(dp)
+    cfg, model, params = _bench_model()
+    requests, max_new = (3, 16) if smoke else (6, 32)
+    rows, identical = [], True
+    for impl in ["xla", "paged"]:
+        base_row, base_streams = _run_sharded_cell(
+            cfg, model, params, impl=impl, mesh=None,
+            requests=requests, max_new=max_new)
+        mesh_row, mesh_streams = _run_sharded_cell(
+            cfg, model, params, impl=impl, mesh=mesh,
+            requests=requests, max_new=max_new)
+        same = base_streams == mesh_streams
+        identical &= same
+        rows += [base_row, mesh_row]
+        print(f"sharded {impl:6s} dp={dp}: "
+              f"{base_row['tokens_per_s']:8.1f} -> "
+              f"{mesh_row['tokens_per_s']:8.1f} tok/s, "
+              f"streams {'identical' if same else 'DIVERGED'}")
+    return {"devices": n_dev, "dp": dp, "backend": jax.default_backend(),
+            "rows": rows, "streams_identical": identical}
 
 
 # ---------------------------------------------------------------------------
@@ -261,11 +342,13 @@ def run(smoke: bool = False) -> dict:
                                                   1e-9),
             }
     scheduler = run_scheduler_scenario(smoke)
+    sharded = run_sharded_scenario(smoke)
     out = {"config": {"smoke": smoke, "requests": requests,
                       "max_new": max_new, "slots": 8,
-                      "backend": jax.default_backend()},
+                      "backend": jax.default_backend(),
+                      "jax_version": jax.__version__},
            "rows": rows, "speedups": speedups,
-           "scheduler": scheduler}
+           "scheduler": scheduler, "sharded": sharded}
     with open("BENCH_serve.json", "w") as f:
         json.dump(out, f, indent=2)
     print("wrote BENCH_serve.json")
@@ -290,6 +373,10 @@ def run(smoke: bool = False) -> dict:
                    if r["policy"] == "coverage")
         assert cov["prefix_cache"]["hits"] > 0
         assert cov["total_tokens"] <= scheduler["equal_budget"]
+        # ... and when the runtime has a mesh to shard over, sharding
+        # must be a pure placement decision: byte-identical streams
+        if "skipped" not in sharded:
+            assert sharded["streams_identical"], sharded
     return out
 
 

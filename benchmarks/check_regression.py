@@ -1,0 +1,127 @@
+"""Bench regression gate: fail CI when the serving bench degrades.
+
+Compares a fresh ``BENCH_serve.json`` (the bench-smoke step's output)
+against the committed ``BENCH_baseline.json`` and exits non-zero when:
+
+  * smoke throughput drops more than ``--tol`` (default 20%) in any
+    (impl, mode, macro_steps) cell present in both files — absolute
+    tokens/sec, so the baseline is recorded on deliberately modest
+    hardware (2-vCPU container) and hosted runners only ever look
+    faster; a drop past the tolerance means a real hot-path regression;
+  * the fused macro-step loop stops amortizing host syncs
+    (``syncs_per_token`` is deterministic, so this is exact);
+  * the scheduler scenario's coverage-vs-fifo win disappears: at equal
+    budget, coverage must match-or-beat fifo accuracy (one request of
+    sampling slack, as the bench asserts) while spending strictly fewer
+    tokens per served easy request;
+  * the sharded scenario ran (multi-device lane) and the single-device
+    vs mesh token streams were not byte-identical.
+
+``--skip-throughput`` drops the wall-clock checks — used by the forced
+multi-device CI lane, whose 8 host devices oversubscribe the runner's
+cores (its job is the identity + conservation gate, not perf).
+
+  python benchmarks/check_regression.py [current] [baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cells(report):
+    return {(r["impl"], r["mode"], r["macro_steps"]): r
+            for r in report.get("rows", [])}
+
+
+def check(cur: dict, base: dict, *, tol: float,
+          skip_throughput: bool) -> list:
+    errors = []
+
+    # wall-clock comparisons only mean something within one jax/XLA
+    # generation — the matrix's floor lane matches the baseline's
+    # recorded version, the latest-jax lane keeps the deterministic
+    # gates (syncs, scheduler win, sharded identity) only
+    cur_v = cur.get("config", {}).get("jax_version")
+    base_v = base.get("config", {}).get("jax_version")
+    if not skip_throughput and cur_v != base_v:
+        print(f"throughput gate skipped: jax {cur_v} vs baseline's "
+              f"{base_v} (deterministic gates still apply)")
+        skip_throughput = True
+
+    cur_cells, base_cells = _cells(cur), _cells(base)
+    for key in sorted(set(cur_cells) & set(base_cells)):
+        c, b = cur_cells[key], base_cells[key]
+        if not skip_throughput and \
+                c["tokens_per_s"] < (1.0 - tol) * b["tokens_per_s"]:
+            errors.append(
+                f"throughput regression in {key}: "
+                f"{c['tokens_per_s']:.1f} tok/s vs baseline "
+                f"{b['tokens_per_s']:.1f} (tolerance {tol:.0%})")
+        # sync amortization is near-deterministic (token streams — and so
+        # completion-boundary syncs — shift slightly across jax
+        # versions); 1.5x headroom still catches the loop de-fusing
+        if c["macro_steps"] >= 8 and \
+                c["syncs_per_token"] > b["syncs_per_token"] * 1.5 + 1e-9:
+            errors.append(
+                f"host-sync regression in {key}: "
+                f"{c['syncs_per_token']:.4f} syncs/token vs baseline "
+                f"{b['syncs_per_token']:.4f}")
+
+    sched = cur.get("scheduler", {})
+    head = sched.get("headline")
+    if head is None:
+        errors.append("scheduler section missing from current report")
+    else:
+        slack = 1.0 / max(sched.get("n_requests", 1), 1)
+        if head["accuracy_coverage"] + slack < head["accuracy_fifo"]:
+            errors.append(
+                f"coverage-vs-fifo accuracy win disappeared: "
+                f"{head['accuracy_coverage']:.3f} + {slack:.3f} slack < "
+                f"{head['accuracy_fifo']:.3f}")
+        if head["easy_per_served_coverage"] >= head["easy_per_served_fifo"]:
+            errors.append(
+                "coverage no longer spends fewer tokens per served easy "
+                f"request ({head['easy_per_served_coverage']:.2f} >= "
+                f"{head['easy_per_served_fifo']:.2f})")
+
+    sharded = cur.get("sharded", {})
+    if "skipped" in sharded:
+        print(f"sharded scenario skipped: {sharded['skipped']}")
+    elif not sharded.get("streams_identical", False):
+        errors.append("sharded serving diverged from single-device "
+                      "token streams")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", nargs="?", default="BENCH_serve.json")
+    ap.add_argument("baseline", nargs="?", default="BENCH_baseline.json")
+    ap.add_argument("--tol", type=float, default=0.20,
+                    help="allowed fractional throughput drop (default 0.20)")
+    ap.add_argument("--skip-throughput", action="store_true",
+                    help="skip wall-clock gates (forced-multi-device lane)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    errors = check(cur, base, tol=args.tol,
+                   skip_throughput=args.skip_throughput)
+    if errors:
+        print("BENCH REGRESSION GATE FAILED:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"bench regression gate passed "
+          f"({len(_cells(cur))} cells, tol {args.tol:.0%}"
+          f"{', throughput skipped' if args.skip_throughput else ''})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

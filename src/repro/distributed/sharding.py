@@ -56,7 +56,13 @@ def _axsize(mesh: Mesh, axes) -> int:
 
 
 def _maybe(mesh: Mesh, dim_size: int, axes) -> Optional[Any]:
-    """axes if dim_size divisible by their product else None."""
+    """axes if the mesh has them all and dim_size is divisible by their
+    product, else None (replicate). Missing axes happen on purpose:
+    serving meshes may carry only a "data" axis."""
+    if axes is not None:
+        named = (axes,) if isinstance(axes, str) else axes
+        if any(a not in mesh.axis_names for a in named):
+            return None
     return axes if dim_size % _axsize(mesh, axes) == 0 else None
 
 
@@ -183,6 +189,20 @@ def _cache_spec(mesh: Mesh, rules: ShardingRules, path, shape) -> P:
     def build(dims):
         return P(*([None] * off + [_norm(d) for d in dims]))
 
+    if name in ("k_pages", "v_pages"):
+        # Serving page pool: batchless (P, ps, Hkv, hd), layer-stacked
+        # to (n_super, P, ...). Sharded on the PAGE axis over the data
+        # shards — the host allocator's per-shard page-id ranges match
+        # these boundaries, so slots referencing their own shard's pages
+        # keep the decode gather/scatter local.
+        from repro.models.attention import paged_pool_page_axis
+        pg = paged_pool_page_axis(len(shape))
+        p_ax = _maybe(mesh, shape[pg], dp)
+        dims = [None] * len(shape)
+        dims[pg] = _norm(p_ax)
+        return P(*dims)
+    if name == "block_table":
+        return P(_norm(_maybe(mesh, shape[0], dp)), None)
     if name == "pos":
         return P(_norm(_maybe(mesh, shape[0], dp)))
     if name in ("k", "v") or name in ("cross_k", "cross_v"):
@@ -230,3 +250,51 @@ def batch_specs(shape_cfg: ShapeConfig, batch_shapes, mesh: Mesh):
 def to_shardings(mesh: Mesh, specs):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Serving (mesh-parallel decode batch + page-axis-sharded KV pools)
+# ---------------------------------------------------------------------------
+
+def batch_leading_spec(mesh: Mesh, shape) -> P:
+    """Shard a serving-state leaf on its leading (decode-batch) dim over
+    the data axes, everything else replicated."""
+    if len(shape) == 0:
+        return P()
+    dp = dp_axes(mesh)
+    b_ax = _maybe(mesh, shape[0], dp)
+    return P(*([_norm(b_ax)] + [None] * (len(shape) - 1)))
+
+
+def engine_state_specs(cfg: ModelConfig, state, mesh: Mesh,
+                       rules: ShardingRules = ShardingRules()):
+    """PartitionSpec tree for a ``ServeEngine`` ``EngineState``.
+
+    The decode batch (every per-slot leaf: tokens, aggregates, out
+    buffers, active masks, limits, cache ``pos``/``block_table`` and
+    dense per-slot cache entries) shards on its leading dim over the
+    data axes; paged KV pools shard on the page axis with the same
+    shard count, so a slot's block-table lookups resolve to its own
+    shard's pages (see ``models.attention.paged_pool_page_axis``).
+    Works on a live state or a ShapeDtypeStruct tree; ``state`` must be
+    a NamedTuple whose first field is the cache pytree.
+    """
+    cache = cache_specs(cfg, state.cache, mesh, rules)
+    rest = {f: batch_leading_spec(mesh, getattr(state, f).shape)
+            for f in state._fields if f != "cache"}
+    return type(state)(cache=cache, **rest)
+
+
+def serve_param_specs(cfg: ModelConfig, params, mesh: Mesh,
+                      rules: ShardingRules = ShardingRules()):
+    """Parameter placement for serving: replicate when the mesh has no
+    real model axis; otherwise reuse the training tensor-parallel rules
+    (without FSDP — decode batches are small and a gather per step
+    would dominate)."""
+    if rules.model_axis not in mesh.axis_names or \
+            mesh.shape[rules.model_axis] <= 1:
+        return jax.tree.map(lambda _: P(), params)
+    shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          params)
+    return param_specs(cfg, shapes, mesh,
+                       dataclasses.replace(rules, fsdp=False))

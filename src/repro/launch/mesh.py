@@ -31,3 +31,28 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU-device tests (requires forced host devices)."""
     return _make_mesh(shape, axes)
+
+
+def make_serve_mesh(dp: int = 0, *, model: int = 1):
+    """Serving mesh: ``dp`` data shards x ``model`` tensor-parallel
+    ranks over the first ``dp * model`` local devices (a mesh need not
+    cover every device — the CI lane forces 8 host devices and shards
+    4-wide). ``dp=0`` takes every device not claimed by ``model``.
+
+    On CPU, multi-device serving needs forced host devices, e.g.::
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if dp <= 0:
+        dp = max(1, len(devs) // model)
+    n = dp * model
+    if n > len(devs):
+        raise ValueError(
+            f"serve mesh wants {dp}x{model}={n} devices, have "
+            f"{len(devs)} (on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n})")
+    return Mesh(np.asarray(devs[:n]).reshape(dp, model), ("data", "model"))

@@ -47,6 +47,15 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="cross-request prompt-prefix KV reuse (paged "
                          "impls on all-attention decoders)")
+    ap.add_argument("--serve-dp", type=int, default=0,
+                    help="shard the decode batch + KV page pools across "
+                         "N data-parallel devices (0 = single device; "
+                         "on CPU combine with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--mesh", default="",
+                    help="explicit serving mesh as 'dp,model' (e.g. "
+                         "'4,2' = 4 data shards x 2-way tensor "
+                         "parallel); overrides --serve-dp")
     ap.add_argument("--no-bucket-prefill", action="store_true",
                     help="disable length-bucketed batched prefill")
     ap.add_argument("--prefill-bucket-min", type=int, default=16,
@@ -63,6 +72,17 @@ def main():
     if args.ckpt:
         params, _ = load_checkpoint(args.ckpt, params)
 
+    mesh = None
+    if args.mesh or args.serve_dp > 1:
+        from repro.launch.mesh import make_serve_mesh
+        if args.mesh:
+            dp, mp = (list(map(int, args.mesh.split(","))) + [1])[:2]
+        else:
+            dp, mp = args.serve_dp, 1
+        mesh = make_serve_mesh(dp, model=mp)
+        print(f"serving mesh: {dict(mesh.shape)} over "
+              f"{len(jax.devices())} {jax.default_backend()} devices")
+
     eng = ServeEngine(
         model, params, slots=args.slots, cache_len=128,
         sampling=SamplingConfig(max_new_tokens=args.max_new),
@@ -77,6 +97,7 @@ def main():
         sched_policy=args.sched_policy,
         global_budget=args.global_budget,
         prefix_cache=args.prefix_cache,
+        mesh=mesh,
         seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):

@@ -225,11 +225,33 @@ def cache_write(cache, k_new, v_new, pos):
     return {"k": k, "v": v}
 
 
+def paged_pool_page_axis(ndim: int) -> int:
+    """Index of the *page* axis in a paged-pool leaf.
+
+    ``make_paged_kv_cache`` emits (P, ps, Hkv, hd); the serving cache
+    stacks same-kind layers into (n_super, P, ps, Hkv, hd) super
+    entries. Under mesh-parallel serving the pool is sharded on exactly
+    this axis (``distributed.sharding.serve cache specs``), with shard
+    boundaries matching the host allocator's per-shard page-id ranges —
+    a slot that only references its own shard's pages keeps the decode
+    gather and ``paged_cache_write``'s scatter shard-local."""
+    assert ndim in (4, 5), ndim
+    return ndim - 4
+
+
 def make_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
                         dtype):
     """A shared pool of KV pages (no batch axis — slots reference pages
     through a block table). Page 0 is conventionally the quarantine page
-    idle slots write into; allocators should never hand it out."""
+    idle slots write into; allocators should never hand it out (sharded
+    pools reserve one quarantine page per shard — see
+    ``serving.page_pool.PagePool.quarantine_page``).
+
+    Sharding contract: the pool may be sharded on the page axis (axis
+    ``paged_pool_page_axis``) across the serving mesh's data shards.
+    Page ids in block tables stay GLOBAL — locality comes from the host
+    allocator handing each slot pages from its own shard's range, not
+    from renumbering."""
     hd = cfg.resolved_head_dim
     return {
         "k_pages": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd),
@@ -247,11 +269,15 @@ def paged_cache_write(cache, k_new, v_new, pos, block_table):
     in page ``block_table[b, p // ps]`` at offset ``p % ps``.
 
     This is a per-row scatter — unlike ``cache_write``'s select, it is
-    NOT safe under a context-parallel (S-sharded) cache (the paged pool
-    is replicated/unsharded; sharding a paged pool means sharding the
-    pool axis, which keeps the scatter local). Rows whose pos has run
-    past the table (idle slots) clamp to the last logical page; their
-    block-table row should point at the quarantine page.
+    NOT safe under a context-parallel (S-sharded) cache. Under the
+    serving mesh the pool is sharded on the *page* axis instead: the
+    scatter stays correct for any page id (GSPMD routes each row's
+    update to the owning shard), and stays *local* whenever the host
+    allocator keeps a slot's pages in its own shard's id range (the
+    sharded ``PagePool`` guarantees this for tail + frontier pages).
+    Rows whose pos has run past the table (idle slots) clamp to the
+    last logical page; their block-table row should point at their
+    shard's quarantine page.
     """
     P, ps = cache["k_pages"].shape[:2]
     n_pages = block_table.shape[1]

@@ -36,6 +36,26 @@ Modes: "camd" (adaptive), "best_of_n", "self_consistency", "greedy" —
 the paper's baselines share the engine so efficiency comparisons are
 apples-to-apples.
 
+The engine scales past one device by sharding over a
+``jax.sharding.Mesh`` (``mesh=``): the decode batch and every per-slot
+``EngineState`` leaf shard on the mesh's "data" axis, the paged KV pool
+shards on the *page* axis with shard boundaries matching the host
+allocator's per-shard page-id ranges (``PagePool(num_shards=dp)``), and
+params replicate (or reuse the training tensor-parallel rules when the
+mesh carries a real "model" axis). Slots partition contiguously across
+data shards; a slot's tail, frontier, and decode pages always come from
+its own shard's subpool, so the fused macro-step's block-table advance
+and KV scatter/gather stay shard-local. Admission control is therefore
+shard-local too: ``_paged_affordable`` walks the exact slots an
+admission would occupy and funds each candidate from its slot's shard.
+Decode numerics and sampling are sharding-invariant, so token streams
+are bit-identical to the single-device engine whenever pool capacity
+does not bind (pinned by ``tests/test_serving_sharded.py`` under forced
+host devices); under pool pressure, shard-local capacity can queue a
+request a single global pool would have admitted — deliberate: that is
+the accounting the page-axis sharding requires — which reorders
+admissions rather than corrupting any stream.
+
 Traffic-level decisions (which queued request or pending round gets the
 free slots, with how many candidates and what per-candidate token limit)
 are delegated to a pluggable scheduler (``serving/scheduler.py``):
@@ -136,11 +156,24 @@ class ServeEngine:
                  global_budget: int = 0,
                  sched_kwargs: Optional[Dict[str, Any]] = None,
                  prefix_cache: bool = False,
+                 mesh=None,
                  seed: int = 0):
         assert mode in ("camd", "best_of_n", "self_consistency", "greedy")
         assert impl in ("xla", "pallas", "paged", "paged_pallas")
         assert macro_steps >= 0
         self.model, self.params = model, params
+        # mesh-parallel serving: dp = product of the mesh's data axes.
+        # Slots partition contiguously across the dp shards; all
+        # device-side placement happens in _install_mesh below.
+        self.mesh = mesh
+        self.dp = 1
+        if mesh is not None:
+            from repro.distributed.sharding import dp_axes
+            self.dp = max(1, int(np.prod(
+                [mesh.shape[a] for a in dp_axes(mesh)], dtype=np.int64)))
+            assert slots % self.dp == 0, \
+                f"slots {slots} must divide across {self.dp} data shards"
+        self.slots_per_shard = slots // self.dp
         self.cfg = model.cfg
         self.B = slots
         self.V = self.cfg.vocab_size
@@ -173,9 +206,16 @@ class ServeEngine:
                 f"cache_len {cache_len} must be a multiple of page_size {ps}"
             self.page_size = ps
             self.pages_per_slot = cache_len // ps
-            num_pages = paged_kv.num_pages or slots * self.pages_per_slot + 1
+            # one quarantine page per data shard; a caller-given pool
+            # size is rounded up to a shard multiple (page-axis sharding
+            # needs equal subpools)
+            num_pages = paged_kv.num_pages or \
+                slots * self.pages_per_slot + self.dp
+            if num_pages % self.dp:
+                num_pages += self.dp - num_pages % self.dp
             self.pool = PagePool(num_pages, ps,
-                                 prefix_cache=self.prefix_cache)
+                                 prefix_cache=self.prefix_cache,
+                                 num_shards=self.dp)
             self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
             self._slot_pos = np.zeros(slots, np.int64)
             self._slot_limit = np.zeros(slots, np.int64)  # L + max_new
@@ -183,8 +223,10 @@ class ServeEngine:
             # allocate are *reserved* at admit time, so a candidate that
             # was admitted can always finish — pool pressure surfaces as
             # queueing delay at _schedule, never as a mid-decode crash.
+            # Reservations are tracked per data shard (a slot's future
+            # pages can only come from its own shard's subpool).
             self._slot_reserved = np.zeros(slots, np.int64)
-            self._reserved = 0
+            self._reserved_sh = np.zeros(self.dp, np.int64)
             # frontier width: the most page boundaries one slot can cross
             # in K device steps, plus one for the boundary the first step
             # may land on.
@@ -238,6 +280,11 @@ class ServeEngine:
         self._min_ring = min(rings) if rings else cache_len
 
         self.state = self._blank_state()
+        self._state_sharding = None
+        self._evid_sharding = None
+        self._frontier_sharding = None
+        if mesh is not None:
+            self._install_mesh(mesh)
         self._step_body = self._make_step_body()
         self._step_fn = jax.jit(self._step_body)
         self._macro_fn = self._build_macro_step()
@@ -259,6 +306,66 @@ class ServeEngine:
         self.host_syncs = 0
 
     # ------------------------------------------------------------------
+    # mesh placement
+    # ------------------------------------------------------------------
+    def _install_mesh(self, mesh):
+        """Place params and engine state on the serving mesh: the decode
+        batch and every per-slot state leaf shard over the data axis,
+        paged KV pools over the page axis (boundaries matching the host
+        allocator's per-shard page-id ranges), params replicated — or
+        tensor-parallel via the training sharding rules when the mesh
+        has a real "model" axis."""
+        from jax.sharding import NamedSharding
+        from repro.distributed.sharding import (batch_leading_spec,
+                                                engine_state_specs,
+                                                serve_param_specs,
+                                                to_shardings)
+        specs = engine_state_specs(self.cfg, self.state, mesh)
+        self._state_sharding = to_shardings(mesh, specs)
+        self.state = jax.device_put(self.state, self._state_sharding)
+        self.params = jax.device_put(
+            self.params,
+            to_shardings(mesh, serve_param_specs(self.cfg, self.params,
+                                                 mesh)))
+        self._evid_sharding = NamedSharding(
+            mesh, batch_leading_spec(mesh, (self.B, 1, self.d)))
+        self._frontier_sharding = NamedSharding(
+            mesh, batch_leading_spec(mesh, (self.B, 1)))
+
+    def _reshard(self):
+        """Pin the state back onto its canonical mesh placement before a
+        decode launch. Host-side admission/bookkeeping scatters run
+        eagerly and may leave leaves with drifted shardings; re-placing
+        is a no-op for already-correct leaves and guarantees the jitted
+        decode fns always see ONE input sharding (no per-pattern
+        recompiles, and the macro-step loop stays device-resident)."""
+        if self._state_sharding is not None:
+            self.state = jax.device_put(self.state, self._state_sharding)
+
+    def _slot_shard(self, s: int) -> int:
+        """Data shard owning slot ``s`` (contiguous partition)."""
+        return s // self.slots_per_shard
+
+    def _quarantine(self, s: int) -> int:
+        """Quarantine page idle slot ``s`` points its block table at —
+        its own shard's reserved page, so dead writes stay local."""
+        return self.pool.quarantine_page(self._slot_shard(s)) \
+            if self.paged else 0
+
+    @property
+    def _reserved(self) -> int:
+        """Total page reservations held by running candidates — derived
+        from the per-shard ledger so the two can never drift."""
+        return int(self._reserved_sh.sum())
+
+    def _shard_headroom(self, s: int) -> int:
+        """Pages shard ``s`` could fund right now: free + cache-evictable
+        minus reservations already charged to it — THE admission-headroom
+        definition, shared by seeding, placement, and affordability."""
+        return self.pool.free_pages_in(s) + self.pool.evictable(s) \
+            - int(self._reserved_sh[s])
+
+    # ------------------------------------------------------------------
     def _sync(self, tree):
         """Decode-loop host readback: one counted synchronization."""
         self.host_syncs += 1
@@ -278,6 +385,13 @@ class ServeEngine:
             cache = self.model.make_paged_cache(
                 B, self.cache_len, self._dtype,
                 page_size=self.page_size, num_pages=self.pool.num_pages)
+            if self.dp > 1:
+                # idle slots quarantine into their OWN shard's reserved
+                # page (page 0 of each shard's id range) so dead writes
+                # never cross shards
+                q = np.asarray([[self._quarantine(s)] * self.pages_per_slot
+                                for s in range(B)], np.int32)
+                cache = {**cache, "block_table": jnp.asarray(q)}
         else:
             cache = self.model.make_cache(B, self.cache_len, self._dtype)
         return EngineState(
@@ -489,13 +603,32 @@ class ServeEngine:
             if self._cache_batch_axis(path) == 1 else leaf[i:i + 1], cache)
 
     # -- paged cache plumbing ------------------------------------------
-    def _seed_prompt_pages(self, info):
+    def _page_shard_of(self, info, fallback: Optional[int] = None) -> int:
+        """The shard a request's prompt pages live on (chosen once):
+        prefix-cache holds pin it to the cached pages' shard; otherwise
+        the caller's ``fallback`` (the first admitted slot's shard) or,
+        at early-seed time, the least-loaded shard."""
+        if "page_shard" not in info:
+            held = info.get("prompt_pages")
+            if held:
+                info["page_shard"] = self.pool.shard_of(held[0])
+            elif fallback is not None:
+                info["page_shard"] = fallback
+            else:
+                info["page_shard"] = int(np.argmax(
+                    [self._shard_headroom(s) for s in range(self.dp)]))
+        return info["page_shard"]
+
+    def _seed_prompt_pages(self, info, shard: Optional[int] = None):
         """Allocate + write the request's full prompt pages (once per
         request — one pool hold each, released when the request
         finishes) and register them in the prefix cache. Prefix-cache
         hits arrive here already holding the cached prefix pages; only
         the remainder is written, from the suffix row (row positions =
-        prompt positions - prefix_len)."""
+        prompt positions - prefix_len). Under mesh sharding the pages
+        come from ONE shard's subpool (``_page_shard_of``) — candidates
+        on other shards reference them cross-shard, which GSPMD handles;
+        tail/frontier pages stay shard-local."""
         if info.get("prompt_seeded"):
             return
         ps = self.page_size
@@ -503,7 +636,8 @@ class ServeEngine:
         held = info.setdefault("prompt_pages", [])
         assert len(held) * ps == info.get("prefix_len", 0), \
             (len(held), info.get("prefix_len", 0))
-        new_full = self.pool.alloc(full - len(held))
+        new_full = self.pool.alloc(full - len(held),
+                                   self._page_shard_of(info, shard))
         if new_full:
             self.state = self.state._replace(cache=self._write_pages(
                 self.state.cache, info["cache_row"], new_full, 0))
@@ -522,14 +656,14 @@ class ServeEngine:
             return
         L = info["prompt_len"]
         need = L // self.page_size - len(info.get("prompt_pages", ()))
-        headroom = self.pool.free_pages + self.pool.evictable() \
-            - self._reserved
+        shard = self._page_shard_of(info)
+        headroom = self._shard_headroom(shard)
         # keep at least one worst-case candidate fundable after seeding
         if headroom - need < self._pages_per_candidate(L):
             return
-        self._seed_prompt_pages(info)
+        self._seed_prompt_pages(info, shard)
         # early seeding must not eat into pages backing live reservations
-        self.pool.ensure_free(self._reserved)
+        self._ensure_reserved_free()
 
     def _seed_paged_slots(self, info, slot_ids: List[int], lim: int):
         """Point ``slot_ids`` at the request's prompt pages.
@@ -555,15 +689,19 @@ class ServeEngine:
             f"of {self.cache_len} (paged KV does not ring-wrap)"
         full, tail_len = divmod(L, ps)
         row_off = info.get("prefix_len", 0)      # cache row starts here
-        self._seed_prompt_pages(info)
+        self._seed_prompt_pages(info, self._slot_shard(slot_ids[0]))
         cache = self.state.cache
         bt_rows = np.zeros((len(slot_ids), self.pages_per_slot), np.int32)
         tails = []
         for j, s in enumerate(slot_ids):
+            sh = self._slot_shard(s)
             pages = list(info["prompt_pages"])
             self.pool.share(pages)
             if tail_len:
-                tail = self.pool.alloc(1)
+                # CoW tail + all future decode pages come from the
+                # slot's own shard — the shard-locality invariant the
+                # page-axis sharding leans on
+                tail = self.pool.alloc(1, sh)
                 tails += tail
                 pages += tail
             self._slot_pages[s] = pages
@@ -571,7 +709,7 @@ class ServeEngine:
             self._slot_limit[s] = L + lim
             future = self._pages_per_candidate(L, lim) - (1 if tail_len else 0)
             self._slot_reserved[s] = future
-            self._reserved += future
+            self._reserved_sh[sh] += future
             bt_rows[j, :len(pages)] = pages
         if tails:
             # every candidate's tail page holds the same prompt bytes:
@@ -584,7 +722,7 @@ class ServeEngine:
             # prefix hit can re-pin them — reservations must always be
             # backed by the free list or frontier staging could fail
             # mid-decode
-            self.pool.ensure_free(self._reserved)
+            self._ensure_reserved_free()
         idx = jnp.asarray(slot_ids)
         cache = {**cache,
                  "block_table": cache["block_table"].at[idx].set(
@@ -602,18 +740,57 @@ class ServeEngine:
         total = -((prompt_len + lim) // -ps)                 # ceil
         return total - prompt_len // ps
 
+    def _ensure_reserved_free(self):
+        """Back every live reservation with ACTUALLY free pages of its
+        own shard (evicting cached-only prefix pages if needed)."""
+        if self.dp == 1:
+            self.pool.ensure_free(self._reserved)
+        else:
+            for s in range(self.dp):
+                self.pool.ensure_free(int(self._reserved_sh[s]), s)
+
     def _paged_affordable(self, info, want: int,
                           lim: Optional[int] = None) -> int:
         """How many candidates of this request fit in the pool right now
         (free + cache-evictable pages minus reservations held by running
-        candidates and the request's unseeded prompt-page hold)."""
+        candidates and the request's unseeded prompt-page hold).
+
+        Mesh-sharded pools make this shard-local: admission fills free
+        slots in ascending order, so walk exactly those slots and fund
+        each candidate's worst-case pages (CoW tail + decode frontier)
+        from its slot's OWN shard; the shared prompt-page hold charges
+        the request's page shard (the first admitted slot's, unless a
+        prefix-cache hold already pinned one)."""
         L = info["prompt_len"]
         per_cand = self._pages_per_candidate(L, lim)
         need_hold = 0 if info.get("prompt_seeded") else \
             L // self.page_size - len(info.get("prompt_pages", ()))
-        avail = self.pool.free_pages + self.pool.evictable() \
-            - self._reserved - need_hold
-        return max(0, min(want, avail // max(per_cand, 1)))
+        if self.dp == 1:
+            avail = self.pool.free_pages + self.pool.evictable() \
+                - self._reserved - need_hold
+            return max(0, min(want, avail // max(per_cand, 1)))
+        free = self._free_slots()[:want]
+        if not free:
+            return 0
+        avail = [self._shard_headroom(s) for s in range(self.dp)]
+        held = info.get("prompt_pages")
+        hold_shard = info.get("page_shard",
+                              self.pool.shard_of(held[0]) if held
+                              else self._slot_shard(free[0]))
+        avail[hold_shard] -= need_hold
+        if avail[hold_shard] < 0:
+            # the shard pinned to hold the shared prompt pages cannot
+            # fund them — admitting would crash _seed_prompt_pages
+            # mid-admission instead of surfacing as queueing delay
+            return 0
+        take = 0
+        for slot in free:
+            sh = self._slot_shard(slot)
+            if avail[sh] < per_cand:
+                break
+            avail[sh] -= per_cand
+            take += 1
+        return take
 
     def _write_pages(self, cache, row, pages: List[int], start: int,
                      broadcast: bool = False):
@@ -704,9 +881,9 @@ class ServeEngine:
             if need > 0:
                 assert need <= self._slot_reserved[s], \
                     (s, need, self._slot_reserved[s])
-                pages = self.pool.stage_frontier(need)
+                pages = self.pool.stage_frontier(need, self._slot_shard(s))
                 self._slot_reserved[s] -= need
-                self._reserved -= need
+                self._reserved_sh[self._slot_shard(s)] -= need
                 fr[s, :need] = pages
             else:
                 pages = []
@@ -727,7 +904,7 @@ class ServeEngine:
             if unused:
                 self.pool.return_frontier(unused)
                 self._slot_reserved[s] += len(unused)
-                self._reserved += len(unused)
+                self._reserved_sh[self._slot_shard(s)] += len(unused)
             self._slot_pos[s] = p1
 
     def _alloc_step_pages(self):
@@ -746,11 +923,11 @@ class ServeEngine:
                     raise RuntimeError(
                         f"slot {s} ran past the paged cache "
                         f"({p} >= {self.cache_len})")
-                page = self.pool.alloc(1)[0]
+                page = self.pool.alloc(1, self._slot_shard(s))[0]
                 self._slot_pages[s].append(page)
                 if self._slot_reserved[s] > 0:
                     self._slot_reserved[s] -= 1
-                    self._reserved -= 1
+                    self._reserved_sh[self._slot_shard(s)] -= 1
                 rows.append(s)
                 cols.append(li)
                 vals.append(page)
@@ -869,6 +1046,9 @@ class ServeEngine:
             self._slot_lim[s] = lim
             info["cand_slots"].append((self._next_cand, s))
             self._next_cand += 1
+        if self.dp > 1:
+            self.scheduler.note_shard_admission(
+                self._slot_shard(s) for s in slot_ids)
 
     # -- prefill -------------------------------------------------------
     def _prompt_span(self, req: Request) -> int:
@@ -1152,15 +1332,18 @@ class ServeEngine:
                 # drop a holder)
                 self.pool.free(self._slot_pages[slot])
                 self._slot_pages[slot] = []
-                self._reserved -= int(self._slot_reserved[slot])
+                self._reserved_sh[self._slot_shard(slot)] -= \
+                    int(self._slot_reserved[slot])
                 self._slot_reserved[slot] = 0
             if uid not in uids:
                 uids.append(uid)
         if self.paged:
             # quarantine the freed slots' block tables in one scatter so
-            # their dead writes land on page 0
+            # their dead writes land on their shard's reserved page
             cache = self.state.cache
-            bt = cache["block_table"].at[idx].set(0)
+            quar = jnp.asarray([self._quarantine(s) for s in slots],
+                               jnp.int32)
+            bt = cache["block_table"].at[idx].set(quar[:, None])
             self.state = self.state._replace(
                 cache={**cache, "block_table": bt})
         # rounds complete when no slots of the request remain live
@@ -1319,6 +1502,8 @@ class ServeEngine:
             return self._run_legacy()
         self._schedule()
         evid = jnp.zeros((self.B, 1, self.d), jnp.float32)
+        if self._evid_sharding is not None:
+            evid = jax.device_put(evid, self._evid_sharding)
         if self.has_evidence:
             evid = self._gather_evid()
         while True:
@@ -1330,6 +1515,9 @@ class ServeEngine:
                 continue
             staged, frontier = (self._stage_frontier() if self.paged
                                 else (None, self._dummy_frontier))
+            if self._frontier_sharding is not None:
+                frontier = jax.device_put(frontier, self._frontier_sharding)
+            self._reshard()
             self.state, done, steps = self._macro_fn(
                 self.params, self.state, self._decode_key,
                 jnp.int32(self._t), evid, frontier)
@@ -1356,6 +1544,8 @@ class ServeEngine:
         measured against."""
         self._schedule()
         evid = jnp.zeros((self.B, 1, self.d), jnp.float32)
+        if self._evid_sharding is not None:
+            evid = jax.device_put(evid, self._evid_sharding)
         if self.has_evidence:
             evid = self._gather_evid()
         while True:
@@ -1368,6 +1558,7 @@ class ServeEngine:
             self.key, k = jax.random.split(self.key)
             if self.paged:
                 self._alloc_step_pages()
+            self._reshard()
             self.state, done = self._step_fn(self.params, self.state, k, evid)
             self.total_steps += 1
             self._t += 1
@@ -1395,7 +1586,10 @@ class ServeEngine:
         # pad rows to equal Ne
         ne = max(r.shape[0] for r in rows)
         rows = [jnp.pad(r, ((0, ne - r.shape[0]), (0, 0))) for r in rows]
-        return jnp.stack(rows)
+        ev = jnp.stack(rows)
+        if self._evid_sharding is not None:
+            ev = jax.device_put(ev, self._evid_sharding)
+        return ev
 
     def _result(self, uid: int) -> Result:
         info = self._reqs[uid]
@@ -1447,6 +1641,7 @@ class _EngineSchedContext(SchedulerContext):
     def __init__(self, eng: ServeEngine):
         self.eng = eng
         self.max_new = eng.max_new
+        self.num_shards = eng.dp
 
     def free_slots(self) -> int:
         return len(self.eng._free_slots())

@@ -9,6 +9,18 @@ the partially-filled tail page (copy-on-write at the first diverging
 token), so prompt KV is resident once per request, not once per
 candidate.
 
+**Sharded pools** (``num_shards > 1``, mesh-parallel serving): the page
+id space is split into ``num_shards`` contiguous ranges, one per data
+shard of the device mesh — the device-side pool arrays are sharded on
+the page axis with the same boundaries, so a slot that only references
+its own shard's pages keeps every gather/scatter shard-local. Each
+shard has its OWN free list, frontier staging, and quarantine page;
+``alloc``/``stage_frontier`` take the target shard, while ``free``/
+``share`` route by page id. Capacity is shard-local by construction: a
+full shard cannot borrow pages from another (its slots could not
+address them locally), which is exactly the accounting the serving
+scheduler's admission control mirrors.
+
 The optional **cross-request prefix cache** (``prefix_cache=True``)
 generalizes that sharing across requests and across time: page-aligned
 prompt prefixes are content-hashed into a chain (page i's key commits to
@@ -18,20 +30,23 @@ resident. A later request whose prompt starts with the same bytes
 shares those pages CoW — its prefill skips them entirely. Cached-only
 pages (refcount 1, held by nobody but the cache) are *evictable*:
 ``alloc`` reclaims them LRU-leaf-first under pool pressure, so the
-cache can never starve live traffic.
+cache can never starve live traffic. Victim selection is a min-tick
+heap with lazy deletion (O(log n) per eviction), not a scan.
 
-Page 0 is reserved as the quarantine page: idle slots' block tables
-point at it and their dead writes land there. It is never allocated and
-never freed.
+The first ``reserved`` pages of every shard are quarantine pages: idle
+slots' block tables point at their shard's quarantine page and their
+dead writes land there. They are never allocated and never freed (for
+the historical single-shard pool this is page 0).
 
 All methods raise on misuse (double free, free of an unallocated page,
-over-allocation) rather than corrupting the table — the serving tests
-lean on these invariants.
+over-allocation, cross-shard alloc) rather than corrupting the table —
+the serving tests lean on these invariants.
 """
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, Iterable, List, Optional, Sequence
+import heapq
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -80,6 +95,20 @@ class PrefixCache:
         self.pool = pool
         self._nodes: Dict[str, _Node] = {}
         self._tick = 0
+        # Min-tick victim heaps: (tick, key) entries with lazy deletion.
+        # Every LRU touch pushes a fresh entry; ``evict`` pops and
+        # discards entries whose tick no longer matches the node (stale)
+        # or whose node is gone. This replaces the O(nodes) leaf scan —
+        # each eviction is O(log heap) amortized, which matters once
+        # caches grow past a few thousand pages. Sharded pools keep one
+        # heap PER SHARD alongside the global one (entries duplicated,
+        # lazy deletion resolves both) so shard-filtered eviction stays
+        # logarithmic instead of draining-and-restashing foreign shards'
+        # entries on every pressured alloc.
+        self._heap: List[Tuple[int, str]] = []
+        self._heap_sh: List[List[Tuple[int, str]]] = \
+            [[] for _ in range(pool.num_shards)] if pool.num_shards > 1 \
+            else []
         self._evictable_memo = None
         self.probes = 0        # lookup calls
         self.hits = 0          # pages reused across requests
@@ -91,6 +120,34 @@ class PrefixCache:
     @property
     def cached_pages(self) -> int:
         return len(self._nodes)
+
+    def _push(self, tick: int, key: str, page: int):
+        heapq.heappush(self._heap, (tick, key))
+        if self._heap_sh:
+            heapq.heappush(self._heap_sh[self.pool.shard_of(page)],
+                           (tick, key))
+        # Lazy deletion leaves one stale tuple per touch; without pool
+        # pressure evict() never pops them, so a long-running server
+        # would grow the heaps with total probes, not cached pages.
+        # Rebuild from live nodes once stale entries dominate — O(nodes)
+        # amortized over >= 3x that many pushes.
+        if len(self._heap) > 64 + 4 * len(self._nodes):
+            self._compact()
+
+    def _compact(self):
+        live = [(node.tick, k) for k, node in self._nodes.items()]
+        self._heap = list(live)
+        heapq.heapify(self._heap)
+        if self._heap_sh:
+            for s in range(len(self._heap_sh)):
+                h = [(t, k) for t, k in live
+                     if self.pool.shard_of(self._nodes[k].page) == s]
+                heapq.heapify(h)
+                self._heap_sh[s] = h
+
+    def _touch(self, key: str, node: _Node):
+        node.tick = self._tick
+        self._push(self._tick, key, node.page)
 
     def match_and_hold(self, keys: Sequence[str]) -> List[int]:
         """Pages of the longest cached prefix of ``keys``, with one
@@ -110,7 +167,7 @@ class PrefixCache:
             return []
         self.pool.share(pages)
         for k in keys[:len(pages)]:
-            self._nodes[k].tick = self._tick
+            self._touch(k, self._nodes[k])
         self.hits += len(pages)
         self.hit_tokens += len(pages) * self.pool.page_size
         return pages
@@ -129,11 +186,12 @@ class PrefixCache:
                 self.pool.share([page])
                 node = _Node(int(page), parent, self._tick)
                 self._nodes[k] = node
+                self._push(self._tick, k, node.page)
                 if parent is not None:
                     self._nodes[parent].children += 1
                 self.insertions += 1
             else:
-                node.tick = self._tick
+                self._touch(k, node)
             parent = k
 
     # -- eviction -------------------------------------------------------
@@ -150,37 +208,61 @@ class PrefixCache:
                     p = self._nodes[p].parent
         return blocked
 
-    def evictable_pages(self) -> int:
-        """Pages the cache could hand back to the pool right now.
+    def evictable_pages(self, shard: Optional[int] = None) -> int:
+        """Pages the cache could hand back to the pool right now
+        (optionally: only pages living in ``shard``'s id range).
         Memoized on the pool's mutation counter — the admission path
         calls this per decision, and the blocked-set walk is O(nodes)."""
         key = (self.pool.mutations, self._tick, len(self._nodes))
-        if self._evictable_memo is not None and \
-                self._evictable_memo[0] == key:
-            return self._evictable_memo[1]
-        val = len(self._nodes) - len(self._reclaimable_blocked())
-        self._evictable_memo = (key, val)
-        return val
-
-    def evict(self, n: int) -> int:
-        """Free up to ``n`` cached pages, least-recently-used leaves
-        first (a leaf eviction may expose its parent as the next leaf —
-        chains shrink from the deep end, staying prefix-closed)."""
-        freed = 0
-        while freed < n:
-            victim = None
+        if self._evictable_memo is None or self._evictable_memo[0] != key:
+            blocked = self._reclaimable_blocked()
+            per_shard = np.zeros(self.pool.num_shards, np.int64)
             for k, node in self._nodes.items():
-                if node.children == 0 and self.pool.refcount(node.page) == 1:
-                    if victim is None or node.tick < self._nodes[victim].tick:
-                        victim = k
-            if victim is None:
-                break
-            node = self._nodes.pop(victim)
-            if node.parent is not None and node.parent in self._nodes:
-                self._nodes[node.parent].children -= 1
-            self.pool.free([node.page])
-            self.evictions += 1
+                if k not in blocked:
+                    per_shard[self.pool.shard_of(node.page)] += 1
+            self._evictable_memo = (key, per_shard)
+        per_shard = self._evictable_memo[1]
+        return int(per_shard.sum() if shard is None else per_shard[shard])
+
+    def _evict_node(self, key: str, node: _Node):
+        self._nodes.pop(key)
+        if node.parent is not None and node.parent in self._nodes:
+            parent = self._nodes[node.parent]
+            parent.children -= 1
+            if parent.children == 0:
+                # the parent just became a leaf: it is the next-oldest
+                # victim of this chain (same LRU tick — chains are
+                # touched root-to-leaf together), so make sure a live
+                # heap entry exists even if its old one was popped
+                self._push(parent.tick, node.parent, parent.page)
+        self.pool.free([node.page])
+        self.evictions += 1
+
+    def evict(self, n: int, shard: Optional[int] = None) -> int:
+        """Free up to ``n`` cached pages, least-recently-used leaves
+        first (a leaf eviction exposes its parent as the next leaf —
+        chains shrink from the deep end, staying prefix-closed). With
+        ``shard``, only pages in that shard's id range are considered —
+        served from that shard's own heap, so one loaded shard's
+        pressure never pays to sift through its siblings' entries."""
+        heap = self._heap_sh[shard] if shard is not None and self._heap_sh \
+            else self._heap
+        freed = 0
+        stash: List[Tuple[int, str]] = []
+        while freed < n and heap:
+            tick, key = heapq.heappop(heap)
+            node = self._nodes.get(key)
+            if node is None or node.tick != tick:
+                continue                       # stale lazy-deletion entry
+            if node.children > 0 or self.pool.refcount(node.page) > 1 or \
+                    (shard is not None and
+                     self.pool.shard_of(node.page) != shard):
+                stash.append((tick, key))      # alive but not evictable now
+                continue
+            self._evict_node(key, node)
             freed += 1
+        for entry in stash:
+            heapq.heappush(heap, entry)
         return freed
 
     def drop_all(self):
@@ -189,6 +271,9 @@ class PrefixCache:
         for node in self._nodes.values():
             self.pool.free([node.page])
         self._nodes.clear()
+        self._heap.clear()
+        for h in self._heap_sh:
+            h.clear()
 
     def stats(self) -> dict:
         return {
@@ -201,16 +286,30 @@ class PrefixCache:
 
 class PagePool:
     def __init__(self, num_pages: int, page_size: int, *, reserved: int = 1,
-                 prefix_cache: bool = False):
-        if num_pages <= reserved:
-            raise PagePoolError(f"pool of {num_pages} pages has no "
-                                f"allocatable pages (reserved={reserved})")
+                 prefix_cache: bool = False, num_shards: int = 1):
+        if num_shards < 1:
+            raise PagePoolError(f"num_shards={num_shards}")
+        if num_pages % num_shards:
+            raise PagePoolError(
+                f"pool of {num_pages} pages not divisible into "
+                f"{num_shards} shards")
+        self.pages_per_shard = num_pages // num_shards
+        if self.pages_per_shard <= reserved:
+            raise PagePoolError(
+                f"pool of {num_pages} pages has no allocatable pages "
+                f"(reserved={reserved} per shard x {num_shards} shards)")
         self.num_pages = num_pages
         self.page_size = page_size
         self.reserved = reserved
-        # LIFO free list: recently freed pages are re-used first (their
-        # contents are hot in cache and get overwritten anyway).
-        self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
+        self.num_shards = num_shards
+        # Per-shard LIFO free lists: recently freed pages are re-used
+        # first (their contents are hot in cache and get overwritten
+        # anyway). Initial pop order is ascending from the shard's first
+        # allocatable page — identical to the historical single-shard
+        # pool for num_shards == 1.
+        self._free_sh: List[List[int]] = [
+            list(range(lo + self.pages_per_shard - 1, lo + reserved - 1, -1))
+            for lo in range(0, num_pages, self.pages_per_shard)]
         self._refs = np.zeros(num_pages, np.int64)
         self.max_in_use = 0
         # bumped on every refcount mutation (memo key for the prefix
@@ -220,6 +319,8 @@ class PagePool:
         # of the device loop and how many came back unconsumed.
         self.frontier_staged = 0
         self.frontier_returned = 0
+        self._frontier_staged_sh = np.zeros(num_shards, np.int64)
+        self._frontier_returned_sh = np.zeros(num_shards, np.int64)
         # cross-request prefix cache (None when disabled)
         self.prefix: Optional[PrefixCache] = \
             PrefixCache(self) if prefix_cache else None
@@ -232,7 +333,21 @@ class PagePool:
 
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free_sh)
+
+    def free_pages_in(self, shard: int) -> int:
+        return len(self._free_sh[shard])
+
+    def shard_of(self, page: int) -> int:
+        return int(page) // self.pages_per_shard
+
+    def quarantine_page(self, shard: int = 0) -> int:
+        """The reserved page idle slots of ``shard`` point their block
+        tables at (their dead writes land there, shard-locally)."""
+        return shard * self.pages_per_shard
+
+    def _is_reserved(self, page: int) -> bool:
+        return page % self.pages_per_shard < self.reserved
 
     def refcount(self, page: int) -> int:
         return int(self._refs[page])
@@ -241,41 +356,54 @@ class PagePool:
         return self.in_use * self.page_size
 
     # ------------------------------------------------------------------
-    def evictable(self) -> int:
+    def evictable(self, shard: Optional[int] = None) -> int:
         """Pages reclaimable from the prefix cache under pool pressure
-        (admission-control headroom beyond the free list)."""
-        return self.prefix.evictable_pages() if self.prefix is not None else 0
+        (admission-control headroom beyond the free list), optionally
+        restricted to one shard's id range."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.evictable_pages(shard)
 
-    def ensure_free(self, n: int):
+    def ensure_free(self, n: int, shard: Optional[int] = None):
         """Evict cached-only pages until the free list holds at least
-        ``n`` pages. The serving engine calls this after every admission
-        so reservations are always backed by *actually free* pages —
-        evictable pages counted at admission time could otherwise be
-        re-pinned by a later prefix-cache hit, turning reservation-backed
-        frontier staging into a mid-decode failure."""
-        if n <= len(self._free):
+        ``n`` pages (of ``shard``, when given). The serving engine calls
+        this after every admission so reservations are always backed by
+        *actually free* pages — evictable pages counted at admission
+        time could otherwise be re-pinned by a later prefix-cache hit,
+        turning reservation-backed frontier staging into a mid-decode
+        failure."""
+        have = self.free_pages if shard is None else self.free_pages_in(shard)
+        if n <= have:
             return
         if self.prefix is not None:
-            self.prefix.evict(n - len(self._free))
-        if n > len(self._free):
+            self.prefix.evict(n - have, shard)
+            have = self.free_pages if shard is None \
+                else self.free_pages_in(shard)
+        if n > have:
             raise PagePoolError(
-                f"cannot secure {n} free pages ({len(self._free)} free, "
-                f"{self.evictable()} evictable of {self.num_pages})")
+                f"cannot secure {n} free pages ({have} free, "
+                f"{self.evictable(shard)} evictable of {self.num_pages}"
+                f"{'' if shard is None else f', shard {shard}'})")
 
-    def alloc(self, n: int = 1) -> List[int]:
-        """Take ``n`` fresh pages (refcount 1 each). Under pressure,
-        cached-only prefix pages are evicted LRU-first to cover the
-        request before giving up."""
+    def alloc(self, n: int = 1, shard: int = 0) -> List[int]:
+        """Take ``n`` fresh pages (refcount 1 each) from ``shard``'s
+        range. Under pressure, cached-only prefix pages of that shard
+        are evicted LRU-first to cover the request before giving up."""
         if n < 0:
             raise PagePoolError(f"alloc({n})")
-        if n > len(self._free) and self.prefix is not None:
-            self.prefix.evict(n - len(self._free))
-        if n > len(self._free):
+        if not 0 <= shard < self.num_shards:
+            raise PagePoolError(f"alloc on unknown shard {shard}")
+        free = self._free_sh[shard]
+        if n > len(free) and self.prefix is not None:
+            self.prefix.evict(n - len(free),
+                              shard if self.num_shards > 1 else None)
+        if n > len(free):
             raise PagePoolError(
-                f"out of KV pages: need {n}, have {len(self._free)} free of "
-                f"{self.num_pages} (in use: {self.in_use}) — raise num_pages "
-                f"or reduce slots/cache_len")
-        pages = [self._free.pop() for _ in range(n)]
+                f"out of KV pages: need {n}, have {len(free)} free of "
+                f"{self.pages_per_shard} in shard {shard} "
+                f"(pool in use: {self.in_use}/{self.num_pages}) — raise "
+                f"num_pages or reduce slots/cache_len")
+        pages = [free.pop() for _ in range(n)]
         for p in pages:
             self._refs[p] = 1
         self.mutations += 1
@@ -293,30 +421,33 @@ class PagePool:
 
     def free(self, pages: Iterable[int]):
         """Drop one holder from each page; pages reaching zero return to
-        the free list (this is what lets an early-stopped easy request
-        immediately fund a hard one)."""
+        their OWN shard's free list (this is what lets an early-stopped
+        easy request immediately fund a hard one — on the same shard)."""
         for p in pages:
-            if p < self.reserved:
+            if self._is_reserved(p):
                 raise PagePoolError(f"free of reserved page {p}")
             if self._refs[p] <= 0:
                 raise PagePoolError(f"double free of page {p}")
             self._refs[p] -= 1
             if self._refs[p] == 0:
-                self._free.append(p)
+                self._free_sh[self.shard_of(p)].append(p)
         self.mutations += 1
 
     # ------------------------------------------------------------------
     # Page frontiers (macro-step decode)
     # ------------------------------------------------------------------
-    def stage_frontier(self, n: int) -> List[int]:
-        """Reserve ``n`` pages for a slot's decode *frontier*: the pages
-        the device-resident macro-step loop may advance into without host
-        intervention. Staged pages are ordinary allocations (refcount 1) —
-        the caller writes their ids into the (B, F) frontier array before
-        launch and, after the macro-step returns, keeps the consumed
-        prefix and hands the rest back via ``return_frontier``."""
-        pages = self.alloc(n)
+    def stage_frontier(self, n: int, shard: int = 0) -> List[int]:
+        """Reserve ``n`` pages of ``shard`` for a slot's decode
+        *frontier*: the pages the device-resident macro-step loop may
+        advance into without host intervention. Staged pages are
+        ordinary allocations (refcount 1) — the caller writes their ids
+        into the (B, F) frontier array before launch and, after the
+        macro-step returns, keeps the consumed prefix and hands the rest
+        back via ``return_frontier``. Staging from the slot's own shard
+        keeps the device-side block-table advance shard-local."""
+        pages = self.alloc(n, shard)
         self.frontier_staged += n
+        self._frontier_staged_sh[shard] += n
         return pages
 
     def return_frontier(self, pages: Iterable[int]):
@@ -325,22 +456,35 @@ class PagePool:
         pages = list(pages)
         self.free(pages)
         self.frontier_returned += len(pages)
+        for p in pages:
+            self._frontier_returned_sh[self.shard_of(p)] += 1
 
     # ------------------------------------------------------------------
     def check(self):
         """Conservation invariant: every non-reserved page is either on
-        the free list (ref 0) or held (ref > 0), never both/neither."""
-        free = set(self._free)
-        if len(free) != len(self._free):
-            raise PagePoolError("free list contains duplicates")
-        for p in range(self.reserved, self.num_pages):
+        its own shard's free list (ref 0) or held (ref > 0), never
+        both/neither; no free list holds another shard's pages."""
+        free_all = set()
+        for s, fl in enumerate(self._free_sh):
+            fs = set(fl)
+            if len(fs) != len(fl):
+                raise PagePoolError(f"shard {s} free list has duplicates")
+            for p in fs:
+                if self.shard_of(p) != s:
+                    raise PagePoolError(
+                        f"page {p} on shard {s} free list but belongs to "
+                        f"shard {self.shard_of(p)}")
+                if self._is_reserved(p):
+                    raise PagePoolError(f"reserved page {p} on free list")
+            free_all |= fs
+        for p in range(self.num_pages):
+            if self._is_reserved(p):
+                continue
             held = self._refs[p] > 0
-            if held == (p in free):
+            if held == (p in free_all):
                 raise PagePoolError(
                     f"page {p} violates conservation (refs={self._refs[p]}, "
-                    f"on_free_list={p in free})")
-        if any(p < self.reserved for p in free):
-            raise PagePoolError("reserved page on the free list")
+                    f"on_free_list={p in free_all})")
         if self.prefix is not None:
             for k, node in self.prefix._nodes.items():
                 if self._refs[node.page] <= 0:
@@ -361,6 +505,13 @@ class PagePool:
             "frontier_staged": self.frontier_staged,
             "frontier_returned": self.frontier_returned,
         }
+        if self.num_shards > 1:
+            s["num_shards"] = self.num_shards
+            s["shards"] = [{
+                "free": self.free_pages_in(i),
+                "frontier_staged": int(self._frontier_staged_sh[i]),
+                "frontier_returned": int(self._frontier_returned_sh[i]),
+            } for i in range(self.num_shards)]
         if self.prefix is not None:
             s["prefix_cache"] = self.prefix.stats()
         return s

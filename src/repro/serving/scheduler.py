@@ -65,9 +65,20 @@ class RoundWork:
 
 class SchedulerContext:
     """What a policy may observe and do. The engine implements this
-    (``ServeEngine._sched_ctx``); property tests implement fakes."""
+    (``ServeEngine._sched_ctx``); property tests implement fakes.
+
+    Under mesh-parallel serving (``num_shards > 1``) slots and KV pages
+    are partitioned across data shards: slot ``s`` lives on shard
+    ``s // (slots / num_shards)`` and can only be backed by that shard's
+    page subpool. Policies stay shard-oblivious — ``affordable`` is the
+    shard-local capacity gate: the engine walks the exact free slots an
+    admission of ``want`` candidates would occupy (ascending order, the
+    same order ``admit_*`` assigns) and counts the longest prefix each
+    slot's OWN shard can fund, so budget commitment and coverage ranking
+    automatically respect shard-local capacity."""
 
     max_new: int
+    num_shards: int = 1
 
     def free_slots(self) -> int:
         raise NotImplementedError
@@ -120,6 +131,11 @@ class Scheduler:
         self.spent = 0
         self.admitted_candidates = 0
         self.declined_rounds = 0
+        # per-shard admission telemetry (mesh-parallel serving): the
+        # engine reports each admitted candidate's slot shard so skewed
+        # placement (one shard's pool saturating while others idle) is
+        # visible in sched_stats without a device readback
+        self.admitted_per_shard: Dict[int, int] = {}
 
     # -- budget ---------------------------------------------------------
     def remaining(self) -> Optional[int]:
@@ -152,6 +168,13 @@ class Scheduler:
         self.spent += n_tokens
         assert self.committed >= 0, (uid, n_tokens, limit)
 
+    def note_shard_admission(self, shards) -> None:
+        """Engine callback: one entry per admitted candidate, the data
+        shard of the slot it landed on."""
+        for s in shards:
+            self.admitted_per_shard[int(s)] = \
+                self.admitted_per_shard.get(int(s), 0) + 1
+
     def exhausted(self) -> bool:
         """No admission can ever be funded again (terminal-drain check:
         only meaningful when nothing is live, i.e. committed == 0).
@@ -160,7 +183,7 @@ class Scheduler:
         return rem is not None and rem < 2
 
     def stats(self) -> Dict[str, float]:
-        return {
+        s = {
             "policy": self.name,
             "global_budget": self.global_budget,
             "spent": self.spent,
@@ -168,6 +191,10 @@ class Scheduler:
             "admitted_candidates": self.admitted_candidates,
             "declined_rounds": self.declined_rounds,
         }
+        if self.admitted_per_shard:
+            s["admitted_per_shard"] = {
+                str(k): v for k, v in sorted(self.admitted_per_shard.items())}
+        return s
 
     # -- policy ---------------------------------------------------------
     def schedule(self, ctx: SchedulerContext) -> None:

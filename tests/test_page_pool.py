@@ -1,8 +1,11 @@
 """PagePool invariants: alloc/free conservation, refcounted sharing
-(the CoW prompt-page mechanism), and misuse detection."""
+(the CoW prompt-page mechanism), misuse detection, sharded subpools
+(mesh-parallel serving), and the min-tick-heap prefix eviction."""
+import numpy as np
 import pytest
 
-from repro.serving.page_pool import PagePool, PagePoolError
+from repro.serving.page_pool import (PagePool, PagePoolError,
+                                     prefix_page_keys)
 
 
 def test_alloc_free_conservation():
@@ -76,3 +79,146 @@ def test_max_in_use_high_water():
     pool.alloc(2)
     assert pool.max_in_use == 6
     assert pool.live_tokens_capacity() == 2 * 16
+
+
+# ---------------------------------------------------------------------------
+# sharded subpools (mesh-parallel serving)
+# ---------------------------------------------------------------------------
+
+def test_sharded_alloc_stays_in_shard_range():
+    pool = PagePool(16, 8, num_shards=4)       # 4 pages per shard, 3 usable
+    for s in range(4):
+        pages = pool.alloc(3, shard=s)
+        assert all(pool.shard_of(p) == s for p in pages)
+        assert all(p != pool.quarantine_page(s) for p in pages)
+    pool.check()
+
+
+def test_sharded_capacity_is_shard_local():
+    """A full shard cannot borrow from another — its slots could not
+    address foreign pages locally."""
+    pool = PagePool(16, 8, num_shards=2)
+    a = pool.alloc(7, shard=0)                 # shard 0 exhausted
+    with pytest.raises(PagePoolError):
+        pool.alloc(1, shard=0)
+    assert pool.free_pages_in(1) == 7          # shard 1 untouched
+    pool.free(a[:2])
+    assert pool.free_pages_in(0) == 2          # frees route home by id
+    pool.check()
+
+
+def test_sharded_quarantine_and_reserved():
+    pool = PagePool(12, 8, num_shards=3)
+    assert [pool.quarantine_page(s) for s in range(3)] == [0, 4, 8]
+    for s in range(3):
+        with pytest.raises(PagePoolError):
+            pool.free([pool.quarantine_page(s)])
+
+
+def test_sharded_frontier_accounting_per_shard():
+    pool = PagePool(12, 8, num_shards=2)
+    f0 = pool.stage_frontier(2, shard=0)
+    f1 = pool.stage_frontier(3, shard=1)
+    pool.return_frontier(f0[1:] + f1[2:])
+    st = pool.stats()
+    assert st["shards"][0] == {"free": 4, "frontier_staged": 2,
+                               "frontier_returned": 1}
+    assert st["shards"][1] == {"free": 3, "frontier_staged": 3,
+                               "frontier_returned": 1}
+    pool.free([f0[0]] + f1[:2])
+    pool.check()
+    assert pool.in_use == 0
+
+
+def test_sharded_indivisible_raises():
+    with pytest.raises(PagePoolError):
+        PagePool(10, 8, num_shards=4)
+
+
+# ---------------------------------------------------------------------------
+# min-tick-heap prefix eviction (lazy deletion)
+# ---------------------------------------------------------------------------
+
+def _chain(pool, tokens, ps):
+    keys = prefix_page_keys(tokens, ps)
+    pages = pool.alloc(len(keys))
+    pool.prefix.insert(keys, pages)
+    pool.free(pages)                           # cache-only
+    return keys, pages
+
+
+def test_heap_evicts_lru_chain_deep_end_first():
+    """The heap must reproduce the scan's order: least-recently-used
+    chain first, leaf before parent (prefix-closure)."""
+    pool = PagePool(17, 4, prefix_cache=True)
+    ka, pa = _chain(pool, np.arange(2, 10), 4)     # older chain: 2 pages
+    kb, pb = _chain(pool, np.arange(20, 28), 4)    # newer chain: 2 pages
+    assert pool.prefix.evict(2) == 2
+    # chain a evicted entirely (leaf then parent), chain b untouched
+    assert set(pool.prefix._nodes) == set(kb)
+    assert pool.prefix.evict(10) == 2              # drains b as well
+    assert pool.in_use == 0
+    pool.check()
+
+
+def test_heap_touch_refreshes_victim_order():
+    pool = PagePool(17, 4, prefix_cache=True)
+    ka, _ = _chain(pool, np.arange(2, 10), 4)
+    kb, _ = _chain(pool, np.arange(20, 28), 4)
+    held = pool.prefix.match_and_hold(ka)          # touch a (now newest)
+    pool.free(held)
+    pool.prefix.evict(2)
+    assert set(pool.prefix._nodes) == set(ka)      # b went first
+    pool.check()
+
+
+def test_heap_skips_held_pages_without_losing_them():
+    """Entries popped while a request still holds their page must be
+    re-pushed, not dropped — they become evictable again later."""
+    pool = PagePool(9, 4, prefix_cache=True)
+    ka, _ = _chain(pool, np.arange(2, 10), 4)
+    held = pool.prefix.match_and_hold(ka)          # request hold pins both
+    assert pool.prefix.evict(2) == 0
+    assert set(pool.prefix._nodes) == set(ka)
+    pool.free(held)
+    assert pool.prefix.evict(2) == 2               # stash was re-pushed
+    assert pool.in_use == 0
+    pool.check()
+
+
+def test_heap_compaction_bounds_memory():
+    """Lazy deletion must not grow the heaps with total probes: heavy
+    touch traffic on a pressure-free pool stays bounded by live nodes,
+    and eviction still works after compaction."""
+    for shards in (1, 2):
+        pool = PagePool(16 if shards == 2 else 17, 4, prefix_cache=True,
+                        num_shards=shards)
+        keys = prefix_page_keys(np.arange(2, 14), 4)       # 3 full pages
+        pages = pool.alloc(3, 0)
+        pool.prefix.insert(keys, pages)
+        pool.free(pages)
+        for _ in range(5000):
+            pool.free(pool.prefix.match_and_hold(keys))
+        assert len(pool.prefix._heap) <= 64 + 4 * 3
+        for h in pool.prefix._heap_sh:
+            assert len(h) <= 64 + 4 * 3
+        assert pool.prefix.evict(3) == 3
+        pool.check()
+        assert pool.in_use == 0
+
+
+def test_sharded_eviction_filter():
+    """evict(shard=) only takes pages of that shard's id range."""
+    pool = PagePool(16, 4, num_shards=2, prefix_cache=True)
+    ka = prefix_page_keys(np.arange(2, 10), 4)
+    pa = pool.alloc(2, shard=0)
+    pool.prefix.insert(ka, pa)
+    pool.free(pa)
+    kb = prefix_page_keys(np.arange(20, 28), 4)
+    pb = pool.alloc(2, shard=1)
+    pool.prefix.insert(kb, pb)
+    pool.free(pb)
+    assert pool.evictable(0) == 2 and pool.evictable(1) == 2
+    assert pool.prefix.evict(4, shard=1) == 2      # only shard 1's pages
+    assert set(pool.prefix._nodes) == set(ka)
+    pool.check()

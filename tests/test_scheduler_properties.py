@@ -12,6 +12,10 @@ Invariants pinned (the issue's acceptance bar):
   * the global token budget is NEVER exceeded, under any traffic
   * aging — every submitted request is eventually admitted (coverage
     policy never starves queued work), given a fundable budget
+  * sharded serving — with slots and page subpools partitioned across
+    data shards (mesh-parallel serving), per-shard slot/page/frontier
+    conservation holds, no shard is ever overdrawn, and the global
+    budget invariant survives shard-local affordability
 """
 import numpy as np
 import pytest
@@ -226,6 +230,121 @@ def test_coverage_declines_zero_gain_rounds():
 
 
 # ---------------------------------------------------------------------------
+# Sharded serving: per-shard slot + page accounting (mesh-parallel)
+# ---------------------------------------------------------------------------
+
+class ShardedFakeEngine(FakeEngine):
+    """FakeEngine with the sharded engine's placement rules: slots
+    partition contiguously across ``num_shards`` data shards, admission
+    fills free slots in ascending order, and every candidate must be
+    funded with ``per_cand`` pages from its own slot's shard — the same
+    walk ``ServeEngine._paged_affordable`` performs."""
+
+    def __init__(self, rng, *, num_shards, pages_per_shard, per_cand,
+                 slots, **kw):
+        super().__init__(rng, slots=slots, **kw)
+        assert slots % num_shards == 0
+        self.num_shards = num_shards
+        self.sps = slots // num_shards
+        self.pages_per_shard = pages_per_shard
+        self.page_free = [pages_per_shard] * num_shards
+        self.per_cand = per_cand
+        self.free_ids = list(range(slots))
+
+    def shard_of(self, slot):
+        return slot // self.sps
+
+    def affordable(self, uid, want, limit):
+        avail = list(self.page_free)
+        take = 0
+        for slot in sorted(self.free_ids)[:want]:
+            sh = self.shard_of(slot)
+            if avail[sh] < self.per_cand:
+                break
+            avail[sh] -= self.per_cand
+            take += 1
+        return take
+
+    def _spawn(self, uid, take, limit):
+        assert take >= 1 and take <= self.free, (take, self.free)
+        assert 1 <= limit <= self.max_new
+        self.admitted.extend([uid] * take)
+        self.first_admit.add(uid)
+        self.free_ids.sort()
+        for _ in range(take):
+            slot = self.free_ids.pop(0)        # ascending, like the engine
+            sh = self.shard_of(slot)
+            self.page_free[sh] -= self.per_cand
+            assert self.page_free[sh] >= 0, "shard page overdraft"
+            n = int(self.rng.integers(1, limit + 1))
+            self.live.append([uid, int(self.rng.integers(1, 4)), limit, n,
+                              slot])
+        self.free = len(self.free_ids)
+
+    def tick(self, sched):
+        done_uids = set()
+        still = []
+        for cand in self.live:
+            cand[1] -= 1
+            if cand[1] <= 0:
+                uid, _, limit, n, slot = cand
+                self.free_ids.append(slot)
+                sh = self.shard_of(slot)
+                self.page_free[sh] += self.per_cand
+                assert self.page_free[sh] <= self.pages_per_shard, \
+                    "shard page over-release"
+                self.tokens_emitted += n
+                sched.on_finish(uid, n, limit)
+                done_uids.add(uid)
+            else:
+                still.append(cand)
+        self.live = still
+        self.free = len(self.free_ids)
+        for uid in done_uids:
+            if any(c[0] == uid for c in self.live):
+                continue
+            self.rounds_left[uid] -= 1
+            if self.rounds_left[uid] > 0:
+                self.pending[uid] = RoundWork(
+                    uid=uid, arrival=uid, want=2,
+                    rounds=1, p_star=float(self.rng.uniform(0, 1)),
+                    delta=0.05, best_score=1.0,
+                    scores=[float(self.rng.normal()) for _ in range(3)],
+                    mean_len=float(self.max_new))
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10**6), num_shards=st.sampled_from([2, 4]),
+       sps=st.integers(1, 3), n_reqs=st.integers(1, 10),
+       want=st.integers(1, 4), pages=st.integers(2, 10),
+       policy=st.sampled_from(["fifo", "coverage"]),
+       budget=st.sampled_from([0, 40]))
+def test_sharded_slot_page_conservation_and_budget(seed, num_shards, sps,
+                                                   n_reqs, want, pages,
+                                                   policy, budget):
+    """Per-shard slot + page conservation under arbitrary traffic and
+    shard-local affordability: no shard overdraft, free lists drain back
+    to capacity, the global budget holds, and (when everything is
+    fundable) nobody starves."""
+    rng = np.random.default_rng(seed)
+    eng = ShardedFakeEngine(
+        rng, num_shards=num_shards, slots=num_shards * sps,
+        pages_per_shard=pages, per_cand=2, max_new=6, n_reqs=n_reqs,
+        rounds_per_req=rng.integers(1, 3, n_reqs), want=want)
+    sched = make_scheduler(policy, global_budget=budget)
+    _run_stream(sched, eng)
+    assert sorted(eng.free_ids) == sorted(
+        s for s in range(eng.slots)
+        if s not in [c[4] for c in eng.live])
+    if budget:
+        assert eng.tokens_emitted <= budget
+    else:
+        assert eng.drained()
+        assert eng.page_free == [pages] * num_shards
+        assert eng.first_admit == set(range(n_reqs))
+
+
+# ---------------------------------------------------------------------------
 # PagePool + prefix cache conservation under random op streams
 # ---------------------------------------------------------------------------
 
@@ -270,6 +389,63 @@ def test_pool_conservation_random_ops(seed, num_pages, steps):
         pool.check()
     assert pool.stats()["frontier_staged"] == \
         kept + len(staged) + pool.stats()["frontier_returned"]
+    for p in held + staged:
+        pool.free([p])
+    pool.check()
+    assert pool.in_use == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10**6), num_shards=st.sampled_from([2, 4]),
+       steps=st.integers(1, 60))
+def test_sharded_pool_conservation_random_ops(seed, num_shards, steps):
+    """Random shard-routed alloc/free/stage/return streams: ``check()``
+    holds after every op (free lists never hold foreign pages), frontier
+    accounting balances PER SHARD, and capacity is shard-local (an
+    exhausted shard raises even while others have pages)."""
+    rng = np.random.default_rng(seed)
+    per_shard = int(rng.integers(3, 8))
+    pool = PagePool(num_shards * per_shard, 8, num_shards=num_shards)
+    held, staged, kept = [], [], np.zeros(num_shards, np.int64)
+    for _ in range(steps):
+        op = rng.integers(0, 4)
+        sh = int(rng.integers(0, num_shards))
+        try:
+            if op == 0:
+                pages = pool.alloc(int(rng.integers(1, 3)), sh)
+                assert all(pool.shard_of(p) == sh for p in pages)
+                held += pages
+            elif op == 1 and held:
+                pool.free([held.pop(int(rng.integers(0, len(held))))])
+            elif op == 2:
+                staged += pool.stage_frontier(int(rng.integers(1, 3)), sh)
+            elif op == 3 and staged:
+                page = staged.pop(int(rng.integers(0, len(staged))))
+                if rng.integers(0, 2):
+                    pool.return_frontier([page])
+                else:
+                    held.append(page)
+                    kept[pool.shard_of(page)] += 1
+        except PagePoolError:
+            pass                       # shard exhaustion is allowed to fail
+        pool.check()
+    stats = pool.stats()
+    for s in range(num_shards):
+        staged_s = sum(1 for p in staged if pool.shard_of(p) == s)
+        assert stats["shards"][s]["frontier_staged"] == \
+            int(kept[s]) + staged_s + stats["shards"][s]["frontier_returned"]
+    # shard isolation: drain one shard completely, it raises while a
+    # sibling still allocates
+    full = pool.alloc(pool.free_pages_in(0), 0)
+    try:
+        with pytest.raises(PagePoolError):
+            pool.alloc(1, 0)
+        if any(pool.free_pages_in(s) for s in range(1, num_shards)):
+            nxt = next(s for s in range(1, num_shards)
+                       if pool.free_pages_in(s))
+            pool.free(pool.alloc(1, nxt))
+    finally:
+        pool.free(full)
     for p in held + staged:
         pool.free([p])
     pool.check()

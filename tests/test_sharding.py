@@ -92,6 +92,49 @@ def test_multipod_dp_axes():
     assert specs["super"][0]["moe"]["w_gate"][1] == ("pod", "data")
 
 
+def test_serve_cache_specs_paged_pool():
+    """Serving cache rules: paged pools shard on the PAGE axis over the
+    data shards, block tables / pos on the decode batch; a serving mesh
+    without a 'model' axis replicates head dims instead of raising."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    model = build_model(cfg)
+    cache = jax.eval_shape(
+        lambda: model.make_paged_cache(8, 128, np.float32, page_size=16,
+                                       num_pages=64))
+    specs = shd.cache_specs(cfg, cache, MESH1)
+    kp = specs["super"][0]["k_pages"]           # (n_super, P, ps, Hkv, hd)
+    assert kp[1] in ("data", ("data",)) and kp[0] is None
+    # batch 8 % data 16 != 0: block table / pos fall back to replicated
+    assert specs["block_table"] == P(None, None)
+    # 4-wide serving mesh (no 'model' axis — must replicate, not raise):
+    # page axis AND decode-batch leaves shard on data
+    serve_mesh = _FakeMesh({"data": 4})
+    specs_dp = shd.cache_specs(cfg, cache, serve_mesh)
+    assert specs_dp["super"][0]["k_pages"][1] in ("data", ("data",))
+    assert specs_dp["block_table"][0] in ("data", ("data",))
+    assert specs_dp["pos"][0] in ("data", ("data",))
+
+
+def test_engine_state_specs_batch_sharding():
+    """Every non-cache EngineState leaf shards on its leading (slot)
+    dim; indivisible batch replicates."""
+    import collections
+    St = collections.namedtuple("St", ["cache", "last_token", "bias"])
+    cache = {"pos": jax.ShapeDtypeStruct((8,), np.int32)}
+    st = St(cache=cache,
+            last_token=jax.ShapeDtypeStruct((8,), np.int32),
+            bias=jax.ShapeDtypeStruct((8, 64), np.float32))
+    mesh = _FakeMesh({"data": 4, "model": 1})
+    cfg = get_config("qwen3-0.6b").reduced()
+    specs = shd.engine_state_specs(cfg, st, mesh)
+    assert specs.last_token[0] in ("data", ("data",))
+    assert specs.bias == P("data", None) or \
+        specs.bias[0] in ("data", ("data",))
+    # 8 slots don't divide a 3-shard mesh: replicate, don't raise
+    specs3 = shd.engine_state_specs(cfg, st, _FakeMesh({"data": 3}))
+    assert specs3.last_token == P(None)
+
+
 def test_batch_specs():
     shape = INPUT_SHAPES["train_4k"]
     batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), np.int32),
