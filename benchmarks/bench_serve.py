@@ -13,6 +13,12 @@ Grid: macro-step K ∈ {0 (per-token loop), 1, 8, 32} × impl ∈ {xla, paged}
 first-run allocation on a throwaway request batch), then times a fresh
 request batch on the same engine so compiled functions are reused.
 
+The **speculative scenario** decodes a shared-prefix greedy workload
+with the n-gram draft + block-verify loop on (``spec_k=4``) and off on
+a deep-cache model, asserting byte-identical streams and recording the
+decode-throughput speedup (gated at 1.5x by ``check_regression``) in a
+``speculative`` section.
+
 The **scheduler scenario** trains a small LM on the arithmetic-chain
 oracle task, builds heavy-tailed traffic (Pareto-distributed chain
 difficulty — many easy, few hard — over a shared page-aligned prompt
@@ -70,7 +76,7 @@ def _submit(eng, cfg, n, uid0=0, seed=0, plen=12):
 
 
 def _run_cell(cfg, model, params, *, impl, mode, macro_steps, requests,
-              max_new):
+              max_new, reps=3):
     eng = ServeEngine(
         model, params, slots=8, cache_len=128,
         sampling=SamplingConfig(max_new_tokens=max_new, temperature=0.8),
@@ -86,24 +92,135 @@ def _run_cell(cfg, model, params, *, impl, mode, macro_steps, requests,
     # shape-specialized — a mismatch would put recompiles on the clock)
     _submit(eng, cfg, requests, uid0=10_000, seed=1)
     eng.run()
-    eng.total_steps = eng.total_tokens = 0
-    eng.macro_launches = eng.host_syncs = 0
-    _submit(eng, cfg, requests, uid0=0, seed=2)
-    t0 = time.perf_counter()
-    eng.run()
-    wall = time.perf_counter() - t0
+    # best-of-reps: shared CI containers jitter wall clock by integer
+    # factors between consecutive identical runs, so a single timed batch
+    # regularly mis-ranks cells (the committed baseline once recorded the
+    # paged macro-step loop "slower" than the per-token loop this way).
+    # The max rate over identical-prompt batches is the stable statistic.
+    best_rate, min_wall = 0.0, float("inf")
+    for rep in range(reps):
+        eng.total_steps = eng.total_tokens = 0
+        eng.macro_launches = eng.host_syncs = 0
+        _submit(eng, cfg, requests, uid0=1000 * (rep + 1), seed=2)
+        t0 = time.perf_counter()
+        eng.run()
+        wall = time.perf_counter() - t0
+        best_rate = max(best_rate, eng.total_tokens / max(wall, 1e-9))
+        min_wall = min(min_wall, wall)
     return {
         "impl": impl,
         "mode": mode,
         "macro_steps": macro_steps,
-        "wall_s": wall,
+        "reps": reps,
+        "wall_s": min_wall,
         "tokens": eng.total_tokens,
         "device_steps": eng.total_steps,
-        "tokens_per_s": eng.total_tokens / max(wall, 1e-9),
+        "tokens_per_s": best_rate,
         "host_syncs": eng.host_syncs,
         "syncs_per_token": eng.host_syncs / max(eng.total_tokens, 1),
         "macro_launches": eng.macro_launches,
     }
+
+
+# ---------------------------------------------------------------------------
+# Speculative scenario: n-gram draft + block verify vs sequential greedy
+# ---------------------------------------------------------------------------
+
+def _spec_model():
+    """Small deep-cache model for the speculative scenario: decode cost
+    is attention/KV-dominated, the regime speculation amortizes (the
+    block verify reads the KV cache once per ~spec_k tokens instead of
+    once per token)."""
+    cfg = ModelConfig(
+        name="bench-spec-lm", family="dense", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=2, d_ff=384, vocab_size=256,
+        head_dim=32, tie_embeddings=True, dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _run_spec_cell(model, params, *, impl, spec_k, requests, max_new,
+                   cache_len, reps):
+    """One speculative cell: greedy decode of a shared repetitive prompt.
+
+    Greedy streams must be byte-identical spec on/off, so top-p /
+    repetition-penalty are disabled — greedy emits the raw argmax and
+    the nucleus sort would only burn time in both engines without
+    touching the output."""
+    eng = ServeEngine(
+        model, params, slots=8, cache_len=cache_len,
+        sampling=SamplingConfig(max_new_tokens=max_new, temperature=0.0,
+                                top_p=1.0, repetition_penalty=1.0),
+        mode="greedy", n_candidates=1, max_new_tokens=max_new, eos_id=1,
+        impl=impl, paged_kv=PagedKVConfig(page_size=16),
+        macro_steps=8, spec_k=spec_k, seed=0)
+
+    def submit(uid0):
+        # shared-prefix workload: every request decodes the same
+        # repeated-token prompt (n-gram fuel from position 0)
+        for i in range(requests):
+            eng.submit(Request(uid=uid0 + i,
+                               prompt=np.full(12, 7, np.int32)))
+
+    submit(10_000)
+    eng.run()                                  # warmup / compile
+    best_rate, min_wall, streams = 0.0, float("inf"), None
+    for rep in range(reps):
+        eng.total_steps = eng.total_tokens = 0
+        eng.spec_drafted = eng.spec_accepted = 0
+        submit(1000 * (rep + 1))
+        t0 = time.perf_counter()
+        res = eng.run()
+        wall = time.perf_counter() - t0
+        best_rate = max(best_rate, eng.total_tokens / max(wall, 1e-9))
+        min_wall = min(min_wall, wall)
+        if rep == 0:
+            streams = [[int(t) for t in r.tokens]
+                       for r in sorted(res, key=lambda r: r.uid)]
+    row = {
+        "impl": impl,
+        "spec_k": spec_k,
+        "wall_s": min_wall,
+        "tokens": eng.total_tokens,
+        "device_steps": eng.total_steps,
+        "tokens_per_s": best_rate,
+        "drafted": eng.spec_drafted,
+        "accepted": eng.spec_accepted,
+        "acceptance": eng.spec_accepted / max(eng.spec_drafted, 1),
+    }
+    return row, streams
+
+
+def run_speculative_scenario(smoke: bool = False) -> dict:
+    """Greedy decode with the n-gram draft + block verify loop on vs
+    off: streams must be byte-identical; decode throughput should gain
+    >= 1.5x on the shared-prefix workload (gated by check_regression)."""
+    cfg, model, params = _spec_model()
+    del cfg
+    requests = 6
+    max_new, cache_len, reps = (240, 384, 2) if smoke else (360, 512, 3)
+    rows, headline = [], {"equal_outputs": True}
+    for impl in ["xla", "paged"]:
+        base_row, base_streams = _run_spec_cell(
+            model, params, impl=impl, spec_k=0, requests=requests,
+            max_new=max_new, cache_len=cache_len, reps=reps)
+        spec_row, spec_streams = _run_spec_cell(
+            model, params, impl=impl, spec_k=4, requests=requests,
+            max_new=max_new, cache_len=cache_len, reps=reps)
+        same = base_streams == spec_streams
+        headline["equal_outputs"] &= same
+        speedup = spec_row["tokens_per_s"] / max(base_row["tokens_per_s"],
+                                                 1e-9)
+        headline[f"speedup_{impl}"] = speedup
+        headline[f"acceptance_{impl}"] = spec_row["acceptance"]
+        rows += [base_row, spec_row]
+        print(f"spec   {impl:6s} k=4: {base_row['tokens_per_s']:8.1f} -> "
+              f"{spec_row['tokens_per_s']:8.1f} tok/s ({speedup:.2f}x), "
+              f"accept {spec_row['acceptance']:.0%}, "
+              f"streams {'identical' if same else 'DIVERGED'}")
+    return {"requests": requests, "max_new": max_new,
+            "cache_len": cache_len, "rows": rows, "headline": headline}
 
 
 # ---------------------------------------------------------------------------
@@ -341,6 +458,7 @@ def run(smoke: bool = False) -> dict:
                     base["syncs_per_token"] / max(best["syncs_per_token"],
                                                   1e-9),
             }
+    speculative = run_speculative_scenario(smoke)
     scheduler = run_scheduler_scenario(smoke)
     sharded = run_sharded_scenario(smoke)
     out = {"config": {"smoke": smoke, "requests": requests,
@@ -348,6 +466,7 @@ def run(smoke: bool = False) -> dict:
                       "backend": jax.default_backend(),
                       "jax_version": jax.__version__},
            "rows": rows, "speedups": speedups,
+           "speculative": speculative,
            "scheduler": scheduler, "sharded": sharded}
     with open("BENCH_serve.json", "w") as f:
         json.dump(out, f, indent=2)
@@ -360,6 +479,14 @@ def run(smoke: bool = False) -> dict:
         assert min(f["syncs_per_token"] for f in fused) < \
             min(l["syncs_per_token"] for l in legacy), \
             "macro-step loop did not reduce host syncs per token"
+        # speculation must not change greedy output, and must actually
+        # pay for its verify width on the shared-prefix workload
+        sh = speculative["headline"]
+        assert sh["equal_outputs"], "speculative greedy streams diverged"
+        for impl in ("xla", "paged"):
+            assert sh[f"speedup_{impl}"] >= 1.5, \
+                f"speculative speedup below 1.5x on {impl}: " \
+                f"{sh[f'speedup_{impl}']:.2f}"
         # ... and at equal budget, coverage-aware traffic scheduling must
         # match-or-beat fifo on quality (one request of sampling slack —
         # the trained-LM comparison is stochastic and CI's jax is

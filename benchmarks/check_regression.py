@@ -10,6 +10,14 @@ against the committed ``BENCH_baseline.json`` and exits non-zero when:
     faster; a drop past the tolerance means a real hot-path regression;
   * the fused macro-step loop stops amortizing host syncs
     (``syncs_per_token`` is deterministic, so this is exact);
+  * the paged macro-step loop stops beating its own per-token loop
+    (the ``speedups`` section's paged rows must have ``best_k > 0`` —
+    a fused loop that loses to the legacy loop is a fusion regression,
+    however fast the legacy loop is);
+  * the speculative scenario's greedy streams diverge between spec-on
+    and spec-off, or its decode speedup falls below 1.5x on either
+    impl (the speedup is a within-run ratio, so it is gated even when
+    a jax version skew disables the absolute-throughput checks);
   * the scheduler scenario's coverage-vs-fifo win disappears: at equal
     budget, coverage must match-or-beat fifo accuracy (one request of
     sampling slack, as the bench asserts) while spending strictly fewer
@@ -43,6 +51,10 @@ def check(cur: dict, base: dict, *, tol: float,
     # generation — the matrix's floor lane matches the baseline's
     # recorded version, the latest-jax lane keeps the deterministic
     # gates (syncs, scheduler win, sharded identity) only
+    # an explicit --skip-throughput (oversubscribed forced-multi-device
+    # lane) also drops within-run wall-clock ratios; a jax version skew
+    # only drops cross-run absolute comparisons
+    skip_ratios = skip_throughput
     cur_v = cur.get("config", {}).get("jax_version")
     base_v = base.get("config", {}).get("jax_version")
     if not skip_throughput and cur_v != base_v:
@@ -68,6 +80,35 @@ def check(cur: dict, base: dict, *, tol: float,
                 f"host-sync regression in {key}: "
                 f"{c['syncs_per_token']:.4f} syncs/token vs baseline "
                 f"{b['syncs_per_token']:.4f}")
+
+    # the fused macro-step loop must win over the per-token loop on the
+    # paged path: best_k == 0 means the refactor's core claim regressed
+    for name, sp in sorted(cur.get("speedups", {}).items()):
+        if skip_ratios:
+            break
+        if name.startswith("paged/") and sp.get("best_k", 0) == 0:
+            errors.append(
+                f"paged macro-step loop lost to the per-token loop in "
+                f"{name}: best_k == 0 "
+                f"({sp['tokens_per_s_best']:.1f} tok/s fused-best vs "
+                f"{sp['tokens_per_s_legacy']:.1f} legacy)")
+
+    spec = cur.get("speculative", {})
+    spec_head = spec.get("headline")
+    if spec_head is None:
+        errors.append("speculative section missing from current report")
+    else:
+        if not spec_head.get("equal_outputs", False):
+            errors.append("speculative greedy streams diverged from "
+                          "spec-off streams")
+        for impl in ("xla", "paged"):
+            s = spec_head.get(f"speedup_{impl}")
+            if s is None:
+                errors.append(f"speculative section has no {impl} row")
+            elif not skip_ratios and s < 1.5:
+                errors.append(
+                    f"speculative decode speedup below 1.5x on {impl}: "
+                    f"{s:.2f}x")
 
     sched = cur.get("scheduler", {})
     head = sched.get("headline")

@@ -36,6 +36,17 @@ def main():
     ap.add_argument("--macro-steps", type=int, default=8,
                     help="device decode steps per lax.while_loop launch; "
                          "0 = legacy per-token host loop")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative block length: draft up to K-1 "
+                         "tokens per slot from the n-gram table and "
+                         "verify them in one target forward (0/1 = off; "
+                         "requires --macro-steps >= 1 and an "
+                         "all-attention decoder)")
+    ap.add_argument("--spec-mode", default="coverage",
+                    choices=["coverage", "fixed"],
+                    help="coverage: per-slot draft length shrinks toward "
+                         "1 as the request's posterior coverage deficit "
+                         "closes; fixed: always draft spec-k - 1 tokens")
     ap.add_argument("--sched-policy", default="fifo",
                     choices=["fifo", "coverage"],
                     help="traffic policy: fifo (arrival order) or coverage "
@@ -98,6 +109,8 @@ def main():
         global_budget=args.global_budget,
         prefix_cache=args.prefix_cache,
         mesh=mesh,
+        spec_k=args.spec_k,
+        spec_mode=args.spec_mode,
         seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -117,6 +130,10 @@ def main():
     print(f"macro-step: K={eng.macro_steps}, {eng.macro_launches} launches, "
           f"{eng.host_syncs} host syncs "
           f"({eng.host_syncs / max(eng.total_tokens, 1):.3f} per token)")
+    if eng.spec:
+        print(f"speculative: K={eng.spec_k} ({eng.spec_mode}), "
+              f"{eng.spec_drafted} drafted, {eng.spec_accepted} accepted "
+              f"({eng.spec_accepted / max(eng.spec_drafted, 1):.0%})")
     ss = eng.sched_stats()
     print(f"scheduler: {ss['policy']} admitted={ss['admitted_candidates']} "
           f"spent={ss['spent']}/{ss['global_budget'] or 'inf'} "

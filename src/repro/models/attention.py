@@ -75,7 +75,9 @@ def sdpa(q, k, v, *, causal: bool, window: int = 0,
     a measured 2.15 GB/layer/token all-gather on qwen3 decode_32k).
 
     ``q_offset``: absolute position of q[0] relative to k[0] (for decode /
-    chunked prefill). ``kv_mask``: optional (B, Lk) validity mask.
+    chunked prefill). ``kv_mask``: optional key-validity mask — (B, Lk)
+    shared across queries, or (B, Lq, Lk) per-query (speculative block
+    verification, where query i may attend a different prefix).
     Scans over query chunks so the Lq×Lk score matrix never materializes
     for long sequences.
     """
@@ -103,7 +105,12 @@ def sdpa(q, k, v, *, causal: bool, window: int = 0,
             mask &= rel < window
         scores = jnp.where(mask[None, None, None], scores, NEG_INF)
         if kv_mask is not None:
-            scores = jnp.where(kv_mask[:, None, None, None, :], scores, NEG_INF)
+            if kv_mask.ndim == 3:
+                m = jax.lax.dynamic_slice_in_dim(kv_mask, pos0, C, axis=1)
+                scores = jnp.where(m[:, None, None], scores, NEG_INF)
+            else:
+                scores = jnp.where(kv_mask[:, None, None, None, :], scores,
+                                   NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)                # (B,Hkv,G,C,Lk)
         out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
                          preferred_element_type=jnp.float32)
@@ -203,11 +210,13 @@ def make_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
     }
 
 
-def cache_write(cache, k_new, v_new, pos):
+def cache_write(cache, k_new, v_new, pos, valid=None):
     """Ring-buffer write of one token at absolute position ``pos``.
 
     k_new/v_new: (B, 1, Hkv, hd); pos: (B,) int32 per-row positions
     (continuous batching — each slot may be at a different depth).
+    ``valid``: optional (B,) bool — rows with valid=False write nothing
+    (speculative block positions past a slot's token limit).
 
     Implemented as an iota-compare SELECT over the sequence dim rather
     than a scatter: a per-row scatter into a context-parallel (S-sharded)
@@ -219,10 +228,39 @@ def cache_write(cache, k_new, v_new, pos):
     B, S = cache["k"].shape[:2]
     idx = jnp.mod(pos, S)                                  # (B,)
     hit = jnp.arange(S)[None, :] == idx[:, None]           # (B, S)
+    if valid is not None:
+        hit &= valid[:, None]
     m = hit[:, :, None, None]
     k = jnp.where(m, k_new, cache["k"])
     v = jnp.where(m, v_new, cache["v"])
     return {"k": k, "v": v}
+
+
+def cache_write_block(cache, k_new, v_new, pos, valid=None):
+    """Ring-buffer write of S consecutive tokens in ONE select.
+
+    k_new/v_new: (B, S, Hkv, hd) for absolute positions pos..pos+S-1.
+    A Python loop of S ``cache_write`` calls materializes S full-cache
+    intermediates inside a jitted loop body; writing the block at once
+    keeps it to one. Same select-not-scatter rationale as
+    ``cache_write`` (context-parallel shards update locally), and the
+    written values are bit-identical to the sequential loop — each ring
+    slot takes its value straight from ``k_new``.
+    """
+    B, Sc = cache["k"].shape[:2]
+    S = k_new.shape[1]
+    slot = jnp.arange(Sc)[None, :]
+    # which block offset (if any) lands on this ring slot
+    s_idx = jnp.mod(slot - pos[:, None], Sc)               # (B, Sc)
+    hit = s_idx < S
+    gidx = jnp.clip(s_idx, 0, S - 1)
+    if valid is not None:
+        hit &= jnp.take_along_axis(valid, gidx, axis=1)
+    ks = jnp.take_along_axis(k_new, gidx[:, :, None, None], axis=1)
+    vs = jnp.take_along_axis(v_new, gidx[:, :, None, None], axis=1)
+    m = hit[:, :, None, None]
+    return {"k": jnp.where(m, ks, cache["k"]),
+            "v": jnp.where(m, vs, cache["v"])}
 
 
 def paged_pool_page_axis(ndim: int) -> int:
@@ -261,7 +299,7 @@ def make_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
     }
 
 
-def paged_cache_write(cache, k_new, v_new, pos, block_table):
+def paged_cache_write(cache, k_new, v_new, pos, block_table, valid=None):
     """Write one token into the page pool through the block table.
 
     k_new/v_new: (B, 1, Hkv, hd); pos: (B,) absolute positions;
@@ -277,18 +315,51 @@ def paged_cache_write(cache, k_new, v_new, pos, block_table):
     sharded ``PagePool`` guarantees this for tail + frontier pages).
     Rows whose pos has run past the table (idle slots) clamp to the
     last logical page; their block-table row should point at their
-    shard's quarantine page.
+    shard's quarantine page. ``valid``: optional (B,) bool — rows with
+    valid=False are dropped outright (written nowhere, not even the
+    quarantine page), which is what speculative block verification
+    needs for positions past a slot's token limit.
     """
     P, ps = cache["k_pages"].shape[:2]
     n_pages = block_table.shape[1]
     logical = jnp.clip(pos // ps, 0, n_pages - 1)                  # (B,)
     page = jnp.take_along_axis(block_table, logical[:, None], axis=1)[:, 0]
     page = jnp.clip(page, 0, P - 1)
+    if valid is not None:
+        page = jnp.where(valid, page, -1)
     off = jnp.mod(pos, ps)
     k = cache["k_pages"].at[page, off].set(
         k_new[:, 0].astype(cache["k_pages"].dtype), mode="drop")
     v = cache["v_pages"].at[page, off].set(
         v_new[:, 0].astype(cache["v_pages"].dtype), mode="drop")
+    return {"k_pages": k, "v_pages": v}
+
+
+def paged_cache_write_block(cache, k_new, v_new, pos, block_table,
+                            valid=None):
+    """Write S consecutive tokens through the block table in ONE scatter.
+
+    k_new/v_new: (B, S, Hkv, hd) for absolute positions pos..pos+S-1;
+    ``valid``: optional (B, S). Block positions are distinct, so the
+    (page, offset) targets never collide and the batched scatter is
+    bit-identical to S sequential ``paged_cache_write`` calls — without
+    S full-pool intermediates inside the decode loop body. Sharding
+    story is unchanged (same per-row scatter, page-axis sharded pool).
+    """
+    P, ps = cache["k_pages"].shape[:2]
+    n_pages = block_table.shape[1]
+    S = k_new.shape[1]
+    p = pos[:, None] + jnp.arange(S, dtype=pos.dtype)[None, :]   # (B, S)
+    logical = jnp.clip(p // ps, 0, n_pages - 1)
+    page = jnp.take_along_axis(block_table, logical, axis=1)
+    page = jnp.clip(page, 0, P - 1)
+    if valid is not None:
+        page = jnp.where(valid, page, -1)
+    off = jnp.mod(p, ps)
+    k = cache["k_pages"].at[page, off].set(
+        k_new.astype(cache["k_pages"].dtype), mode="drop")
+    v = cache["v_pages"].at[page, off].set(
+        v_new.astype(cache["v_pages"].dtype), mode="drop")
     return {"k_pages": k, "v_pages": v}
 
 
@@ -368,6 +439,54 @@ def attn_decode(params, cfg: ModelConfig, x, cache, pos, *, window: int = 0,
     else:
         out = sdpa(q, cache["k"], cache["v"], causal=False, kv_mask=kv_mask)
     return dense(params["wo"], out.reshape(B, 1, -1)), cache
+
+
+def attn_decode_block(params, cfg: ModelConfig, x, cache, pos, *,
+                      impl: str = "xla", block_table=None, valid=None):
+    """Score a short block of S tokens against the cache (speculative
+    verification).
+
+    x: (B, S, d) — block token i sits at absolute position ``pos + i``
+    (pos: (B,) int32, per-row). ``valid``: optional (B, S) — invalid
+    positions' KV writes are dropped entirely and their outputs are
+    garbage the caller must ignore (drafted positions past a slot's
+    token limit). Returns (out (B, S, d), new_cache); ``cache["pos"]``
+    bookkeeping is the caller's job (the engine commits only the
+    accepted prefix).
+
+    Full attention only (window == 0): per-query masks reproduce the
+    single-token decode masks exactly — query i sees absolute positions
+    <= pos + i — so on-path logits are bit-comparable to S sequential
+    ``attn_decode`` calls. Always runs the XLA ``sdpa``: like the
+    prefix-cache suffix prefill, the flash kernels are single-query and
+    verification numerics are impl-independent.
+    """
+    B, S, _ = x.shape
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    if valid is None:
+        valid = jnp.ones((B, S), bool)
+    if "k_pages" in cache:
+        assert block_table is not None, "paged cache needs a block table"
+        cache = paged_cache_write_block(cache, k_new, v_new, pos,
+                                        block_table, valid=valid)
+        P = cache["k_pages"].shape[0]
+        bt = jnp.clip(block_table, 0, P - 1)
+        k = cache["k_pages"][bt].reshape(B, -1, *cache["k_pages"].shape[2:])
+        v = cache["v_pages"][bt].reshape(B, -1, *cache["v_pages"].shape[2:])
+        kv_mask = jnp.arange(k.shape[1])[None, None, :] < \
+            (positions + 1)[:, :, None]                    # (B, S, Lk)
+        out = sdpa(q, k, v, causal=False, kv_mask=kv_mask)
+    else:
+        cache = cache_write_block(cache, k_new, v_new, pos, valid=valid)
+        Sc = cache["k"].shape[1]
+        slot = jnp.arange(Sc)
+        # same ring semantics as attn_decode, per query position
+        slot_pos = positions[:, :, None] - jnp.mod(
+            positions[:, :, None] - slot[None, None, :], Sc)   # (B, S, Sc)
+        kv_mask = slot_pos >= 0
+        out = sdpa(q, cache["k"], cache["v"], causal=False, kv_mask=kv_mask)
+    return dense(params["wo"], out.reshape(B, S, -1)), cache
 
 
 def prefill_into_cache(cache, k, v, lengths: Optional[int] = None):

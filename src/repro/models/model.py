@@ -122,6 +122,26 @@ class Model:
         return tf_lib.transformer_decode(params, self.cfg, token, cache,
                                          impl=impl, unroll=unroll)
 
+    def decode_block(self, params: Params, tokens, cache, valid=None, *,
+                     impl: str = "xla"):
+        """Speculative block verification: feed S tokens per row at
+        positions ``cache["pos"] + [0..S)`` and return per-position
+        next-token (logits (B,S,V), hidden (B,S,d), cache) WITHOUT
+        advancing ``cache["pos"]`` — the caller commits the accepted
+        prefix. Requires ``supports_speculative``."""
+        return tf_lib.transformer_decode_block(params, self.cfg, tokens,
+                                               cache, valid, impl=impl)
+
+    @property
+    def supports_speculative(self) -> bool:
+        """Speculative block verification rewinds rejected positions by
+        not committing them — only stateless-per-position KV layers can
+        do that (recurrent state can't be partially rolled back, and
+        windowed rings shorter than a block could alias inside it), so
+        the predicate matches the prefix cache: all-attention,
+        full-context, decoder-only."""
+        return self.supports_prefix_cache
+
     # -- dry-run specs ---------------------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for every model input of a step.

@@ -448,3 +448,63 @@ def transformer_decode(params: Params, cfg: ModelConfig, token, cache, *,
     if bt is not None:
         new_cache["block_table"] = bt
     return logits[:, 0], hidden[:, 0], new_cache
+
+
+def transformer_decode_block(params: Params, cfg: ModelConfig, tokens, cache,
+                             valid=None, *, impl: str = "xla"):
+    """Speculative block verification: feed S tokens per row at positions
+    ``cache["pos"] + [0..S)`` and return per-position next-token logits.
+
+    tokens: (B, S) int32 — token 0 is the pending last token, tokens
+    1..S-1 the drafted continuation. ``valid``: optional (B, S) — invalid
+    positions' KV writes are dropped (see ``attn_decode_block``).
+    ``cache["pos"]`` is NOT advanced: the caller commits the accepted
+    prefix length itself (speculative decoding "rewinds" rejected
+    positions by simply not advancing pos — their stale KV is overwritten
+    the next time the position is legitimately fed, before anything can
+    attend to it).
+
+    All-attention full-context decoders only (same predicate as the
+    prefix cache): recurrent layers carry state that a partial rewind
+    cannot restore, and windowed rings shorter than the block could
+    alias within it. Returns (logits (B, S, V), hidden (B, S, d),
+    new_cache).
+    """
+    assert not cfg.is_encoder_decoder and cfg.attn_window == 0 and \
+        all(k == ATTN for k in cfg.layer_kinds), \
+        "speculative block decode needs an all-attention decoder"
+    pat, n_super, tail = _pattern_split(cfg)
+    del pat, n_super, tail  # all-ATTN asserted above
+    pos = cache["pos"]
+    bt = cache.get("block_table")
+    x = embed(params["embed"], tokens)                 # (B,S,d)
+
+    def one_layer(x, p, ce):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, e = attn_lib.attn_decode_block(p["attn"], cfg, h, ce, pos,
+                                          impl=impl, block_table=bt,
+                                          valid=valid)
+        x = x + y
+        if _has_mlp(cfg, ATTN):
+            x, _ = _mlp_part(p, cfg, x)
+        return x, e
+
+    def scan_body(x, inp):
+        layer_params, entries = inp
+        new_entries = []
+        for p, ce in zip(layer_params, entries):
+            x, e = one_layer(x, p, ce)
+            new_entries.append(e)
+        return x, tuple(new_entries)
+
+    x, new_super = jax.lax.scan(scan_body, x,
+                                (params["super"], cache["super"]))
+    new_tail = []
+    for p, ce in zip(params["tail"], cache["tail"]):
+        x, e = one_layer(x, p, ce)
+        new_tail.append(e)
+    logits, hidden = _logits(params, cfg, x)
+    new_cache = {"super": new_super, "tail": tuple(new_tail), "pos": pos}
+    if bt is not None:
+        new_cache["block_table"] = bt
+    return logits, hidden, new_cache

@@ -22,10 +22,20 @@ def apply_temperature(logits, temperature: float):
 
 
 def apply_top_k(logits, k: int):
-    if k <= 0:
+    """Keep exactly the k highest logits per row, mask the rest.
+
+    ``jax.lax.top_k`` (O(V log k), no full sort) picks the survivors;
+    ties at the kth value are broken toward lower token ids, so exactly
+    k tokens survive even when the kth value is duplicated.
+    """
+    if k <= 0 or k >= logits.shape[-1]:
         return logits
-    kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
-    return jnp.where(logits < kth, NEG_INF, logits)
+    shape = logits.shape
+    flat = logits.reshape(-1, shape[-1])
+    _, idx = jax.lax.top_k(flat, k)
+    rows = jnp.arange(flat.shape[0])[:, None]
+    keep = jnp.zeros(flat.shape, bool).at[rows, idx].set(True)
+    return jnp.where(keep.reshape(shape), logits, NEG_INF)
 
 
 def apply_top_p(logits, p: float):
@@ -93,14 +103,27 @@ def sample_token_batch(keys, logits, cfg: SamplingConfig, bias=None,
     """Sample n first tokens from ONE shared logits row with n keys.
 
     keys: (n, key_dim); logits: (1, V); bias: optional (1, V); greedy:
-    optional (1,) bool. Returns (tokens (n,), logprobs (n,)). vmap over
-    the keys keeps per-key results identical to n separate
-    ``sample_token`` calls while costing a single dispatch — the serving
-    engine uses this to admit a whole round of candidates at once.
+    optional (1,) bool. Returns (tokens (n,), logprobs (n,)). Logit
+    processing is shared — it is a pure function of the (single) row, so
+    it runs once and only the categorical draw is vmapped over the keys.
+    Per-key results stay identical to n separate ``sample_token`` calls;
+    the serving engine uses this to admit a whole round of candidates at
+    once.
     """
-    tok, lp = jax.vmap(
-        lambda k: sample_token(k, logits, cfg, bias=bias, greedy=greedy)
-    )(keys)
+    proc = process_logits(logits, cfg, None, bias)
+    logp = jax.nn.log_softmax(proc, axis=-1)
+    arg = jnp.argmax(logits, axis=-1)
+
+    def draw(k):
+        sampled = jax.random.categorical(k, proc, axis=-1)
+        if greedy is None:
+            tok = sampled if cfg.temperature > 0 else arg
+        else:
+            tok = jnp.where(greedy, arg, sampled)
+        lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+        return tok.astype(jnp.int32), lp
+
+    tok, lp = jax.vmap(draw)(keys)
     return tok[:, 0], lp[:, 0]
 
 
@@ -121,3 +144,132 @@ def sample_token(key, logits, cfg: SamplingConfig, token_counts=None,
         tok = jnp.where(greedy, arg, sampled)
     lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
     return tok.astype(jnp.int32), lp
+
+
+def speculative_accept(base_key, step0, logits, draft, cfg: SamplingConfig,
+                       *, token_counts, bias, greedy, eos_id, n_tok, limit,
+                       active, greedy_static: bool = False):
+    """Accept a prefix of a drafted token block, target distribution
+    preserved (Leviathan-style rejection sampling, vectorized over B).
+
+    The target forward fed block tokens ``[d_0, d_1, .., d_{K-1}]`` where
+    ``d_0`` is the pending last token and ``d_1..d_{K-1}`` = ``draft``;
+    ``logits[:, i]`` is the target's next-token distribution after
+    ``d_i``. Position i emits one token t_{i+1}:
+
+    * greedy rows take the raw argmax and keep going iff it equals the
+      next drafted token — emitted streams are byte-identical to the
+      sequential greedy loop by construction.
+    * sampled rows accept ``d_{i+1}`` with probability p(d_{i+1}) under
+      the PROCESSED target distribution (the n-gram draft is
+      deterministic, q = delta_d, so the textbook min(1, p/q) rule
+      reduces to p), otherwise sample from the residual (p with the
+      draft token masked, renormalized). The emitted marginal is exactly
+      p — distribution-preserving, though not stream-preserving: RNG
+      consumption differs from the sequential loop.
+
+    Emission stops after the first rejection, a missing draft (d = -1),
+    EOS, or the per-slot token limit; the repetition-penalty counts fold
+    in the accepted prefix as it grows so later positions see exactly
+    the sequential processor state.
+
+    logits: (B, K, V) fp32; draft: (B, K-1) int32, -1 = no proposal.
+    Returns ``(tokens (B, K), logps (B, K), emit (B, K) bool,
+    counts (B, V), n_tok' (B,), stopped (B,))`` — ``emit[:, i]`` marks
+    positions that actually emitted; tokens past the first non-emitting
+    position are padding. ``stopped`` marks rows whose candidate hit
+    EOS / the limit inside this block.
+
+    ``greedy_static=True`` (a trace-time promise that every row is
+    greedy) takes a fully vectorized path: the greedy token is the raw
+    argmax — independent of the repetition-penalty counts — so the whole
+    accept chain collapses to a prefix scan over K positions instead of
+    K sequential copies of the processing stack. Emitted tokens and
+    logprobs are identical to the general path.
+    """
+    B, K, V = logits.shape
+    if greedy_static:
+        return _speculative_accept_greedy(logits, draft, cfg,
+                                          token_counts=token_counts,
+                                          bias=bias, eos_id=eos_id,
+                                          n_tok=n_tok, limit=limit,
+                                          active=active)
+    neg = jnp.full((B,), -1, jnp.int32)
+    alive = active
+    counts = token_counts
+    n = n_tok
+    stopped = jnp.zeros((B,), bool)
+    toks, lps, emits = [], [], []
+    for i in range(K):
+        lg = logits[:, i]
+        proc = process_logits(lg, cfg, counts, bias)
+        logp = jax.nn.log_softmax(proc, axis=-1)
+        arg = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        key = decode_step_key(base_key, step0 + i)
+        d = draft[:, i] if i < K - 1 else neg
+        has_d = d >= 0
+        d_safe = jnp.maximum(d, 0)
+        # acceptance draw + residual resample (the residual reduces to
+        # the plain processed distribution when there is no draft, which
+        # also covers the final free-sample position)
+        p = jax.nn.softmax(proc, axis=-1)
+        p_d = jnp.take_along_axis(p, d_safe[:, None], axis=-1)[:, 0]
+        u = jax.random.uniform(jax.random.fold_in(key, 1), (B,))
+        acc = has_d & (u < p_d)
+        drop_d = (jnp.arange(V)[None, :] == d_safe[:, None]) & has_d[:, None]
+        resampled = jax.random.categorical(
+            key, jnp.where(drop_d, NEG_INF, proc), axis=-1).astype(jnp.int32)
+        tok = jnp.where(greedy, arg, jnp.where(acc, d_safe, resampled))
+        tok = tok.astype(jnp.int32)
+        lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+        cont = jnp.where(greedy, has_d & (arg == d), acc)
+        emit = alive
+        n = n + emit.astype(jnp.int32)
+        stop = emit & ((tok == eos_id) | (n >= limit))
+        stopped = stopped | stop
+        alive = alive & cont & ~stop
+        counts = counts + jax.nn.one_hot(tok, V) * emit.astype(
+            jnp.float32)[:, None]
+        toks.append(tok)
+        lps.append(lp)
+        emits.append(emit)
+    return (jnp.stack(toks, axis=1), jnp.stack(lps, axis=1),
+            jnp.stack(emits, axis=1), counts, n, stopped)
+
+
+def _speculative_accept_greedy(logits, draft, cfg: SamplingConfig, *,
+                               token_counts, bias, eos_id, n_tok, limit,
+                               active):
+    """All-greedy ``speculative_accept``: one vectorized prefix scan.
+
+    Greedy emits the raw argmax at every position, so the token choices
+    are independent of the sequential count/alive chain; the chain only
+    decides WHERE emission stops, and — because emission is always a
+    prefix of the block — the position-i count state has the closed form
+    ``counts0 + exclusive-cumsum(one_hot(emitted tokens))``.
+    """
+    B, K, V = logits.shape
+    toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # (B, K)
+    # continue past position i iff the draft predicted its argmax
+    d = jnp.concatenate([draft, jnp.full((B, 1), -1, jnp.int32)], axis=1)
+    cont = (d >= 0) & (toks == d)
+    pos_i = jnp.arange(K)[None, :]
+    stop_cond = (toks == eos_id) | (n_tok[:, None] + pos_i + 1
+                                    >= limit[:, None])
+    ok = cont & ~stop_cond
+    # emit[:, i] <=> active and every position j < i continued
+    blocked = jnp.cumsum(~ok, axis=1)
+    emit = active[:, None] & jnp.concatenate(
+        [jnp.ones((B, 1), bool), blocked[:, :-1] == 0], axis=1)
+    emitf = emit.astype(jnp.float32)
+    oh = jax.nn.one_hot(toks, V) * emitf[:, :, None]            # (B, K, V)
+    pre = jnp.cumsum(oh, axis=1) - oh                           # exclusive
+    counts_i = token_counts[:, None] + pre
+    proc = process_logits(logits, cfg, counts_i,
+                          bias[:, None] if bias is not None else None)
+    logp = jax.nn.log_softmax(proc, axis=-1)
+    lps = jnp.take_along_axis(logp, toks[:, :, None], axis=-1)[:, :, 0]
+    counts = token_counts + jnp.sum(oh, axis=1)
+    n = n_tok + jnp.sum(emit, axis=1).astype(jnp.int32)
+    stopped = jnp.any(emit & stop_cond, axis=1)
+    return toks, lps, emit, counts, n, stopped

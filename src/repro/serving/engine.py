@@ -69,6 +69,7 @@ entirely via ``Model.prefill_suffix`` against the cached pages' KV.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -80,7 +81,7 @@ from repro.config import (ATTN, LOCAL_ATTN, CAMDConfig, PagedKVConfig,
 from repro.core import controller as ctrl
 from repro.models.model import Model
 from repro.sampling.samplers import (decode_step_key, sample_token,
-                                     sample_token_batch)
+                                     sample_token_batch, speculative_accept)
 from repro.serving.page_pool import PagePool, prefix_page_keys
 from repro.serving.scheduler import (NewWork, RoundWork, SchedulerContext,
                                      make_scheduler)
@@ -132,6 +133,13 @@ class EngineState(NamedTuple):
     limit: jax.Array           # (B,) int32 per-candidate token limit
                                # (= max_new unless the scheduler granted a
                                # tighter budget-constrained limit)
+    hist: jax.Array            # (B, H) int32 fed-token history per cache
+                               # position (-1 = none/evidence) — the
+                               # device-resident n-gram draft table.
+                               # H = cache_len when speculation is on,
+                               # 1 (dummy) otherwise
+    spec_k: jax.Array          # (B,) int32 per-slot draft block length
+                               # (coverage-aware; 1 = no drafting)
 
 
 def _next_pow2(n: int) -> int:
@@ -157,10 +165,30 @@ class ServeEngine:
                  sched_kwargs: Optional[Dict[str, Any]] = None,
                  prefix_cache: bool = False,
                  mesh=None,
+                 spec_k: int = 0,
+                 spec_mode: str = "coverage",
+                 spec_ngram: int = 2,
                  seed: int = 0):
         assert mode in ("camd", "best_of_n", "self_consistency", "greedy")
         assert impl in ("xla", "pallas", "paged", "paged_pallas")
         assert macro_steps >= 0
+        # speculative decoding: draft up to spec_k-1 tokens per slot from
+        # the device-resident n-gram table, verify them with ONE batched
+        # block forward per loop iteration. spec_k <= 1 keeps the plain
+        # one-token-per-step loop.
+        assert spec_mode in ("coverage", "fixed")
+        assert spec_ngram >= 1
+        self.spec = spec_k > 1
+        self.spec_k = spec_k if self.spec else 0
+        self.spec_mode = spec_mode
+        self.spec_ngram = spec_ngram
+        if self.spec:
+            assert macro_steps >= 1, \
+                "speculative decoding runs inside the fused macro-step " \
+                "loop (macro_steps >= 1)"
+            assert model.supports_speculative, \
+                "speculative block verification needs an all-attention " \
+                "full-context decoder-only model"
         self.model, self.params = model, params
         # mesh-parallel serving: dp = product of the mesh's data axes.
         # Slots partition contiguously across the dp shards; all
@@ -229,8 +257,11 @@ class ServeEngine:
             self._reserved_sh = np.zeros(self.dp, np.int64)
             # frontier width: the most page boundaries one slot can cross
             # in K device steps, plus one for the boundary the first step
-            # may land on.
-            self._frontier_width = max(1, -(-max(macro_steps, 1) // ps) + 1)
+            # may land on. With speculation each step may commit up to
+            # spec_k tokens, so the worst-case advance is K * spec_k.
+            adv = max(macro_steps, 1) * max(spec_k, 1)
+            self._frontier_width = min(max(1, -(-adv // ps) + 1),
+                                       self.pages_per_slot)
         else:
             self.pool = None
         self.key = jax.random.PRNGKey(seed)
@@ -247,6 +278,9 @@ class ServeEngine:
         self._slot_req = np.full(slots, -1, np.int64)   # uid per slot
         self._slot_cand = np.full(slots, -1, np.int64)  # candidate uid per slot
         self._slot_lim = np.full(slots, max_new_tokens, np.int64)
+        # host mirror of per-slot draft length (frontier staging sizes
+        # the worst-case advance with it)
+        self._slot_spec = np.ones(slots, np.int64)
         self._reqs: Dict[int, Dict[str, Any]] = {}      # uid -> bookkeeping
         self._next_cand = 0
         self._dtype = model.param_dtype
@@ -286,8 +320,14 @@ class ServeEngine:
         if mesh is not None:
             self._install_mesh(mesh)
         self._step_body = self._make_step_body()
-        self._step_fn = jax.jit(self._step_body)
-        self._macro_fn = self._build_macro_step()
+        # the engine state is donated into every decode launch: the host
+        # always rebinds self.state to the launch's output, so XLA may
+        # reuse the input buffers in place instead of copying the whole
+        # KV cache + aggregates each dispatch (the paged-K8 bench
+        # regression: ~4 MB of state copied per macro launch).
+        self._step_fn = jax.jit(self._step_body, donate_argnums=(1,))
+        self._macro_fn = self._build_macro_step_spec() if self.spec \
+            else self._build_macro_step()
         self._prefill_fn = self._build_prefill()
         self._bucket_fn = self._build_bucket_prefill()
         self._first_fn = self._build_first_tokens()
@@ -304,6 +344,9 @@ class ServeEngine:
         self.total_tokens = 0
         self.macro_launches = 0
         self.host_syncs = 0
+        # speculation telemetry: drafts proposed / drafts accepted
+        self.spec_drafted = 0
+        self.spec_accepted = 0
 
     # ------------------------------------------------------------------
     # mesh placement
@@ -409,6 +452,9 @@ class ServeEngine:
             bias=jnp.zeros((B, V), jnp.float32),
             greedy=jnp.zeros((B,), bool),
             limit=jnp.full((B,), self.max_new, jnp.int32),
+            hist=jnp.full((B, self.cache_len if self.spec else 1), -1,
+                          jnp.int32),
+            spec_k=jnp.ones((B,), jnp.int32),
         )
 
     # ------------------------------------------------------------------
@@ -505,7 +551,8 @@ class ServeEngine:
                 prev_h=jnp.where(act[:, None], hn, st.prev_h),
                 sum_coh=sum_coh, sum_emb=sum_emb, align_sum=align_sum,
                 active=act & ~done, out_buf=out_buf, bias=st.bias,
-                greedy=st.greedy, limit=st.limit)
+                greedy=st.greedy, limit=st.limit, hist=st.hist,
+                spec_k=st.spec_k)
             return new_state, done
 
         return step
@@ -527,7 +574,7 @@ class ServeEngine:
         step_body = self._step_body
         B = self.B
 
-        @jax.jit
+        @partial(jax.jit, donate_argnums=(1,))
         def macro(params, st: EngineState, base_key, t0, evid_norm, frontier):
             F = frontier.shape[1]
 
@@ -557,6 +604,220 @@ class ServeEngine:
                      jnp.zeros((B,), bool), jnp.int32(0))
             st, fidx, done, i = jax.lax.while_loop(cond, body, carry)
             return st, done, i
+
+        return macro
+
+    def _coverage_k(self, p_star) -> int:
+        """Per-candidate speculative verify width (1..spec_k).
+
+        ``coverage`` mode shrinks the draft length toward 1 as the
+        request's posterior coverage deficit closes — verify-compute
+        follows the residual risk, mirroring the CAMD stopping rule.
+        ``p_star`` is the request's current posterior coverage (None
+        before the first round's rescore, which grants the full budget).
+        """
+        if not self.spec:
+            return 1
+        if self.spec_mode != "coverage":
+            return self.spec_k
+        deficit = max(0.0, (1.0 - self.camd.delta) - (p_star or 0.0))
+        frac = min(1.0, deficit / max(1e-9, 1.0 - self.camd.delta))
+        return 1 + int(round((self.spec_k - 1) * frac))
+
+    def _ngram_draft(self, hist, pos, last):
+        """Device-side n-gram draft proposal, vectorized over slots.
+
+        ``hist[b, p]`` is the token fed at cache position p (prompt +
+        committed decode tokens; -1 for evidence/unfed). The proposer
+        finds an earlier position j whose context-gram ending at
+        ``hist[j]`` matches the current suffix ending at the pending
+        token ``last`` — deepest context first (``spec_ngram``-gram),
+        backing off one token at a time to a plain 1-gram match — and
+        proposes the spec_k-1 tokens that followed it. Within a context
+        depth it prefers the most recent match with all spec_k-1
+        followers known over a fresher partial match. Returns
+        (B, spec_k-1) int32, -1 where no match / out of range — an
+        unmatched draft position is simply never accepted, so a bad
+        proposal costs nothing but wasted verify width."""
+        B, H = hist.shape
+        n_draft = self.spec_k - 1
+        idx = jnp.arange(H)
+        # j < pos-1: a match at the latest fed position has no known
+        # followers (nothing to propose), and taking the max would shadow
+        # an older match that does
+        m = (hist == last[:, None]) & (idx[None, :] < pos[:, None] - 1)
+        full = idx[None, :] + n_draft < pos[:, None]
+
+        def pick(m):
+            # most recent full-width match, else most recent partial
+            # (periodic generations put the nearest match right at the
+            # tail, where it can only seed a 1-token draft; an older
+            # full match proposes the same continuation at full width)
+            j_full = jnp.max(jnp.where(m & full, idx[None, :], -1), axis=1)
+            j_any = jnp.max(jnp.where(m, idx[None, :], -1), axis=1)
+            return jnp.where(j_full >= 0, j_full, j_any)
+
+        j = pick(m)                                   # 1-gram fallback
+        for g in range(1, self.spec_ngram):
+            # context token g steps back from the pending token
+            ctx = jnp.take_along_axis(
+                hist, jnp.clip(pos[:, None] - g, 0, H - 1), axis=1)[:, 0]
+            prev = jnp.pad(hist, ((0, 0), (g, 0)),
+                           constant_values=-2)[:, :H]     # hist[j-g]
+            m &= (idx[None, :] >= g) & (pos[:, None] >= g) & \
+                (prev == ctx[:, None]) & (ctx[:, None] >= 0)
+            jg = pick(m)
+            j = jnp.where(jg >= 0, jg, j)             # deeper match wins
+        src = j[:, None] + jnp.arange(1, n_draft + 1)[None, :]   # (B, n-1)
+        ok = (j >= 0)[:, None] & (src < pos[:, None])
+        d = jnp.take_along_axis(hist, jnp.clip(src, 0, H - 1), axis=1)
+        return jnp.where(ok, d, -1)
+
+    def _build_macro_step_spec(self):
+        """Speculative macro-step loop: each iteration drafts up to
+        spec_k-1 tokens per slot from the n-gram table, verifies the
+        whole block with ONE batched target forward
+        (``model.decode_block``), and commits the accepted prefix via
+        ``samplers.speculative_accept`` — greedy rows byte-identical to
+        the sequential loop, sampled rows distribution-preserving.
+
+        The paged block-table advance is a pure function of the slot's
+        position: logical page li maps to ``frontier[s, li - li0]`` with
+        li0 fixed at launch start, so partial acceptance (pos advancing
+        less than the mapped extent) is self-correcting — the next
+        iteration simply re-maps the same frontier entries.
+        """
+        K = max(self.macro_steps, 1)
+        Kb = self.spec_k
+        paged = self.paged
+        ps = self.page_size if paged else 0
+        model, sampling, eos, max_new = self.model, self.sampling, \
+            self.eos_id, self.max_new
+        has_ev = self.has_evidence
+        impl = self._model_impl
+        B, V = self.B, self.V
+        # every admitted row is greedy iff the engine mode is — a static
+        # fact, so the accept kernel can take its vectorized greedy path
+        all_greedy = self.mode == "greedy"
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def macro(params, st: EngineState, base_key, t0, evid_norm,
+                  frontier):
+            F = frontier.shape[1]
+            # first logical page the frontier row maps to (fixed at
+            # launch start — frontier entries are indexed by logical
+            # page offset relative to this)
+            li0 = -(-st.cache["pos"] // ps) if paged else None
+
+            def cond(carry):
+                st, done, i, nd, na = carry
+                return (i < K) & jnp.any(st.active) & ~jnp.any(done)
+
+            def body(carry):
+                st, done, i, n_drafted, n_accepted = carry
+                pos = st.cache["pos"]
+                if paged:
+                    bt = st.cache["block_table"]
+                    nlog = bt.shape[1]
+                    li = jnp.arange(nlog)[None, :]
+                    fr_idx = li - li0[:, None]                 # (B, nlog)
+                    need = st.active[:, None] & \
+                        (li >= (pos // ps)[:, None]) & \
+                        (li <= ((pos + Kb - 1) // ps)[:, None]) & \
+                        (fr_idx >= 0) & (fr_idx < F)
+                    page = jnp.take_along_axis(
+                        frontier, jnp.clip(fr_idx, 0, F - 1), axis=1)
+                    bt = jnp.where(need, page, bt)
+                    st = st._replace(cache={**st.cache, "block_table": bt})
+
+                draft = self._ngram_draft(st.hist, pos, st.last_token)
+                # coverage-aware per-slot draft length: mask positions
+                # beyond the slot's spec_k
+                draft = jnp.where(
+                    jnp.arange(Kb - 1)[None, :] < (st.spec_k - 1)[:, None],
+                    draft, -1)
+                blk = jnp.concatenate(
+                    [st.last_token[:, None], jnp.maximum(draft, 0)], axis=1)
+                # feedable positions: at most limit - n_tok more tokens
+                # may be emitted, so later block positions never need KV
+                valid = st.active[:, None] & \
+                    (jnp.arange(Kb)[None, :] < (st.limit - st.n_tok)[:, None])
+                logits, hidden, cache = model.decode_block(
+                    params, blk, st.cache, valid, impl=impl)
+                toks, lps, emit, counts, n_new, stopped = speculative_accept(
+                    base_key, t0 + i * Kb, logits.astype(jnp.float32),
+                    draft, sampling, token_counts=st.token_counts,
+                    bias=st.bias, greedy=st.greedy, eos_id=eos,
+                    n_tok=st.n_tok, limit=st.limit, active=st.active,
+                    greedy_static=all_greedy)
+                act = st.active
+                emitf = emit.astype(jnp.float32)           # (B, Kb)
+                n_emit = jnp.sum(emit, axis=1).astype(jnp.int32)
+                last_i = jnp.maximum(n_emit - 1, 0)[:, None]
+
+                # --- incremental CAMD aggregates over the block -------
+                sum_lp = st.sum_lp + jnp.sum(lps * emitf, axis=1)
+                hidden32 = hidden.astype(jnp.float32)      # (B, Kb, d)
+                hn = hidden32 / (jnp.linalg.norm(
+                    hidden32, axis=-1, keepdims=True) + 1e-8)
+                prev_chain = jnp.concatenate(
+                    [st.prev_h[:, None], hn[:, :-1]], axis=1)
+                coh = jnp.sum(hn * prev_chain, axis=-1)    # (B, Kb)
+                coh_w = emitf.at[:, 0].mul(
+                    (st.n_tok > 0).astype(jnp.float32))
+                sum_coh = st.sum_coh + jnp.sum(coh * coh_w, axis=1)
+                sum_emb = st.sum_emb + jnp.sum(
+                    hidden32 * emitf[:, :, None], axis=1)
+                if has_ev:
+                    emb_t = jnp.take(params["embed"]["table"], toks,
+                                     axis=0).astype(jnp.float32)
+                    emb_t = emb_t / (jnp.linalg.norm(
+                        emb_t, axis=-1, keepdims=True) + 1e-8)
+                    a = jnp.mean(jnp.einsum("bnd,bkd->bkn", evid_norm,
+                                            emb_t), axis=-1)
+                    align_sum = st.align_sum + jnp.sum(a * emitf, axis=1)
+                else:
+                    align_sum = st.align_sum
+
+                # emitted tokens land at out_buf[n_tok .. n_tok+n_emit)
+                tgt = st.n_tok[:, None] + jnp.arange(Kb)[None, :]
+                out_buf = st.out_buf.at[
+                    jnp.arange(B)[:, None],
+                    jnp.where(emit, tgt, max_new)].set(toks, mode="drop")
+                # fed tokens [last, toks[:-1]] enter the n-gram table at
+                # positions pos .. pos+n_emit
+                fed = jnp.concatenate(
+                    [st.last_token[:, None], toks[:, :-1]], axis=1)
+                hpos = pos[:, None] + jnp.arange(Kb)[None, :]
+                hist = st.hist.at[
+                    jnp.arange(B)[:, None],
+                    jnp.where(emit, hpos, st.hist.shape[1])].set(
+                        fed, mode="drop")
+
+                last_tok = jnp.take_along_axis(toks, last_i, axis=1)[:, 0]
+                prev_h = jnp.take_along_axis(
+                    hn, last_i[:, :, None], axis=1)[:, 0]
+                new_done = act & stopped
+                cache = {**cache, "pos": pos + n_emit * act}
+                st = EngineState(
+                    cache=cache,
+                    last_token=jnp.where(act, last_tok, st.last_token),
+                    token_counts=counts, sum_lp=sum_lp, n_tok=n_new,
+                    prev_h=jnp.where(act[:, None], prev_h, st.prev_h),
+                    sum_coh=sum_coh, sum_emb=sum_emb, align_sum=align_sum,
+                    active=act & ~new_done, out_buf=out_buf, bias=st.bias,
+                    greedy=st.greedy, limit=st.limit, hist=hist,
+                    spec_k=st.spec_k)
+                n_drafted = n_drafted + jnp.sum(
+                    (draft >= 0) & act[:, None]).astype(jnp.int32)
+                n_accepted = n_accepted + jnp.sum(
+                    jnp.maximum(n_emit - 1, 0) * act).astype(jnp.int32)
+                return st, new_done, i + jnp.int32(1), n_drafted, n_accepted
+
+            carry = (st, jnp.zeros((B,), bool), jnp.int32(0),
+                     jnp.int32(0), jnp.int32(0))
+            st, done, i, nd, na = jax.lax.while_loop(cond, body, carry)
+            return st, done, i, nd, na
 
         return macro
 
@@ -876,7 +1137,11 @@ class ServeEngine:
             if self._slot_req[s] < 0:
                 continue
             p = int(self._slot_pos[s])
-            hi = min(p + max(self.macro_steps, 1), int(self._slot_limit[s]))
+            # worst-case advance: K iterations × the slot's (coverage-
+            # aware) speculative block length
+            adv = max(self.macro_steps, 1) * \
+                (int(self._slot_spec[s]) if self.spec else 1)
+            hi = min(p + adv, int(self._slot_limit[s]))
             need = self._page_crossings(p, hi, ps)
             if need > 0:
                 assert need <= self._slot_reserved[s], \
@@ -994,6 +1259,12 @@ class ServeEngine:
         assert lim >= 1
         info = self._reqs[req.uid]
         st = self.state
+        if self.spec and not self.paged:
+            # speculative block writes must not ring-wrap (a block write
+            # past cache_len would alias a live earlier position)
+            assert info["prompt_len"] + lim <= self.cache_len, \
+                f"prompt {info['prompt_len']} + limit {lim} overflows " \
+                f"cache {self.cache_len} (speculation does not ring-wrap)"
         if self.paged:
             cache = self._seed_paged_slots(info, slot_ids, lim)
         else:
@@ -1020,6 +1291,20 @@ class ServeEngine:
         else:
             a0 = jnp.zeros((n,), jnp.float32)
 
+        if self.spec:
+            # n-gram table: prompt tokens at their cache positions
+            # (evidence rows stay -1 and never match); the first sampled
+            # token is *pending* (it is fed by the first verify block)
+            H = self.cache_len
+            ne = info["prompt_len"] - len(req.prompt)
+            hrow = np.full(H, -1, np.int32)
+            hrow[ne:info["prompt_len"]] = np.asarray(req.prompt, np.int32)
+            hist_rows = jnp.asarray(np.tile(hrow, (n, 1)))
+            k_eff = self._coverage_k(info.get("p_star"))
+        else:
+            hist_rows = None
+            k_eff = 1
+
         new = self.state._replace(
             cache=cache,
             last_token=st.last_token.at[idx].set(toks),
@@ -1038,12 +1323,15 @@ class ServeEngine:
                 jnp.repeat(bias if bias is not None else jnp.zeros((1, V)), n, axis=0)),
             greedy=st.greedy.at[idx].set(self.mode == "greedy"),
             limit=st.limit.at[idx].set(lim),
+            hist=st.hist.at[idx].set(hist_rows) if self.spec else st.hist,
+            spec_k=st.spec_k.at[idx].set(k_eff) if self.spec else st.spec_k,
         )
         self.state = new
         for s in slot_ids:
             self._slot_req[s] = req.uid
             self._slot_cand[s] = self._next_cand
             self._slot_lim[s] = lim
+            self._slot_spec[s] = k_eff
             info["cand_slots"].append((self._next_cand, s))
             self._next_cand += 1
         if self.dp > 1:
@@ -1322,6 +1610,7 @@ class ServeEngine:
             info["records"][cand] = rec
             self._slot_req[slot] = -1
             self._slot_cand[slot] = -1
+            self._slot_spec[slot] = 1
             self.total_tokens += n
             # release the candidate's worst-case token commitment; its
             # unspent remainder immediately funds queued work
@@ -1518,15 +1807,27 @@ class ServeEngine:
             if self._frontier_sharding is not None:
                 frontier = jax.device_put(frontier, self._frontier_sharding)
             self._reshard()
-            self.state, done, steps = self._macro_fn(
-                self.params, self.state, self._decode_key,
-                jnp.int32(self._t), evid, frontier)
+            if self.spec:
+                self.state, done, steps, nd, na = self._macro_fn(
+                    self.params, self.state, self._decode_key,
+                    jnp.int32(self._t), evid, frontier)
+            else:
+                self.state, done, steps = self._macro_fn(
+                    self.params, self.state, self._decode_key,
+                    jnp.int32(self._t), evid, frontier)
             self.macro_launches += 1
-            done_np, pos_np, steps_np = self._sync(
-                (done, self.state.cache["pos"], steps))
+            if self.spec:
+                done_np, pos_np, steps_np, nd_np, na_np = self._sync(
+                    (done, self.state.cache["pos"], steps, nd, na))
+                self.spec_drafted += int(nd_np)
+                self.spec_accepted += int(na_np)
+            else:
+                done_np, pos_np, steps_np = self._sync(
+                    (done, self.state.cache["pos"], steps))
             steps_n = int(steps_np)
             self.total_steps += steps_n
-            self._t += steps_n
+            # each speculative iteration consumes spec_k fold-in keys
+            self._t += steps_n * (self.spec_k if self.spec else 1)
             if self.paged:
                 self._reclaim_frontier(staged, pos_np)
             if done_np.any():

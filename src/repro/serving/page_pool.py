@@ -319,6 +319,10 @@ class PagePool:
         # of the device loop and how many came back unconsumed.
         self.frontier_staged = 0
         self.frontier_returned = 0
+        # largest single staging request: with speculative decoding a
+        # slot's per-launch budget grows to macro_steps * spec_k tokens,
+        # so this is the number to watch when sizing the pool
+        self.frontier_peak_stage = 0
         self._frontier_staged_sh = np.zeros(num_shards, np.int64)
         self._frontier_returned_sh = np.zeros(num_shards, np.int64)
         # cross-request prefix cache (None when disabled)
@@ -447,6 +451,7 @@ class PagePool:
         keeps the device-side block-table advance shard-local."""
         pages = self.alloc(n, shard)
         self.frontier_staged += n
+        self.frontier_peak_stage = max(self.frontier_peak_stage, n)
         self._frontier_staged_sh[shard] += n
         return pages
 
@@ -504,6 +509,7 @@ class PagePool:
             "max_in_use": self.max_in_use,
             "frontier_staged": self.frontier_staged,
             "frontier_returned": self.frontier_returned,
+            "frontier_peak_stage": self.frontier_peak_stage,
         }
         if self.num_shards > 1:
             s["num_shards"] = self.num_shards

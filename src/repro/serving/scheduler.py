@@ -121,6 +121,15 @@ class Scheduler:
     holds at every instant — an early-stopped easy candidate's unspent
     commitment immediately funds queued work. ``global_budget=0``
     disables budgeting entirely (the bit-identity configuration).
+
+    Speculative decoding does not change this accounting: a slot may
+    *verify* up to spec_k tokens per device step, but the device-side
+    limit check truncates emission at exactly the granted ``limit``
+    (over-drafted tokens past the limit are discarded before they
+    count), and frontier staging for the wider per-launch advance is
+    capped at the slot's own commitment. The worst case the admission
+    check reserves against — ``limit`` emitted tokens per candidate —
+    is therefore identical with speculation on or off.
     """
 
     name = "base"

@@ -1,0 +1,141 @@
+"""Property tests for the PrefixCache lazy-deletion victim heaps.
+
+The heaps are an optimization over a full leaf scan; these tests pin the
+equivalence: under arbitrary insert/touch/hold interleavings the heap
+must evict exactly the node a brute-force scan of ``_nodes`` would pick
+(least tick, then key), compaction must never change the victim order,
+and the per-shard heaps must agree with the brute-force scan restricted
+to their shard.
+"""
+import copy
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.page_pool import PagePool  # noqa: E402
+
+# (op, chain id, prefix length): chains share prefixes by construction,
+# "hold" pins a chain's pages (refcount > 1) until released
+OPS = st.lists(
+    st.tuples(st.sampled_from(["insert", "touch", "hold"]),
+              st.integers(0, 3), st.integers(1, 6)),
+    min_size=1, max_size=25)
+
+
+def _chain_keys(cid, n):
+    return [f"c{cid}/{i}" for i in range(n)]
+
+
+def _apply(pool, ops):
+    """Drive the cache like the engine does: match first, allocate the
+    uncached suffix, register, drop the request hold. Returns pages the
+    'hold' ops left pinned."""
+    cache = pool.prefix
+    held = []
+    for op, cid, ln in ops:
+        keys = _chain_keys(cid, ln)
+        pages = cache.match_and_hold(keys)
+        if op == "insert":
+            n_new = ln - len(pages)
+            shard = cid % pool.num_shards
+            if pool.free_pages_in(shard) < n_new:
+                pool.free(pages)
+                continue
+            pages = pages + pool.alloc(n_new, shard)
+            cache.insert(keys, pages)
+            pool.free(pages)
+        elif op == "touch" or not pages:
+            pool.free(pages)
+        else:                                   # hold: keep the request hold
+            held.append(pages)
+    return held
+
+
+def _true_victim(cache, shard=None):
+    """Brute-force reference: the evictable node with the least
+    (tick, key) — leaves only, no live request holders, shard-filtered
+    when asked. None when nothing is evictable."""
+    best = None
+    for k, node in cache._nodes.items():
+        if node.children > 0 or cache.pool.refcount(node.page) > 1:
+            continue
+        if shard is not None and cache.pool.shard_of(node.page) != shard:
+            continue
+        if best is None or (node.tick, k) < best:
+            best = (node.tick, k)
+    return best
+
+
+def _evict_one(cache):
+    before = set(cache._nodes)
+    freed = cache.evict(1)
+    gone = before - set(cache._nodes)
+    assert freed == len(gone)
+    return gone.pop() if gone else None
+
+
+@pytest.mark.parametrize("num_shards", [1, 2])
+@given(ops=OPS)
+@settings(max_examples=40, deadline=None)
+def test_eviction_follows_true_lru(num_shards, ops):
+    pool = PagePool(64, 4, prefix_cache=True, num_shards=num_shards)
+    cache = pool.prefix
+    held = _apply(pool, ops)
+    while True:
+        want = _true_victim(cache)
+        got = _evict_one(cache)
+        if want is None:
+            assert got is None
+            break
+        assert got == want[1]
+        pool.check()
+    # releasing the pinned chains exposes them (and their ancestors,
+    # leaf-first) as victims — drain to empty in true LRU order too
+    for pages in held:
+        pool.free(pages)
+    while cache._nodes:
+        want = _true_victim(cache)
+        assert want is not None
+        assert _evict_one(cache) == want[1]
+    pool.check()
+    assert pool.in_use == 0
+
+
+@given(ops=OPS)
+@settings(max_examples=40, deadline=None)
+def test_compaction_never_changes_victim_order(ops):
+    pool_a = PagePool(64, 4, prefix_cache=True)
+    for pages in _apply(pool_a, ops):
+        pool_a.free(pages)
+    pool_b = copy.deepcopy(pool_a)
+    pool_b.prefix._compact()
+    order_a, order_b = ([], [])
+    for pool, order in ((pool_a, order_a), (pool_b, order_b)):
+        while pool.prefix._nodes:
+            order.append(_evict_one(pool.prefix))
+    assert order_a == order_b
+
+
+@given(ops=OPS, shard=st.integers(0, 1))
+@settings(max_examples=40, deadline=None)
+def test_shard_filtered_eviction_follows_true_lru(ops, shard):
+    pool = PagePool(64, 4, prefix_cache=True, num_shards=2)
+    cache = pool.prefix
+    for pages in _apply(pool, ops):
+        pool.free(pages)
+    while True:
+        want = _true_victim(cache, shard=shard)
+        before = set(cache._nodes)
+        freed = cache.evict(1, shard=shard)
+        if want is None:
+            assert freed == 0
+            break
+        assert freed == 1
+        assert (before - set(cache._nodes)).pop() == want[1]
+        pool.check()
+    # the other shard's nodes are untouched by shard-filtered pressure
+    for k, node in cache._nodes.items():
+        assert pool.shard_of(node.page) != shard or \
+            node.children > 0 or pool.refcount(node.page) > 1

@@ -1,0 +1,259 @@
+"""Speculative decoding: n-gram drafter, rejection-sampling accept
+kernel (vectorized greedy path == sequential general path), the sampler
+bugfixes that rode along (exact-k top-k ties, hoisted batch sampling),
+and engine-level byte-identity between spec-on and spec-off greedy
+streams across impls and scheduler policies.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import _mk_engine as _mk_base, _submit as _submit_base
+from repro.config import PagedKVConfig, SamplingConfig
+from repro.sampling import samplers
+from repro.sampling.samplers import (sample_token, sample_token_batch,
+                                     speculative_accept)
+from repro.serving import Request
+
+PAGE = PagedKVConfig(page_size=8)
+
+
+# ---------------------------------------------------------------------------
+# Sampler bugfixes
+# ---------------------------------------------------------------------------
+
+def test_top_k_exact_k_on_ties():
+    """Duplicated kth value must not let extra tokens survive: lax.top_k
+    breaks ties toward lower ids, so exactly k logits stay finite."""
+    logits = jnp.array([[1.0, 3.0, 2.0, 2.0, 2.0, 0.0]])
+    out = samplers.apply_top_k(logits, 3)
+    kept = out > samplers.NEG_INF / 2
+    assert int(kept.sum()) == 3
+    # top-1 always survives; ties at the cutoff resolve to lower ids
+    assert bool(kept[0, 1]) and bool(kept[0, 2]) and bool(kept[0, 3])
+    assert not bool(kept[0, 4])
+
+
+def test_top_k_batch_rows_independent():
+    logits = jnp.array([[5.0, 4.0, 3.0, 2.0],
+                        [2.0, 3.0, 4.0, 5.0]])
+    out = samplers.apply_top_k(logits, 2)
+    kept = out > samplers.NEG_INF / 2
+    assert kept.tolist() == [[True, True, False, False],
+                             [False, False, True, True]]
+
+
+def test_sample_token_batch_matches_single_calls():
+    """The hoisted shared-row processing must keep per-key draws
+    identical to n separate sample_token calls."""
+    cfg = SamplingConfig(temperature=0.8, top_p=0.9, top_k=7,
+                         repetition_penalty=1.0)
+    logits = jax.random.normal(jax.random.PRNGKey(1), (1, 32))
+    bias = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (1, 32))
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    tb, lb = sample_token_batch(keys, logits, cfg, bias=bias)
+    for i in range(5):
+        t, lp = sample_token(keys[i], logits, cfg, bias=bias)
+        assert int(tb[i]) == int(t[0])
+        np.testing.assert_array_equal(np.asarray(lb[i]), np.asarray(lp[0]))
+
+
+# ---------------------------------------------------------------------------
+# Rejection-sampling accept kernel
+# ---------------------------------------------------------------------------
+
+def _accept_args(B, V, *, n0=0, limit=100):
+    return dict(token_counts=jnp.zeros((B, V), jnp.float32), bias=None,
+                eos_id=V - 1, n_tok=jnp.full((B,), n0, jnp.int32),
+                limit=jnp.full((B,), limit, jnp.int32),
+                active=jnp.ones((B,), bool))
+
+
+def test_greedy_accepts_matching_prefix_only():
+    """Greedy rows emit argmaxes while the draft keeps predicting them,
+    then stop at the first mismatch (the mismatch position still emits
+    the corrected token)."""
+    B, K, V = 2, 4, 8
+    logits = jnp.zeros((B, K, V)).at[:, :, 2].set(5.0)   # argmax = 2 always
+    draft = jnp.array([[2, 2, 2],       # perfect draft: full block emits
+                       [2, 6, 2]],      # wrong at position 1
+                      jnp.int32)
+    toks, _, emit, counts, n, stopped = speculative_accept(
+        jax.random.PRNGKey(0), 0, logits, draft,
+        SamplingConfig(temperature=0.0, repetition_penalty=1.0),
+        greedy=jnp.ones((B,), bool), greedy_static=False,
+        **_accept_args(B, V))
+    assert emit.tolist() == [[True] * 4, [True, True, False, False]]
+    assert n.tolist() == [4, 2]
+    assert not bool(stopped.any())
+    assert jnp.where(emit, toks, -1).tolist() == [[2, 2, 2, 2],
+                                                  [2, 2, -1, -1]]
+    np.testing.assert_array_equal(np.asarray(counts).sum(axis=1), [4.0, 2.0])
+
+
+def test_limit_and_eos_truncate_block():
+    """Over-drafted tokens past the per-slot limit (or EOS) never emit —
+    the device-side truncation the scheduler's worst-case commitment
+    accounting relies on."""
+    B, K, V = 2, 4, 8
+    logits = jnp.zeros((B, K, V)).at[0, :, 2].set(5.0)
+    logits = logits.at[1, :, V - 1].set(5.0)             # row 1 argmax = EOS
+    draft = jnp.full((B, K - 1), 2, jnp.int32)
+    args = _accept_args(B, V)
+    args["n_tok"] = jnp.array([1, 0], jnp.int32)
+    args["limit"] = jnp.array([3, 10], jnp.int32)        # row 0: 2 tokens left
+    toks, _, emit, _, n, stopped = speculative_accept(
+        jax.random.PRNGKey(0), 0, logits, draft,
+        SamplingConfig(temperature=0.0, repetition_penalty=1.0),
+        greedy=jnp.ones((B,), bool), greedy_static=False, **args)
+    assert emit.tolist()[0] == [True, True, False, False]
+    assert int(n[0]) == 3                                 # capped at limit
+    assert emit.tolist()[1] == [True, False, False, False]  # EOS stops row 1
+    assert stopped.tolist() == [True, True]
+
+
+@pytest.mark.parametrize("rep_penalty", [1.0, 1.3])
+def test_greedy_static_matches_sequential_path(rep_penalty):
+    """The vectorized all-greedy path must emit byte-identical tokens,
+    logprobs, counts, and stop flags to the sequential general path."""
+    B, K, V = 4, 5, 16
+    key = jax.random.PRNGKey(3)
+    logits = jax.random.normal(key, (B, K, V))
+    toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    draft = toks[:, 1:]                                   # perfect draft...
+    draft = draft.at[1, 2].set((draft[1, 2] + 1) % V)     # ...mismatch row 1
+    draft = draft.at[2, 0].set(-1)                        # ...no draft row 2
+    cfg = SamplingConfig(temperature=0.7, top_p=0.9, top_k=5,
+                         repetition_penalty=rep_penalty)
+    args = _accept_args(B, V, n0=1, limit=4)              # row limits bite
+    outs = []
+    for static in (False, True):
+        outs.append(speculative_accept(
+            jax.random.PRNGKey(0), 0, logits, draft, cfg,
+            greedy=jnp.ones((B,), bool), greedy_static=static, **args))
+    (t0, l0, e0, c0, n0_, s0), (t1, l1, e1, c1, n1_, s1) = outs
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+    np.testing.assert_array_equal(np.where(e0, t0, -1), np.where(e1, t1, -1))
+    np.testing.assert_allclose(np.where(e0, l0, 0.0), np.where(e1, l1, 0.0),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+    np.testing.assert_array_equal(np.asarray(n0_), np.asarray(n1_))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+@pytest.mark.slow
+def test_rejection_sampling_preserves_target_distribution():
+    """Leviathan guarantee: with a deterministic draft, the emitted
+    marginal at a position equals the processed target distribution
+    exactly — accepted-draft mass plus residual resamples reassemble p."""
+    B, K, V = 8192, 2, 8
+    row = jnp.array([2.0, 0.5, 1.0, 1.5, -1.0, 0.0, 0.3, -0.5])
+    logits = jnp.broadcast_to(row, (B, K, V))
+    draft = jnp.full((B, K - 1), 3, jnp.int32)            # always propose 3
+    cfg = SamplingConfig(temperature=1.0, top_p=1.0, top_k=0,
+                         repetition_penalty=1.0)
+    toks, _, emit, _, _, _ = speculative_accept(
+        jax.random.PRNGKey(7), 0, logits, draft, cfg,
+        greedy=jnp.zeros((B,), bool), greedy_static=False,
+        **_accept_args(B, V))
+    assert bool(emit[:, 0].all())
+    freq = np.bincount(np.asarray(toks[:, 0]), minlength=V) / B
+    p = np.asarray(jax.nn.softmax(row))
+    np.testing.assert_allclose(freq, p, atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# N-gram drafter
+# ---------------------------------------------------------------------------
+
+def _spec_engine(model, params, **kw):
+    defaults = dict(slots=4, cache_len=64, max_new=16, n_candidates=1,
+                    mode="greedy", macro_steps=8, paged_kv=PAGE,
+                    spec_k=4, spec_ngram=2)
+    defaults.update(kw)
+    return _mk_base(model, params, **defaults)
+
+
+def test_ngram_draft_prefers_deep_full_match(tiny_model):
+    """On a periodic history the drafter must back off past the trivial
+    tail self-match to the most recent occurrence with ALL followers
+    known, and propose the continuation."""
+    cfg, model, params = tiny_model
+    eng = _spec_engine(model, params, impl="xla")
+    H = eng.cache_len
+    hist = np.full((1, H), -1, np.int32)
+    hist[0, :8] = [1, 2, 3, 1, 2, 3, 1, 2]
+    d = eng._ngram_draft(jnp.asarray(hist), jnp.array([8]), jnp.array([2]))
+    assert np.asarray(d)[0].tolist() == [3, 1, 2]
+
+
+def test_ngram_draft_no_match_no_proposal(tiny_model):
+    cfg, model, params = tiny_model
+    eng = _spec_engine(model, params, impl="xla")
+    H = eng.cache_len
+    hist = np.full((1, H), -1, np.int32)
+    hist[0, :5] = [5, 6, 7, 8, 9]                         # all distinct
+    d = eng._ngram_draft(jnp.asarray(hist), jnp.array([5]), jnp.array([9]))
+    assert np.asarray(d)[0].tolist() == [-1, -1, -1]
+
+
+# ---------------------------------------------------------------------------
+# Engine-level byte-identity and acceleration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["fifo", "coverage"])
+@pytest.mark.parametrize("impl", ["xla", "paged"])
+def test_greedy_streams_identical_spec_on_off(tiny_model, impl, policy):
+    """Acceptance bar: greedy token streams are byte-identical with
+    speculation on and off, for both KV impls and both scheduler
+    policies — rejection of a mismatched draft replays exactly the
+    sequential argmax."""
+    cfg, model, params = tiny_model
+    outs = {}
+    for k in (0, 4):
+        eng = _spec_engine(model, params, impl=impl, sched_policy=policy,
+                           spec_k=k)
+        _submit_base(eng, cfg, 3)
+        res = sorted(eng.run(), key=lambda r: r.uid)
+        if eng.paged:
+            eng.pool.check()
+            assert eng.pool.in_use == 0
+        outs[k] = [[int(t) for t in r.tokens] for r in res]
+    assert outs[0] == outs[4]
+
+
+def test_spec_accepts_and_saves_steps_on_repetitive_prompt(tiny_model):
+    """A prompt the model continues periodically must actually exercise
+    the drafter: accepted tokens > 0 and fewer device steps than the
+    non-speculative run for the same (identical) output."""
+    cfg, model, params = tiny_model
+    prompt = np.tile(np.array([3, 4, 5], np.int32), 6)
+    steps, toks = {}, {}
+    for k in (0, 4):
+        eng = _spec_engine(model, params, impl="paged", spec_k=k, max_new=24)
+        eng.submit(Request(uid=0, prompt=prompt))
+        res = list(eng.run())
+        toks[k] = [int(t) for t in res[0].tokens]
+        steps[k] = eng.total_steps
+        if k:
+            assert eng.spec_drafted > 0
+            assert eng.spec_accepted > 0
+            assert eng.spec_accepted <= eng.spec_drafted
+    assert toks[0] == toks[4]
+    assert steps[4] < steps[0]
+
+
+def test_coverage_mode_shrinks_draft_budget(tiny_model):
+    """spec_mode='coverage': once a request's posterior coverage deficit
+    closes, freshly admitted candidates get k_eff < spec_k; first
+    admissions (no p* yet) always get the full budget."""
+    cfg, model, params = tiny_model
+    eng = _spec_engine(model, params, impl="xla", spec_k=4,
+                       spec_mode="coverage")
+    assert eng._coverage_k(None) == 4                     # no posterior yet
+    assert eng._coverage_k(1.0) == 1                      # deficit closed
+    assert 1 <= eng._coverage_k(0.5) <= 4
+    fixed = _spec_engine(model, params, impl="xla", spec_k=4,
+                         spec_mode="fixed")
+    assert fixed._coverage_k(1.0) == 4                    # fixed never shrinks
