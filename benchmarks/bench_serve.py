@@ -12,6 +12,16 @@ Grid: macro-step K ∈ {0 (per-token loop), 1, 8, 32} × impl ∈ {xla, paged}
 × mode ∈ {camd, best_of_n}. Each cell warms up once (jit compile +
 first-run allocation on a throwaway request batch), then times a fresh
 request batch on the same engine so compiled functions are reused.
+Every cell completes the same token work (fixed CAMD round budget, no
+early eos, uniform bucketed prefill), so tokens/sec and us/token are
+comparable across the grid; page size and the default K come from a
+committed ``BENCH_autotune.json`` when present (``autotune.load_tuned``).
+
+The **quantized scenario** serves the trained chain-oracle workload
+greedily under kv_dtype ∈ {auto, fp32, int8, fp8†}: oracle accuracy per
+storage mode, true resident-KV bytes (values + scales), and the
+tolerance-0 stream identity (fp32 == auto byte-identical). †fp8 only
+where the jax build has float8_e4m3fn.
 
 The **speculative scenario** decodes a shared-prefix greedy workload
 with the n-gram draft + block-verify loop on (``spec_k=4``) and off on
@@ -76,16 +86,25 @@ def _submit(eng, cfg, n, uid0=0, seed=0, plen=12):
 
 
 def _run_cell(cfg, model, params, *, impl, mode, macro_steps, requests,
-              max_new, reps=3):
+              max_new, reps=3, page_size=16):
+    """One equal-work grid cell.
+
+    Every cell completes the IDENTICAL number of tokens, so tokens/sec
+    is comparable across the whole grid: bucketed prefill is on for all
+    K (an earlier version disabled it at K=0, which changed admission
+    batching, hence sampled streams, hence early stopping — the
+    committed baseline once compared 256-token cells against 192-token
+    ones); min_samples pins CAMD to its full round budget; eos is an
+    out-of-vocab id so no candidate stops early."""
     eng = ServeEngine(
         model, params, slots=8, cache_len=128,
         sampling=SamplingConfig(max_new_tokens=max_new, temperature=0.8),
-        camd=CAMDConfig(samples_per_round=4, max_rounds=2, min_samples=4),
-        mode=mode, n_candidates=4, max_new_tokens=max_new, eos_id=1,
-        impl=impl, paged_kv=PagedKVConfig(page_size=16),
+        camd=CAMDConfig(samples_per_round=4, max_rounds=2, min_samples=8),
+        mode=mode, n_candidates=4, max_new_tokens=max_new,
+        eos_id=cfg.vocab_size,
+        impl=impl, paged_kv=PagedKVConfig(page_size=page_size),
         macro_steps=macro_steps,
-        # the pre-refactor loop also predates bucketed prefill
-        bucket_prefill=macro_steps > 0,
+        bucket_prefill=True,
         seed=0)
     # warmup: compile every jitted fn on a throwaway batch of the SAME
     # size as the timed one (prefill buckets / admission widths are
@@ -116,6 +135,7 @@ def _run_cell(cfg, model, params, *, impl, mode, macro_steps, requests,
         "tokens": eng.total_tokens,
         "device_steps": eng.total_steps,
         "tokens_per_s": best_rate,
+        "us_per_token": 1e6 / max(best_rate, 1e-9),
         "host_syncs": eng.host_syncs,
         "syncs_per_token": eng.host_syncs / max(eng.total_tokens, 1),
         "macro_launches": eng.macro_launches,
@@ -302,8 +322,13 @@ def run_sharded_scenario(smoke: bool = False) -> dict:
 
 CHAIN_BASE = 16
 
+_CHAIN_MODELS: dict = {}    # steps -> (cfg, model, params); the scheduler
+                            # and quantized scenarios share one training run
+
 
 def _train_chain_model(steps: int):
+    if steps in _CHAIN_MODELS:
+        return _CHAIN_MODELS[steps]
     cfg = ModelConfig(
         name="bench-sched-lm", family="dense", num_layers=2, d_model=128,
         num_heads=4, num_kv_heads=2, d_ff=384, vocab_size=64, head_dim=32,
@@ -317,6 +342,7 @@ def _train_chain_model(steps: int):
         model, TrainConfig(total_steps=steps, warmup_steps=steps // 10,
                            learning_rate=3e-3, remat=False),
         data, steps=steps, log_every=steps)
+    _CHAIN_MODELS[steps] = (cfg, model, params)
     return cfg, model, params
 
 
@@ -419,8 +445,83 @@ def run_scheduler_scenario(smoke: bool = False) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Quantized-KV scenario: int8/fp8 pools vs fp32 on a trained oracle task
+# ---------------------------------------------------------------------------
+
+def _serve_quantized(model, params, reqs, *, kv_dtype):
+    """Greedy CAMD-engine serve of the chain-oracle workload against one
+    KV storage mode; accuracy is exact-match on the oracle answer, so a
+    quantization-induced quality loss is directly visible."""
+    eng = ServeEngine(
+        model, params, slots=4, cache_len=64,
+        sampling=SamplingConfig(temperature=0.0, top_p=1.0,
+                                repetition_penalty=1.0, max_new_tokens=3),
+        mode="greedy", n_candidates=1, eos_id=1, max_new_tokens=3,
+        impl="paged", paged_kv=PagedKVConfig(page_size=8,
+                                             kv_dtype=kv_dtype),
+        macro_steps=8, seed=0)
+    for i, (p, _ans, _k) in enumerate(reqs):
+        eng.submit(Request(uid=i, prompt=p))
+    res = {r.uid: r for r in eng.run()}
+    acc = float(np.mean([
+        len(res[i].tokens) > 0 and int(res[i].tokens[0]) == reqs[i][1]
+        for i in range(len(reqs))]))
+    s = eng.kv_stats()
+    return {
+        "kv_dtype": kv_dtype,
+        "accuracy": acc,
+        "bytes_per_page": s["bytes_per_page"],
+        "peak_kv_bytes": s["peak_kv_bytes"],
+        "dense_equiv_bytes": s["dense_equiv_bytes"],
+    }, [[int(t) for t in res[i].tokens] for i in range(len(reqs))]
+
+
+def run_quantized_scenario(smoke: bool = False) -> dict:
+    """Quantized paged-KV storage modes on the trained chain-oracle
+    workload (shared with the scheduler scenario): greedy accuracy per
+    kv_dtype, true resident-KV bytes, and the tolerance-0 stream
+    identity (fp32 == auto on an fp32 engine). check_regression gates
+    int8 bytes <= 0.55x fp32 and the accuracy delta."""
+    from repro.models.attention import FP8_DTYPE
+    steps = 240 if smoke else 300
+    n_req = 12 if smoke else 16
+    cfg, model, params = _train_chain_model(steps)
+    del cfg
+    reqs = _heavy_tail_requests(ChainTask(base=CHAIN_BASE), n_req)
+    dtypes = ["auto", "fp32", "int8"] + (["fp8"] if FP8_DTYPE else [])
+    rows, streams = [], {}
+    for kvd in dtypes:
+        row, st = _serve_quantized(model, params, reqs, kv_dtype=kvd)
+        rows.append(row)
+        streams[kvd] = st
+        print(f"quant  {kvd:5s}: acc={row['accuracy']:.3f} "
+              f"bytes/page={row['bytes_per_page']} "
+              f"peak={row['peak_kv_bytes']}")
+    by = {r["kv_dtype"]: r for r in rows}
+    headline = {
+        "fp32_identical_to_auto": streams["fp32"] == streams["auto"],
+        "accuracy_fp32": by["fp32"]["accuracy"],
+        "accuracy_int8": by["int8"]["accuracy"],
+        "accuracy_delta_int8": by["fp32"]["accuracy"]
+        - by["int8"]["accuracy"],
+        "bytes_ratio_int8": by["int8"]["bytes_per_page"]
+        / by["fp32"]["bytes_per_page"],
+        "resident_ratio_int8": by["int8"]["peak_kv_bytes"]
+        / max(by["fp32"]["peak_kv_bytes"], 1),
+    }
+    if "fp8" in by:
+        headline["accuracy_fp8"] = by["fp8"]["accuracy"]
+        headline["bytes_ratio_fp8"] = by["fp8"]["bytes_per_page"] \
+            / by["fp32"]["bytes_per_page"]
+    return {"n_requests": n_req, "train_steps": steps, "rows": rows,
+            "headline": headline}
+
+
 def run(smoke: bool = False) -> dict:
     cfg, model, params = _bench_model()
+    from benchmarks.autotune import load_tuned
+    tuned = load_tuned()["serve"]
     if smoke:
         impls, modes, ks = ["xla", "paged"], ["camd"], [0, 8]
         requests, max_new = 3, 16
@@ -428,13 +529,17 @@ def run(smoke: bool = False) -> dict:
         impls, modes, ks = ["xla", "paged"], ["camd", "best_of_n"], \
             [0, 1, 8, 32]
         requests, max_new = 6, 32
+    # a committed autotune artifact shifts the default operating point
+    if tuned["macro_steps"] not in ks:
+        ks = sorted(ks + [tuned["macro_steps"]])
     rows = []
     for impl in impls:
         for mode in modes:
             for k in ks:
                 row = _run_cell(cfg, model, params, impl=impl, mode=mode,
                                 macro_steps=k, requests=requests,
-                                max_new=max_new)
+                                max_new=max_new,
+                                page_size=tuned["page_size"])
                 rows.append(row)
                 print(f"{impl:6s} {mode:10s} K={k:<3d} "
                       f"{row['tokens_per_s']:9.1f} tok/s  "
@@ -460,17 +565,27 @@ def run(smoke: bool = False) -> dict:
             }
     speculative = run_speculative_scenario(smoke)
     scheduler = run_scheduler_scenario(smoke)
+    quantized = run_quantized_scenario(smoke)
     sharded = run_sharded_scenario(smoke)
     out = {"config": {"smoke": smoke, "requests": requests,
                       "max_new": max_new, "slots": 8,
+                      "page_size": tuned["page_size"],
+                      "tuned": tuned,
                       "backend": jax.default_backend(),
                       "jax_version": jax.__version__},
            "rows": rows, "speedups": speedups,
            "speculative": speculative,
-           "scheduler": scheduler, "sharded": sharded}
+           "scheduler": scheduler, "quantized": quantized,
+           "sharded": sharded}
     with open("BENCH_serve.json", "w") as f:
         json.dump(out, f, indent=2)
     print("wrote BENCH_serve.json")
+    # cross-cell comparability: every grid cell must have completed the
+    # same token work, or tokens/sec columns are not comparable
+    for mode in modes:
+        per_mode = {r["tokens"] for r in rows if r["mode"] == mode}
+        assert len(per_mode) == 1, \
+            f"unequal completed-token work across {mode} cells: {per_mode}"
     if smoke:
         # CI sanity: the fused path must actually amortize host syncs
         fused = [r for r in rows if r["macro_steps"] >= 8]
@@ -500,6 +615,14 @@ def run(smoke: bool = False) -> dict:
                    if r["policy"] == "coverage")
         assert cov["prefix_cache"]["hits"] > 0
         assert cov["total_tokens"] <= scheduler["equal_budget"]
+        # quantized KV: fp32 mode is a byte-identical no-op, int8 halves
+        # (better) resident bytes and keeps oracle accuracy
+        qh = quantized["headline"]
+        assert qh["fp32_identical_to_auto"], \
+            "kv_dtype=fp32 changed the serve trace on an fp32 engine"
+        assert qh["bytes_ratio_int8"] <= 0.55, qh
+        q_slack = 1.0 / quantized["n_requests"]
+        assert qh["accuracy_delta_int8"] <= q_slack, qh
         # ... and when the runtime has a mesh to shard over, sharding
         # must be a pure placement decision: byte-identical streams
         if "skipped" not in sharded:

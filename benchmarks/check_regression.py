@@ -22,6 +22,11 @@ against the committed ``BENCH_baseline.json`` and exits non-zero when:
     budget, coverage must match-or-beat fifo accuracy (one request of
     sampling slack, as the bench asserts) while spending strictly fewer
     tokens per served easy request;
+  * the quantized scenario regresses: kv_dtype=fp32 must stay
+    byte-identical to auto, int8 resident KV bytes must stay <= 0.55x
+    fp32 at equal config (``resident_kv_bytes`` gate), and int8 greedy
+    oracle accuracy must stay within one request of fp32 — all
+    within-run and deterministic, so never version-skew-skipped;
   * the sharded scenario ran (multi-device lane) and the single-device
     vs mesh token streams were not byte-identical.
 
@@ -126,6 +131,30 @@ def check(cur: dict, base: dict, *, tol: float,
                 "coverage no longer spends fewer tokens per served easy "
                 f"request ({head['easy_per_served_coverage']:.2f} >= "
                 f"{head['easy_per_served_fifo']:.2f})")
+
+    quant = cur.get("quantized", {})
+    q_head = quant.get("headline")
+    if q_head is None:
+        errors.append("quantized section missing from current report")
+    else:
+        # all three gates are within-run and deterministic, so they
+        # apply regardless of jax version skew or --skip-throughput
+        if not q_head.get("fp32_identical_to_auto", False):
+            errors.append("kv_dtype=fp32 is no longer byte-identical to "
+                          "auto on the fp32 bench engine")
+        ratio = q_head.get("bytes_ratio_int8", 1.0)
+        if ratio > 0.55:
+            errors.append(
+                f"resident_kv_bytes gate: int8 pages cost {ratio:.3f}x "
+                f"fp32 at equal config (gate: <= 0.55x)")
+        q_slack = 1.0 / max(quant.get("n_requests", 1), 1)
+        delta = q_head.get("accuracy_delta_int8", 1.0)
+        if delta > q_slack:
+            errors.append(
+                f"int8 KV quantization costs oracle accuracy: "
+                f"fp32 {q_head.get('accuracy_fp32'):.3f} -> int8 "
+                f"{q_head.get('accuracy_int8'):.3f} "
+                f"(delta {delta:.3f} > {q_slack:.3f} slack)")
 
     sharded = cur.get("sharded", {})
     if "skipped" in sharded:

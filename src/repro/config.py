@@ -260,6 +260,12 @@ class PagedKVConfig:
     """
     page_size: int = 16            # tokens per KV page
     num_pages: int = 0             # 0 => dense-equivalent worst case
+    # KV page storage dtype: "auto" (= engine param dtype), "fp32",
+    # "bf16", or quantized "int8"/"fp8" (fp8-e4m3 where the jax build
+    # has it). Quantized pools carry per-(page, slot, kv-head) absmax
+    # scales and are dequantized inside the attention kernels; see
+    # models.attention.KV_DTYPES.
+    kv_dtype: str = "auto"
 
 
 @dataclass(frozen=True)

@@ -201,6 +201,15 @@ def _cache_spec(mesh: Mesh, rules: ShardingRules, path, shape) -> P:
         dims = [None] * len(shape)
         dims[pg] = _norm(p_ax)
         return P(*dims)
+    if name in ("k_scale", "v_scale"):
+        # Quantized-pool absmax scales: (P, ps, Hkv), layer-stacked to
+        # (n_super, P, ps, Hkv). Sharded on the same page axis as their
+        # value pools so dequant never crosses shards.
+        pg = len(shape) - 3
+        p_ax = _maybe(mesh, shape[pg], dp)
+        dims = [None] * len(shape)
+        dims[pg] = _norm(p_ax)
+        return P(*dims)
     if name == "block_table":
         return P(_norm(_maybe(mesh, shape[0], dp)), None)
     if name == "pos":

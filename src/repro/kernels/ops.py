@@ -44,13 +44,26 @@ def decode_attention(q, k, v, kv_mask, *, blk_s: int = 256):
                                  interpret=(m == "interpret"))
 
 
-def paged_decode_attention(q, k_pages, v_pages, block_table, lengths):
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                           k_scale=None, v_scale=None,
+                           debug_validate: bool = False):
+    """``k_scale``/``v_scale``: per-row scales of quantized (int8/fp8)
+    pools — both paths dequantize with them. ``debug_validate`` raises
+    on out-of-range live page ids instead of silently clipping them
+    (host-side — concrete inputs only, see ``validate_block_table``)."""
+    if debug_validate:
+        _pdec.validate_block_table(block_table, lengths,
+                                   k_pages.shape[0], k_pages.shape[1])
     m = _mode()
     if m == "ref":
         return _ref.paged_decode_attention_ref(q, k_pages, v_pages,
-                                               block_table, lengths)
+                                               block_table, lengths,
+                                               k_scale=k_scale,
+                                               v_scale=v_scale)
     return _pdec.paged_decode_attention(q, k_pages, v_pages, block_table,
-                                        lengths, interpret=(m == "interpret"))
+                                        lengths, k_scale=k_scale,
+                                        v_scale=v_scale,
+                                        interpret=(m == "interpret"))
 
 
 def xmodal_score(token_embs, mask, visual_feats, text_feats, *, blk: int = 128):

@@ -20,6 +20,20 @@ garbage from a masked-prefix page is erased the same way).
 GQA-aware like ``_decode_kernel``: the G query heads of one kv head form
 the sublane dim of the score matmul, so each page is read once per
 group, not once per query head.
+
+**Quantized pools** (int8 / fp8-e4m3): when per-row scale tensors
+``k_scale``/``v_scale`` of shape (P, page_size, Hkv) accompany the
+pages, dequantization happens *inside* the kernel — the scale block
+rides the same ``bt[b, i]`` index map as its page, one fp32 multiply
+per (slot, head-dim) tile on the VPU, and the layout change stays
+invisible above the kernel. HBM traffic per live token drops from
+``2*hd*4`` bytes (fp32) to ``2*(hd + 4)`` (int8 values + one fp32
+scale per kv head), a ~3.8x cut at hd=64.
+
+The kernel's memory block size IS the page size — ``benchmarks/
+autotune.py`` sweeps it (with the contiguous kernels' blk_q/blk_k/blk_s
+and the engine's macro-step K) and ships the best configuration in
+``BENCH_autotune.json``.
 """
 from __future__ import annotations
 
@@ -27,15 +41,50 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
 
-def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_scr, l_scr, acc_scr, *, scale: float,
-                         page_size: int, n_pages: int):
+def validate_block_table(block_table, lengths, num_pages: int,
+                         page_size: int):
+    """Host-side guard against block-table corruption.
+
+    The kernel (and the jnp oracle) clip page ids into [0, P-1], which
+    turns an out-of-range id into wrong-but-plausible attention output.
+    This check raises instead: every *live* entry (logical page i with
+    ``i * page_size < lengths[b]``) must hold a page id in [0, P-1].
+    Entries past the live length may point anywhere — they are masked.
+
+    Host-side by construction (``np.asarray`` on a tracer raises), so it
+    runs in tests and interpret-mode harnesses, never inside a jitted
+    serving step — pass ``debug_validate=True`` to the public entry
+    points to enable it.
+    """
+    bt = np.asarray(block_table)
+    ln = np.asarray(lengths)
+    n = bt.shape[1]
+    live = np.arange(n)[None, :] * page_size < ln[:, None]
+    bad = live & ((bt < 0) | (bt >= num_pages))
+    if bad.any():
+        rows, cols = np.nonzero(bad)
+        culprits = [(int(r), int(c), int(bt[r, c]))
+                    for r, c in zip(rows[:8], cols[:8])]
+        raise ValueError(
+            f"block table references out-of-range page ids (pool has "
+            f"{num_pages} pages): (row, logical_page, page_id) = "
+            f"{culprits}" + (" ..." if len(rows) > 8 else ""))
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                         scale: float, page_size: int, n_pages: int,
+                         quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     i = pl.program_id(2)
 
@@ -48,6 +97,10 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, hd)
     k = k_ref[0, :, 0, :].astype(jnp.float32)              # (ps, hd)
     v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quantized:
+        # per-(slot, kv-head) fp32 scales: (1, ps, 1) blocks -> (ps, 1)
+        k = k * ks_ref[0]
+        v = v * vs_ref[0]
     length = len_ref[b]
     # token j of logical page i sits at absolute position i*ps + j; only
     # positions below the row's live length attend. (>=2D iota for TPU.)
@@ -74,36 +127,39 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
-                           interpret: bool = False):
-    """q: (B, 1, H, hd); k_pages/v_pages: (P, page_size, Hkv, hd);
-    block_table: (B, n_pages) int32 page ids per row (entries past the
-    live length may point anywhere valid — they are masked); lengths:
-    (B,) int32 live token count per row (>= 1).
-
-    Returns (B, 1, H, hd).
-    """
+def _paged_decode_call(q, k_pages, v_pages, block_table, lengths,
+                       k_scale, v_scale, *, interpret: bool):
     B, _, H, hd = q.shape
     P, ps, Hkv, _ = k_pages.shape
     n_pages = block_table.shape[1]
     G = H // Hkv
     scale = hd ** -0.5
+    quantized = k_scale is not None
     qg = q[:, 0].reshape(B, Hkv, G, hd)
     bt = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
     ln = lengths.astype(jnp.int32)
 
     kernel = functools.partial(_paged_decode_kernel, scale=scale,
-                               page_size=ps, n_pages=n_pages)
+                               page_size=ps, n_pages=n_pages,
+                               quantized=quantized)
+    page_spec = pl.BlockSpec((1, ps, 1, hd),
+                             lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), lambda b, h, i, bt, ln: (b, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [bt, ln, qg, k_pages, v_pages]
+    if quantized:
+        # scale blocks ride the same block-table index map as their page
+        scale_spec = pl.BlockSpec(
+            (1, ps, 1), lambda b, h, i, bt, ln: (bt[b, i], 0, h))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                 # block table + lengths
         grid=(B, Hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, i, bt, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)),
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda b, h, i, bt, ln: (bt[b, i], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, h, i, bt, ln: (b, h, 0, 0)),
         scratch_shapes=[
@@ -117,5 +173,32 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
         interpret=interpret,
-    )(bt, ln, qg, k_pages, v_pages)
+    )(*operands)
     return out.reshape(B, 1, H, hd)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                           k_scale=None, v_scale=None,
+                           interpret: bool = False,
+                           debug_validate: bool = False):
+    """q: (B, 1, H, hd); k_pages/v_pages: (P, page_size, Hkv, hd);
+    block_table: (B, n_pages) int32 page ids per row (entries past the
+    live length may point anywhere valid — they are masked); lengths:
+    (B,) int32 live token count per row (>= 1).
+
+    ``k_scale``/``v_scale``: optional (P, page_size, Hkv) float32
+    per-row absmax scales for quantized (int8/fp8) pools — pass both or
+    neither; dequantization happens inside the kernel.
+
+    ``debug_validate``: host-side assert that every live block-table
+    entry is in range (see ``validate_block_table``) instead of the
+    silent clip — concrete (non-traced) inputs only.
+
+    Returns (B, 1, H, hd).
+    """
+    assert (k_scale is None) == (v_scale is None)
+    if debug_validate:
+        validate_block_table(block_table, lengths, k_pages.shape[0],
+                             k_pages.shape[1])
+    return _paged_decode_call(q, k_pages, v_pages, block_table, lengths,
+                              k_scale, v_scale, interpret=interpret)

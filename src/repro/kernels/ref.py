@@ -46,7 +46,8 @@ def decode_attention_ref(q, k, v, kv_mask):
     return out.astype(q.dtype)
 
 
-def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lengths):
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lengths,
+                               k_scale=None, v_scale=None):
     """q: (B,1,H,hd); k_pages/v_pages: (P,ps,Hkv,hd);
     block_table: (B,n) int32 page ids; lengths: (B,) int32 live tokens.
 
@@ -54,12 +55,22 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lengths):
     (position p of row b lives at page block_table[b, p//ps], offset
     p%ps) and reduces to the contiguous oracle with an
     ``arange < length`` validity mask.
+
+    ``k_scale``/``v_scale``: optional (P, ps, Hkv) float32 per-row
+    absmax scales for quantized (int8/fp8) pools — dequantized after
+    the gather, mirroring the Pallas kernel's in-kernel dequant.
     """
     P, ps = k_pages.shape[:2]
     bt = jnp.clip(block_table, 0, P - 1)
     B, n = bt.shape
     k = k_pages[bt].reshape(B, n * ps, *k_pages.shape[2:])
     v = v_pages[bt].reshape(B, n * ps, *v_pages.shape[2:])
+    if k_scale is not None:
+        Hkv = k_scale.shape[-1]
+        k = k.astype(jnp.float32) * \
+            k_scale[bt].reshape(B, n * ps, Hkv)[..., None]
+        v = v.astype(jnp.float32) * \
+            v_scale[bt].reshape(B, n * ps, Hkv)[..., None]
     mask = jnp.arange(n * ps)[None, :] < lengths[:, None]
     return decode_attention_ref(q, k, v, mask)
 

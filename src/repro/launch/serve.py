@@ -33,6 +33,13 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV pool size; 0 = dense-equivalent worst case")
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=["auto", "fp32", "bf16", "int8", "fp8"],
+                    help="paged KV pool storage dtype: auto = engine "
+                         "param dtype; int8/fp8 store quantized pages "
+                         "with per-(page, slot, kv-head) scales, "
+                         "dequantized inside the attention kernels "
+                         "(fp8 needs a jax build with float8_e4m3fn)")
     ap.add_argument("--macro-steps", type=int, default=8,
                     help="device decode steps per lax.while_loop launch; "
                          "0 = legacy per-token host loop")
@@ -101,7 +108,8 @@ def main():
         mode=args.mode, max_new_tokens=args.max_new, eos_id=1,
         impl=args.impl,
         paged_kv=PagedKVConfig(page_size=args.page_size,
-                               num_pages=args.num_pages),
+                               num_pages=args.num_pages,
+                               kv_dtype=args.kv_dtype),
         macro_steps=args.macro_steps,
         bucket_prefill=not args.no_bucket_prefill,
         prefill_bucket_min=args.prefill_bucket_min,
@@ -140,7 +148,8 @@ def main():
           f"declined={ss['declined_rounds']} starved={ss['starved']}")
     if eng.paged:
         s = eng.kv_stats()
-        print(f"paged kv: peak {s['max_in_use']}/{s['num_pages']} pages "
+        print(f"paged kv [{s['kv_dtype']}]: peak {s['max_in_use']}/"
+              f"{s['num_pages']} pages "
               f"({s['peak_kv_bytes'] / 1e6:.2f} MB resident at peak vs "
               f"{s['dense_equiv_bytes'] / 1e6:.2f} MB dense-equivalent)")
         if "prefix_cache" in s:

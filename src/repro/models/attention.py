@@ -263,6 +263,75 @@ def cache_write_block(cache, k_new, v_new, pos, valid=None):
             "v": jnp.where(m, vs, cache["v"])}
 
 
+# ---------------------------------------------------------------------------
+# Quantized KV storage (int8 / fp8-e4m3 pools with per-row absmax scales)
+# ---------------------------------------------------------------------------
+
+# ``--kv-dtype`` names accepted by the serving stack. "auto" keeps the
+# engine's parameter dtype (the historical behaviour — byte-identical
+# streams); fp32/bf16 store pages in that dtype with no scales; int8/fp8
+# store quantized pages plus per-row scale tensors.
+KV_DTYPES = ("auto", "fp32", "bf16", "int8", "fp8")
+
+# fp8-e4m3 where the jax build ships it (0.4.x+ on all backends); None
+# keeps "fp8" rejected with a clear error instead of an AttributeError.
+FP8_DTYPE = getattr(jnp, "float8_e4m3fn", None)
+
+_QMAX = {"int8": 127.0, "fp8": 448.0}   # e4m3 finite max
+
+
+def kv_storage_dtype(kv_dtype: str, dtype):
+    """Resolve a ``--kv-dtype`` name to (storage dtype, quantized?)."""
+    if kv_dtype in ("auto", "", None):
+        return dtype, False
+    if kv_dtype == "fp32":
+        return jnp.float32, False
+    if kv_dtype == "bf16":
+        return jnp.bfloat16, False
+    if kv_dtype == "int8":
+        return jnp.int8, True
+    if kv_dtype == "fp8":
+        if FP8_DTYPE is None:
+            raise ValueError(
+                "kv_dtype='fp8' needs jnp.float8_e4m3fn, which this jax "
+                "build does not provide — use 'int8' instead")
+        return FP8_DTYPE, True
+    raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
+
+
+def _qmax_for(qdtype) -> float:
+    return _QMAX["int8"] if jnp.dtype(qdtype) == jnp.dtype(jnp.int8) \
+        else _QMAX["fp8"]
+
+
+def kv_quantize(x, qdtype):
+    """Absmax-quantize KV vectors to ``qdtype`` (int8 or fp8-e4m3).
+
+    x: (..., hd). Returns (q (..., hd) qdtype, scale (...) float32) with
+    one scale per trailing head-dim row — the granularity at which the
+    paged pools are written (one (page, slot, kv-head) row per token), so
+    an incremental decode append never requantizes its page neighbours
+    and the roundtrip error stays <= 1/2 scale ULP unconditionally.
+    All-zero rows quantize to zeros exactly (the scale floor only guards
+    the division)."""
+    xf = x.astype(jnp.float32)
+    qmax = _qmax_for(qdtype)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, 1e-30) / qmax
+    y = xf / scale[..., None]
+    if jnp.dtype(qdtype) == jnp.dtype(jnp.int8):
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = y.astype(qdtype)
+    return q, scale.astype(jnp.float32)
+
+
+def kv_dequantize(q, scale):
+    """Inverse of ``kv_quantize``: q (..., hd) qdtype × scale (...) ->
+    float32 values."""
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
 def paged_pool_page_axis(ndim: int) -> int:
     """Index of the *page* axis in a paged-pool leaf.
 
@@ -278,25 +347,38 @@ def paged_pool_page_axis(ndim: int) -> int:
 
 
 def make_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                        dtype):
+                        dtype, kv_dtype: str = "auto"):
     """A shared pool of KV pages (no batch axis — slots reference pages
     through a block table). Page 0 is conventionally the quarantine page
     idle slots write into; allocators should never hand it out (sharded
     pools reserve one quarantine page per shard — see
     ``serving.page_pool.PagePool.quarantine_page``).
 
+    ``kv_dtype`` selects the storage mode (``KV_DTYPES``): quantized
+    modes (int8/fp8) carry per-(page, slot, kv-head) absmax scale
+    tensors ``k_scale``/``v_scale`` of shape (P, ps, Hkv) float32 next
+    to the page values — pages and their scales travel together, so
+    CoW prefix-shared pages share scales for free and the write paths
+    scatter both in one pass.
+
     Sharding contract: the pool may be sharded on the page axis (axis
-    ``paged_pool_page_axis``) across the serving mesh's data shards.
-    Page ids in block tables stay GLOBAL — locality comes from the host
-    allocator handing each slot pages from its own shard's range, not
-    from renumbering."""
+    ``paged_pool_page_axis``; scale leaves are page-major too) across
+    the serving mesh's data shards. Page ids in block tables stay
+    GLOBAL — locality comes from the host allocator handing each slot
+    pages from its own shard's range, not from renumbering."""
     hd = cfg.resolved_head_dim
-    return {
+    sdtype, quantized = kv_storage_dtype(kv_dtype, dtype)
+    cache = {
         "k_pages": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd),
-                             dtype=dtype),
+                             dtype=sdtype),
         "v_pages": jnp.zeros((num_pages, page_size, cfg.num_kv_heads, hd),
-                             dtype=dtype),
+                             dtype=sdtype),
     }
+    if quantized:
+        shape = (num_pages, page_size, cfg.num_kv_heads)
+        cache["k_scale"] = jnp.zeros(shape, jnp.float32)
+        cache["v_scale"] = jnp.zeros(shape, jnp.float32)
+    return cache
 
 
 def paged_cache_write(cache, k_new, v_new, pos, block_table, valid=None):
@@ -328,6 +410,18 @@ def paged_cache_write(cache, k_new, v_new, pos, block_table, valid=None):
     if valid is not None:
         page = jnp.where(valid, page, -1)
     off = jnp.mod(pos, ps)
+    if "k_scale" in cache:
+        qd = cache["k_pages"].dtype
+        kq, ks = kv_quantize(k_new[:, 0], qd)      # (B,Hkv,hd), (B,Hkv)
+        vq, vs = kv_quantize(v_new[:, 0], qd)
+        return {"k_pages": cache["k_pages"].at[page, off].set(kq,
+                                                              mode="drop"),
+                "v_pages": cache["v_pages"].at[page, off].set(vq,
+                                                              mode="drop"),
+                "k_scale": cache["k_scale"].at[page, off].set(ks,
+                                                              mode="drop"),
+                "v_scale": cache["v_scale"].at[page, off].set(vs,
+                                                              mode="drop")}
     k = cache["k_pages"].at[page, off].set(
         k_new[:, 0].astype(cache["k_pages"].dtype), mode="drop")
     v = cache["v_pages"].at[page, off].set(
@@ -356,11 +450,39 @@ def paged_cache_write_block(cache, k_new, v_new, pos, block_table,
     if valid is not None:
         page = jnp.where(valid, page, -1)
     off = jnp.mod(p, ps)
+    if "k_scale" in cache:
+        qd = cache["k_pages"].dtype
+        kq, ks = kv_quantize(k_new, qd)          # (B,S,Hkv,hd), (B,S,Hkv)
+        vq, vs = kv_quantize(v_new, qd)
+        return {"k_pages": cache["k_pages"].at[page, off].set(kq,
+                                                              mode="drop"),
+                "v_pages": cache["v_pages"].at[page, off].set(vq,
+                                                              mode="drop"),
+                "k_scale": cache["k_scale"].at[page, off].set(ks,
+                                                              mode="drop"),
+                "v_scale": cache["v_scale"].at[page, off].set(vs,
+                                                              mode="drop")}
     k = cache["k_pages"].at[page, off].set(
         k_new.astype(cache["k_pages"].dtype), mode="drop")
     v = cache["v_pages"].at[page, off].set(
         v_new.astype(cache["v_pages"].dtype), mode="drop")
     return {"k_pages": k, "v_pages": v}
+
+
+def gather_paged_kv(cache, block_table):
+    """Gather each row's pages into a contiguous (B, n*ps, Hkv, hd) K/V
+    view, dequantizing quantized pools (int8/fp8 + scales -> float32).
+    The XLA fallback for the paged Pallas kernel's block-table reads."""
+    P = cache["k_pages"].shape[0]
+    bt = jnp.clip(block_table, 0, P - 1)
+    B = bt.shape[0]
+    k = cache["k_pages"][bt].reshape(B, -1, *cache["k_pages"].shape[2:])
+    v = cache["v_pages"][bt].reshape(B, -1, *cache["v_pages"].shape[2:])
+    if "k_scale" in cache:
+        Hkv = cache["k_scale"].shape[-1]
+        k = kv_dequantize(k, cache["k_scale"][bt].reshape(B, -1, Hkv))
+        v = kv_dequantize(v, cache["v_scale"][bt].reshape(B, -1, Hkv))
+    return k, v
 
 
 def attn_decode_paged(params, cfg: ModelConfig, x, cache, pos, block_table,
@@ -387,12 +509,11 @@ def attn_decode_paged(params, cfg: ModelConfig, x, cache, pos, block_table,
         from repro.kernels import ops
         out = ops.paged_decode_attention(q, cache["k_pages"],
                                          cache["v_pages"], block_table,
-                                         lengths)
+                                         lengths,
+                                         k_scale=cache.get("k_scale"),
+                                         v_scale=cache.get("v_scale"))
     else:
-        P, ps = cache["k_pages"].shape[:2]
-        bt = jnp.clip(block_table, 0, P - 1)
-        k = cache["k_pages"][bt].reshape(B, -1, *cache["k_pages"].shape[2:])
-        v = cache["v_pages"][bt].reshape(B, -1, *cache["v_pages"].shape[2:])
+        k, v = gather_paged_kv(cache, block_table)
         kv_mask = jnp.arange(k.shape[1])[None, :] < lengths[:, None]
         out = sdpa(q, k, v, causal=False, kv_mask=kv_mask)
     return dense(params["wo"], out.reshape(B, 1, -1)), cache
@@ -470,10 +591,7 @@ def attn_decode_block(params, cfg: ModelConfig, x, cache, pos, *,
         assert block_table is not None, "paged cache needs a block table"
         cache = paged_cache_write_block(cache, k_new, v_new, pos,
                                         block_table, valid=valid)
-        P = cache["k_pages"].shape[0]
-        bt = jnp.clip(block_table, 0, P - 1)
-        k = cache["k_pages"][bt].reshape(B, -1, *cache["k_pages"].shape[2:])
-        v = cache["v_pages"][bt].reshape(B, -1, *cache["v_pages"].shape[2:])
+        k, v = gather_paged_kv(cache, block_table)
         kv_mask = jnp.arange(k.shape[1])[None, None, :] < \
             (positions + 1)[:, :, None]                    # (B, S, Lk)
         out = sdpa(q, k, v, causal=False, kv_mask=kv_mask)

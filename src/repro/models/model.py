@@ -57,16 +57,19 @@ class Model:
         return tf_lib.make_cache(self.cfg, batch, cache_len, dtype)
 
     def make_paged_cache(self, batch: int, cache_len: int, dtype=None, *,
-                         page_size: int, num_pages: int):
+                         page_size: int, num_pages: int,
+                         kv_dtype: str = "auto"):
         """Decode cache whose full-attention KV is a shared page pool
         (see ``transformer.make_paged_cache``). Decoder-only archs only —
-        the enc-dec cross-KV is per-request constant, not paged."""
+        the enc-dec cross-KV is per-request constant, not paged.
+        ``kv_dtype`` selects the pool storage mode (fp32/bf16/int8/fp8)."""
         dtype = dtype or self.param_dtype
         if self.cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "paged KV cache is decoder-only for now")
         return tf_lib.make_paged_cache(self.cfg, batch, cache_len, dtype,
-                                       page_size, num_pages)
+                                       page_size, num_pages,
+                                       kv_dtype=kv_dtype)
 
     def prefill(self, params: Params, tokens, cache, evidence=None, *,
                 impl: str = "xla", unroll: bool = False, lengths=None):

@@ -256,13 +256,18 @@ def make_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
 
 
 def make_paged_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
-                     page_size: int, num_pages: int):
+                     page_size: int, num_pages: int,
+                     kv_dtype: str = "auto"):
     """Decode cache with full-attention KV held as a shared page pool.
 
     Full-attention entries become batchless (num_pages, page_size, Hkv,
     hd) pools addressed through ``cache["block_table"]`` (B, n_pages);
     windowed attention / SSM / RG-LRU entries keep their dense per-slot
     state (they are already O(window/state), not O(cache_len)).
+
+    ``kv_dtype`` selects the pool storage mode (fp32/bf16/int8/fp8 —
+    see ``attention.make_paged_kv_cache``); it applies to the paged
+    pools only, dense entries stay in ``dtype``.
     """
     assert cache_len % page_size == 0, (cache_len, page_size)
     pat, n_super, tail = _pattern_split(cfg)
@@ -270,7 +275,7 @@ def make_paged_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
     def entry(kind):
         if kind == ATTN and cfg.attn_window == 0:
             return attn_lib.make_paged_kv_cache(cfg, num_pages, page_size,
-                                                dtype)
+                                                dtype, kv_dtype=kv_dtype)
         return block_cache(cfg, kind, batch, cache_len, dtype)
 
     def stack_entries(kind):

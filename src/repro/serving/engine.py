@@ -79,6 +79,7 @@ import numpy as np
 from repro.config import (ATTN, LOCAL_ATTN, CAMDConfig, PagedKVConfig,
                           SamplingConfig)
 from repro.core import controller as ctrl
+from repro.models import attention as attn_lib
 from repro.models.model import Model
 from repro.sampling.samplers import (decode_step_key, sample_token,
                                      sample_token_batch, speculative_accept)
@@ -228,7 +229,19 @@ class ServeEngine:
         # decoders only (cached pages must cover every layer's prompt KV).
         self.prefix_cache = bool(prefix_cache) and self.paged and \
             model.supports_prefix_cache
+        # KV storage dtype for the paged pool. "auto" keeps the engine's
+        # param dtype (historical behavior, byte-identical streams);
+        # int8/fp8 pools carry per-(page, slot, kv-head) scales and
+        # dequantize inside the attention kernels.
+        self.kv_dtype = paged_kv.kv_dtype
+        if not self.paged:
+            assert self.kv_dtype == "auto", \
+                f"kv_dtype={self.kv_dtype!r} needs a paged impl " \
+                "(dense caches always store the param dtype)"
         if self.paged:
+            # fail fast on unknown names / fp8-less jax builds
+            _, self.kv_quantized = attn_lib.kv_storage_dtype(
+                self.kv_dtype, model.param_dtype)
             ps = paged_kv.page_size
             assert cache_len % ps == 0, \
                 f"cache_len {cache_len} must be a multiple of page_size {ps}"
@@ -427,7 +440,8 @@ class ServeEngine:
         if self.paged:
             cache = self.model.make_paged_cache(
                 B, self.cache_len, self._dtype,
-                page_size=self.page_size, num_pages=self.pool.num_pages)
+                page_size=self.page_size, num_pages=self.pool.num_pages,
+                kv_dtype=self.kv_dtype)
             if self.dp > 1:
                 # idle slots quarantine into their OWN shard's reserved
                 # page (page 0 of each shard's id range) so dead writes
@@ -1066,27 +1080,52 @@ class ServeEngine:
         span = ps if broadcast else n * ps
         pg = jnp.asarray(pages)
 
-        def seed(pool, rk):
-            if pool.ndim == 5:        # stacked: (n_super, P, ps, Hkv, hd)
+        def seed(pool, spool, rk):
+            """Scatter the row's span into value pages; quantized pools
+            (``spool`` is the scale pool) quantize the span once and
+            scatter values + scales — broadcasting after quantization
+            keeps CoW copies bit-identical for free."""
+            stacked = pool.ndim == 5  # (n_super, P, ps, Hkv, hd)
+            if stacked:
                 seg = jax.lax.dynamic_slice_in_dim(rk[:, 0], start, span,
                                                    axis=1)
                 seg = seg.reshape(pool.shape[0], -1, *pool.shape[2:])
-                if broadcast:
-                    seg = jnp.broadcast_to(seg, (pool.shape[0], n)
-                                           + pool.shape[2:])
-                return pool.at[:, pg].set(seg.astype(pool.dtype))
-            seg = jax.lax.dynamic_slice_in_dim(rk[0], start, span, axis=0)
-            seg = seg.reshape(-1, *pool.shape[1:])
+            else:
+                seg = jax.lax.dynamic_slice_in_dim(rk[0], start, span,
+                                                   axis=0)
+                seg = seg.reshape(-1, *pool.shape[1:])
+            sseg = None
+            if spool is not None:
+                seg, sseg = attn_lib.kv_quantize(seg, pool.dtype)
             if broadcast:
-                seg = jnp.broadcast_to(seg, (n,) + pool.shape[1:])
-            return pool.at[pg].set(seg.astype(pool.dtype))
+                seg = jnp.broadcast_to(
+                    seg, (pool.shape[0], n) + pool.shape[2:] if stacked
+                    else (n,) + pool.shape[1:])
+                if sseg is not None:
+                    sseg = jnp.broadcast_to(
+                        sseg, (spool.shape[0], n) + spool.shape[2:]
+                        if stacked else (n,) + spool.shape[1:])
+            if stacked:
+                pool = pool.at[:, pg].set(seg.astype(pool.dtype))
+                if sseg is not None:
+                    spool = spool.at[:, pg].set(sseg)
+            else:
+                pool = pool.at[pg].set(seg.astype(pool.dtype))
+                if sseg is not None:
+                    spool = spool.at[pg].set(sseg)
+            return pool, spool
 
         def seed_entries(entries, row_entries):
             out = []
             for ce, re_ in zip(entries, row_entries):
                 if isinstance(ce, dict) and "k_pages" in ce:
-                    ce = {"k_pages": seed(ce["k_pages"], re_["k"]),
-                          "v_pages": seed(ce["v_pages"], re_["v"])}
+                    kp, ks = seed(ce["k_pages"], ce.get("k_scale"),
+                                  re_["k"])
+                    vp, vs = seed(ce["v_pages"], ce.get("v_scale"),
+                                  re_["v"])
+                    ce = {"k_pages": kp, "v_pages": vp}
+                    if ks is not None:
+                        ce = {**ce, "k_scale": ks, "v_scale": vs}
                 out.append(ce)
             return tuple(out)
 
@@ -1212,15 +1251,18 @@ class ServeEngine:
         stats = self.pool.stats()
 
         def bytes_per_page(leaf):
-            P = leaf.shape[1] if leaf.ndim == 5 else leaf.shape[0]
-            return leaf.size // P * leaf.dtype.itemsize
+            # every paged leaf — values and quantization scales alike —
+            # carries a num_pages axis (position depends on stacking)
+            return leaf.size // self.pool.num_pages * leaf.dtype.itemsize
 
         bpp = 0
         for entries in (self.state.cache["super"], self.state.cache["tail"]):
             for e in entries:
                 if isinstance(e, dict) and "k_pages" in e:
-                    bpp += bytes_per_page(e["k_pages"])
-                    bpp += bytes_per_page(e["v_pages"])
+                    # true resident bytes: quantized values + their
+                    # scale tensors (CoW-shared pages share both)
+                    bpp += sum(bytes_per_page(leaf) for leaf in e.values())
+        stats["kv_dtype"] = self.kv_dtype
         stats["bytes_per_page"] = bpp
         stats["resident_kv_bytes"] = stats["in_use"] * bpp
         stats["peak_kv_bytes"] = stats["max_in_use"] * bpp
@@ -1451,12 +1493,25 @@ class ServeEngine:
                 assert isinstance(e, dict) and "k_pages" in e, \
                     "prefix cache requires all-attention paged layers"
                 kp, vp = e["k_pages"], e["v_pages"]
+                ks, vs = e.get("k_scale"), e.get("v_scale")
                 if kp.ndim == 5:            # stacked: (n_super, P, ps, ..)
                     k = kp[:, idx].reshape(kp.shape[0], 1, -1, *kp.shape[3:])
                     v = vp[:, idx].reshape(vp.shape[0], 1, -1, *vp.shape[3:])
+                    if ks is not None:      # dequantize int8/fp8 pages
+                        k = attn_lib.kv_dequantize(
+                            k, ks[:, idx].reshape(ks.shape[0], 1, -1,
+                                                  *ks.shape[3:]))
+                        v = attn_lib.kv_dequantize(
+                            v, vs[:, idx].reshape(vs.shape[0], 1, -1,
+                                                  *vs.shape[3:]))
                 else:
                     k = kp[idx].reshape(1, -1, *kp.shape[2:])
                     v = vp[idx].reshape(1, -1, *vp.shape[2:])
+                    if ks is not None:
+                        k = attn_lib.kv_dequantize(
+                            k, ks[idx].reshape(1, -1, *ks.shape[2:]))
+                        v = attn_lib.kv_dequantize(
+                            v, vs[idx].reshape(1, -1, *vs.shape[2:]))
                 out.append((k, v))
             return tuple(out)
 

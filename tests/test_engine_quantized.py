@@ -1,0 +1,160 @@
+"""Quantized paged serving: storage-mode equivalences, memory accounting,
+and stream invariants the kv_dtype plumbing must preserve.
+
+- kv_dtype="fp32" on an fp32 engine is BYTE-IDENTICAL to "auto" (the
+  historical pool) — zero-tolerance modes change nothing;
+- int8 serving is macro-step- and speculation-invariant (the same
+  quantized pool state deterministically feeds every partitioning);
+- kv_stats() reports true resident bytes (values + scales) and int8
+  lands under the 0.55x-of-fp32 gate the regression harness enforces;
+- misuse fails fast (quantized dense engine, unknown names, fp8 without
+  hardware dtype support).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import _mk_engine, _submit
+from repro.config import PagedKVConfig
+from repro.models.attention import FP8_DTYPE
+
+
+def _run(model, params, cfg, *, kv_dtype, n=3, **kw):
+    kw.setdefault("impl", "paged")
+    eng = _mk_engine(model, params,
+                     paged_kv=PagedKVConfig(page_size=16, kv_dtype=kv_dtype),
+                     **kw)
+    _submit(eng, cfg, n)
+    res = sorted(eng.run(), key=lambda r: r.uid)
+    return eng, res
+
+
+def _tokens(res):
+    return [np.asarray(r.tokens) for r in res]
+
+
+def test_fp32_mode_byte_identical_to_auto(small_model):
+    """On an fp32 engine, "fp32" and "auto" resolve to the same storage —
+    the entire serve trace must be byte-identical."""
+    cfg, model, params = small_model
+    _, auto = _run(model, params, cfg, kv_dtype="auto")
+    _, fp32 = _run(model, params, cfg, kv_dtype="fp32")
+    for a, b in zip(auto, fp32):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert (a.tokens_spent, a.rounds, a.n_candidates) == \
+            (b.tokens_spent, b.rounds, b.n_candidates)
+
+
+def test_int8_macro_step_invariant(small_model):
+    """Sampled streams must not depend on macro-step partitioning under
+    quantized storage: K=1, K=4, K=16 all decode the same tokens from
+    the same int8 pool (the repo-wide fused-loop invariance, which must
+    survive quantize-on-write inside the loop body)."""
+    cfg, model, params = small_model
+    outs = [_tokens(_run(model, params, cfg, kv_dtype="int8",
+                         macro_steps=k)[1]) for k in (1, 4, 16)]
+    for other in outs[1:]:
+        for a, b in zip(outs[0], other):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_int8_end_to_end_completes_and_accounts(small_model):
+    cfg, model, params = small_model
+    eng, res = _run(model, params, cfg, kv_dtype="int8", mode="greedy")
+    assert len(res) == 3 and all(len(r.tokens) for r in res)
+    eng.pool.check()
+    assert eng.pool.in_use == 0
+    s = eng.kv_stats()
+    assert s["kv_dtype"] == "int8"
+    # scale leaves exist on-device
+    e = eng.state.cache["super"][0]
+    assert "k_scale" in e and e["k_pages"].dtype == jnp.int8
+
+
+def test_int8_resident_bytes_under_gate(small_model):
+    """The reason to quantize: true resident KV bytes (values + scale
+    tensors) at identical config must be <= 0.55x fp32 — the same bound
+    check_regression enforces on the benchmark report."""
+    cfg, model, params = small_model
+    bpp = {}
+    for kvd in ("fp32", "int8"):
+        eng, _ = _run(model, params, cfg, kv_dtype=kvd, mode="greedy", n=1)
+        bpp[kvd] = eng.kv_stats()["bytes_per_page"]
+    ratio = bpp["int8"] / bpp["fp32"]
+    # hd=64: int8 is (64 + 4 scale bytes) vs 256 fp32 bytes per token-head
+    assert ratio <= 0.55, f"int8/fp32 bytes ratio {ratio:.3f}"
+    np.testing.assert_allclose(ratio, (64 + 4) / 256, rtol=1e-6)
+
+
+def test_int8_speculative_invariant(small_model):
+    """Speculative drafting only ever commits verifier-approved tokens,
+    so spec on/off must emit identical streams — including when the
+    verifier reads a quantized pool."""
+    cfg, model, params = small_model
+    base = _tokens(_run(model, params, cfg, kv_dtype="int8", mode="greedy",
+                        macro_steps=4)[1])
+    spec = _tokens(_run(model, params, cfg, kv_dtype="int8", mode="greedy",
+                        macro_steps=4, spec_k=3)[1])
+    for a, b in zip(base, spec):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_int8_prefix_cache_serves(small_model):
+    """Prefix-cache hits under int8: cached quantized pages are shared
+    and the suffix prefill dequantizes them for context attention."""
+    cfg, model, params = small_model
+    eng = _mk_engine(model, params, impl="paged",
+                     paged_kv=PagedKVConfig(page_size=16, kv_dtype="int8"),
+                     prefix_cache=True, mode="greedy")
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(2, cfg.vocab_size, 40).astype(np.int32)
+    from repro.serving import Request
+    eng.submit(Request(uid=0, prompt=prompt))
+    eng.submit(Request(uid=1, prompt=prompt.copy()))   # full-prefix repeat
+    res = sorted(eng.run(), key=lambda r: r.uid)
+    assert len(res) == 2
+    pc = eng.kv_stats()["prefix_cache"]
+    assert pc["hits"] > 0 and pc["hit_tokens"] > 0
+    # same prompt + greedy -> same continuation through the shared pages
+    np.testing.assert_array_equal(res[0].tokens, res[1].tokens)
+
+
+def test_bf16_mode_byte_identical_on_bf16_engine():
+    """The other tolerance-0 mode: on a bf16 engine, kv_dtype="bf16"
+    resolves to the same storage as "auto" — byte-identical streams."""
+    from repro.config import ModelConfig
+    from repro.models import build_model
+    cfg = ModelConfig(name="tiny-bf16", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=64, head_dim=16, tie_embeddings=True,
+                      dtype="bfloat16")
+    model = build_model(cfg, jnp.bfloat16)
+    params = model.init(jax.random.PRNGKey(0))
+    outs = {}
+    for kvd in ("auto", "bf16"):
+        eng, res = _run(model, params, cfg, kv_dtype=kvd, n=2)
+        assert eng.state.cache["super"][0]["k_pages"].dtype == jnp.bfloat16
+        outs[kvd] = _tokens(res)
+    for a, b in zip(outs["auto"], outs["bf16"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_quantized_requires_paged():
+    from repro.config import ModelConfig
+    from repro.models import build_model
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                      head_dim=16, tie_embeddings=True, dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(AssertionError, match="paged"):
+        _mk_engine(model, params, impl="xla",
+                   paged_kv=PagedKVConfig(kv_dtype="int8"))
+    with pytest.raises(ValueError, match="kv_dtype"):
+        _mk_engine(model, params, impl="paged",
+                   paged_kv=PagedKVConfig(kv_dtype="int4"))
+    if FP8_DTYPE is None:
+        with pytest.raises(ValueError, match="fp8"):
+            _mk_engine(model, params, impl="paged",
+                       paged_kv=PagedKVConfig(kv_dtype="fp8"))
