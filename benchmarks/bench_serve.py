@@ -45,9 +45,19 @@ KV page pool on the page axis) and records throughput plus the hard
 invariant — byte-identical token streams — in a ``sharded`` section.
 Single-device runtimes record the section as skipped.
 
-Writes ``BENCH_serve.json``; ``--smoke`` runs a reduced grid for CI.
+The **open-loop scenario** serves the heavy-tailed shared-prefix
+workload through the async streaming front-end under Poisson and bursty
+arrival processes (offered at 0.7x the measured closed-loop capacity),
+recording SLO metrics — p50/p99 TTFT from scheduled arrival, p50/p99
+per-output-token latency, goodput at an adaptive TTFT SLO, and tokens/s
+at saturation — plus a cancellation cell asserting the abort path
+returns every page, slot, and byte of scheduler commitment, in an
+``open_loop`` section.
 
-  python -m benchmarks.bench_serve [--smoke]
+Writes ``BENCH_serve.json``; ``--smoke`` runs a reduced grid for CI and
+``--sections grid,open_loop`` limits the run to named sections.
+
+  python -m benchmarks.bench_serve [--smoke] [--sections a,b,...]
 """
 from __future__ import annotations
 
@@ -85,6 +95,25 @@ def _submit(eng, cfg, n, uid0=0, seed=0, plen=12):
             2, cfg.vocab_size, plen).astype(np.int32)))
 
 
+def _assert_clean(eng):
+    """Every timed cell must start from zeroed telemetry. Cells reuse
+    one warm engine (recompiling per cell would put jit time on the
+    clock), and an earlier version hand-reset an ad-hoc subset of
+    counters — sched_stats()/kv_stats() numbers silently carried over
+    from the warmup into the recorded rows. ``ServeEngine.reset_stats``
+    now owns the full counter list; this asserts nothing leaks through.
+    """
+    assert eng.total_tokens == 0 and eng.total_steps == 0
+    assert eng.macro_launches == 0 and eng.host_syncs == 0
+    assert eng.spec_drafted == 0 and eng.spec_accepted == 0
+    s = eng.sched_stats()
+    assert s["admitted_candidates"] == 0 and s["prefill_calls"] == 0
+    assert s["cancelled_requests"] == 0
+    if eng.paged:
+        k = eng.kv_stats()
+        assert k["frontier_staged"] == 0 and k["frontier_peak_stage"] == 0
+
+
 def _run_cell(cfg, model, params, *, impl, mode, macro_steps, requests,
               max_new, reps=3, page_size=16):
     """One equal-work grid cell.
@@ -118,8 +147,8 @@ def _run_cell(cfg, model, params, *, impl, mode, macro_steps, requests,
     # The max rate over identical-prompt batches is the stable statistic.
     best_rate, min_wall = 0.0, float("inf")
     for rep in range(reps):
-        eng.total_steps = eng.total_tokens = 0
-        eng.macro_launches = eng.host_syncs = 0
+        eng.reset_stats()
+        _assert_clean(eng)
         _submit(eng, cfg, requests, uid0=1000 * (rep + 1), seed=2)
         t0 = time.perf_counter()
         eng.run()
@@ -187,8 +216,8 @@ def _run_spec_cell(model, params, *, impl, spec_k, requests, max_new,
     eng.run()                                  # warmup / compile
     best_rate, min_wall, streams = 0.0, float("inf"), None
     for rep in range(reps):
-        eng.total_steps = eng.total_tokens = 0
-        eng.spec_drafted = eng.spec_accepted = 0
+        eng.reset_stats()
+        _assert_clean(eng)
         submit(1000 * (rep + 1))
         t0 = time.perf_counter()
         res = eng.run()
@@ -263,9 +292,8 @@ def _run_sharded_cell(cfg, model, params, *, impl, mesh, requests, max_new,
         macro_steps=macro_steps, mesh=mesh, seed=0)
     _submit(eng, cfg, requests, uid0=10_000, seed=1)      # warmup/compile
     eng.run()
-    eng.total_steps = eng.total_tokens = 0
-    eng.macro_launches = eng.host_syncs = 0
-    eng.scheduler.admitted_per_shard = {}     # report measured traffic only
+    eng.reset_stats()              # report measured traffic only
+    _assert_clean(eng)
     _submit(eng, cfg, requests, uid0=0, seed=2)
     t0 = time.perf_counter()
     res = eng.run()
@@ -518,10 +546,148 @@ def run_quantized_scenario(smoke: bool = False) -> dict:
             "headline": headline}
 
 
-def run(smoke: bool = False) -> dict:
+# ---------------------------------------------------------------------------
+# Open-loop scenario: SLO metrics under Poisson / bursty arrivals
+# ---------------------------------------------------------------------------
+
+def _open_loop_engine(model, params, *, max_new):
+    """Greedy paged engine for the open-loop cells. Greedy streams are
+    schedule-invariant (one deterministic candidate per request), so the
+    open-loop runs — whatever admission order the arrival process
+    produces — must reproduce the closed-loop reference streams
+    byte-for-byte. eos is out-of-vocab so every request emits exactly
+    ``max_new`` tokens (equal work across cells)."""
+    return ServeEngine(
+        model, params, slots=4, cache_len=64,
+        sampling=SamplingConfig(temperature=0.0, top_p=1.0,
+                                repetition_penalty=1.0,
+                                max_new_tokens=max_new),
+        mode="greedy", n_candidates=1, eos_id=model.cfg.vocab_size,
+        max_new_tokens=max_new,
+        impl="paged", paged_kv=PagedKVConfig(page_size=8),
+        prefix_cache=True, macro_steps=4, seed=0)
+
+
+def run_open_loop_scenario(smoke: bool = False) -> dict:
+    """Open-loop arrivals over the heavy-tailed shared-prefix workload.
+
+    A closed-loop reference run (all requests pre-staged) measures
+    capacity and pins the golden streams; open-loop cells then offer the
+    SAME requests as a Poisson and a bursty arrival process at 0.7x the
+    measured capacity (queueing counts against TTFT), plus a saturation
+    cell (every arrival at t=0) for tokens/s under full queueing and a
+    cancellation cell (a third of the clients disconnect after their
+    first streamed token) asserting the abort path leaks nothing."""
+    from repro.serving.traffic import (ARRIVALS, poisson_arrivals,
+                                       run_open_loop)
+    steps = 240 if smoke else 300
+    n_req = 10 if smoke else 16
+    max_new = 8 if smoke else 16
+    cfg, model, params = _train_chain_model(steps)
+    del cfg
+    prompts = [p for p, _ans, _k in
+               _heavy_tail_requests(ChainTask(base=CHAIN_BASE), n_req)]
+    eng = _open_loop_engine(model, params, max_new=max_new)
+
+    def reqs(uid0):
+        return [Request(uid=uid0 + i, prompt=p)
+                for i, p in enumerate(prompts)]
+
+    for r in reqs(10_000):                    # warmup / compile
+        eng.submit(r)
+    eng.run()
+    eng.reset_stats()
+    _assert_clean(eng)
+    for r in reqs(0):                         # closed-loop reference
+        eng.submit(r)
+    t0 = time.perf_counter()
+    ref = {r.uid: [int(t) for t in r.tokens] for r in eng.run()
+           if r.uid < 10_000}
+    closed_wall = time.perf_counter() - t0
+    closed_rate = n_req / max(closed_wall, 1e-9)
+    closed_tok_s = eng.total_tokens / max(closed_wall, 1e-9)
+    # adaptive SLO: 4x the closed-loop per-request wall, floored at
+    # 250ms — machine-relative, so the gate survives slow CI containers
+    slo_ms = max(250.0, 4e3 * closed_wall / n_req)
+    rate = 0.7 * closed_rate
+    rows, match_all, completed_all = [], True, True
+    for name in ("poisson", "bursty", "saturation"):
+        uid0 = {"poisson": 1000, "bursty": 2000, "saturation": 3000}[name]
+        arr = np.zeros(n_req) if name == "saturation" \
+            else ARRIVALS[name](rate, n_req, seed=11)
+        eng.reset_stats()
+        _assert_clean(eng)
+        traces, metrics = run_open_loop(eng, reqs(uid0), arr,
+                                        slo_ttft_ms=slo_ms)
+        same = all(ref[tr.uid - uid0] ==
+                   [int(t) for t in eng.result(tr.uid).tokens]
+                   for tr in traces)
+        match_all &= same
+        completed_all &= metrics["completed"] == n_req
+        rows.append({"arrival": name, "rate_rps": rate,
+                     "streams_match": same, **metrics})
+        print(f"open   {name:10s}: ttft p99 {metrics['ttft_p99_ms']:7.1f}ms"
+              f"  goodput {metrics['goodput_rps']:.2f} rps"
+              f"  {metrics['tokens_per_s']:7.1f} tok/s"
+              f"  streams {'identical' if same else 'DIVERGED'}")
+    # cancellation cell: every third client disconnects after its first
+    # streamed token; afterwards the engine must hold NOTHING beyond the
+    # resident prefix cache — no leaked pages, slots, or commitment
+    cancel_uids = tuple(4000 + i for i in range(0, n_req, 3))
+    eng.reset_stats()
+    _assert_clean(eng)
+    traces, metrics = run_open_loop(
+        eng, reqs(4000), poisson_arrivals(rate, n_req, seed=13),
+        slo_ttft_ms=slo_ms, cancel_uids=cancel_uids, cancel_after_tokens=1)
+    survivors_match = all(
+        ref[tr.uid - 4000] == [int(t) for t in eng.result(tr.uid).tokens]
+        for tr in traces if not tr.cancelled)
+    resident = len(eng.pool.prefix._nodes) if eng.pool.prefix else 0
+    eng.pool.check()
+    no_leaks = (eng.scheduler.committed == 0
+                and eng.pool.in_use == resident
+                and all(eng._slot_req[s] == -1 for s in range(eng.B))
+                and metrics["cancelled"] == len(cancel_uids))
+    match_all &= survivors_match
+    rows.append({"arrival": "poisson+cancel", "rate_rps": rate,
+                 "streams_match": survivors_match, "no_leaks": no_leaks,
+                 **metrics})
+    print(f"open   cancel    : {metrics['cancelled']} aborted, "
+          f"{'no leaks' if no_leaks else 'LEAKED STATE'}")
+    pois = rows[0]
+    return {
+        "n_requests": n_req, "max_new": max_new, "train_steps": steps,
+        "slo_ttft_ms": slo_ms, "offered_rate_rps": rate,
+        "closed_loop": {"wall_s": closed_wall,
+                        "requests_per_s": closed_rate,
+                        "tokens_per_s": closed_tok_s},
+        "rows": rows,
+        "headline": {
+            "streams_match_closed_loop": match_all,
+            "completed_all": completed_all,
+            "no_leaks_after_cancel": no_leaks,
+            "ttft_p99_ms": pois["ttft_p99_ms"],
+            "tpot_p99_ms": pois["tpot_p99_ms"],
+            "goodput_rps": pois["goodput_rps"],
+            "tokens_per_s_saturation": rows[2]["tokens_per_s"],
+            "tokens_per_s_closed": closed_tok_s,
+        },
+    }
+
+
+ALL_SECTIONS = ("grid", "speculative", "scheduler", "quantized", "sharded",
+                "open_loop")
+
+
+def run(smoke: bool = False, sections=None) -> dict:
     cfg, model, params = _bench_model()
     from benchmarks.autotune import load_tuned
     tuned = load_tuned()["serve"]
+    sections = tuple(sections) if sections else ALL_SECTIONS
+    unknown = set(sections) - set(ALL_SECTIONS)
+    if unknown:
+        raise SystemExit(f"unknown bench sections {sorted(unknown)}; "
+                         f"choose from {ALL_SECTIONS}")
     if smoke:
         impls, modes, ks = ["xla", "paged"], ["camd"], [0, 8]
         requests, max_new = 3, 16
@@ -532,81 +698,99 @@ def run(smoke: bool = False) -> dict:
     # a committed autotune artifact shifts the default operating point
     if tuned["macro_steps"] not in ks:
         ks = sorted(ks + [tuned["macro_steps"]])
-    rows = []
-    for impl in impls:
-        for mode in modes:
-            for k in ks:
-                row = _run_cell(cfg, model, params, impl=impl, mode=mode,
-                                macro_steps=k, requests=requests,
-                                max_new=max_new,
-                                page_size=tuned["page_size"])
-                rows.append(row)
-                print(f"{impl:6s} {mode:10s} K={k:<3d} "
-                      f"{row['tokens_per_s']:9.1f} tok/s  "
-                      f"{row['syncs_per_token']:.4f} syncs/tok  "
-                      f"wall {row['wall_s']:.2f}s")
-    # headline: fused-vs-legacy speedup per (impl, mode)
-    speedups = {}
-    for impl in impls:
-        for mode in modes:
-            base = next(r for r in rows if r["impl"] == impl
-                        and r["mode"] == mode and r["macro_steps"] == ks[0])
-            best = max((r for r in rows if r["impl"] == impl
-                        and r["mode"] == mode), key=lambda r: r["tokens_per_s"])
-            speedups[f"{impl}/{mode}"] = {
-                "best_k": best["macro_steps"],
-                "tokens_per_s_legacy": base["tokens_per_s"],
-                "tokens_per_s_best": best["tokens_per_s"],
-                "speedup": best["tokens_per_s"] / max(base["tokens_per_s"],
-                                                      1e-9),
-                "sync_reduction":
-                    base["syncs_per_token"] / max(best["syncs_per_token"],
-                                                  1e-9),
-            }
-    speculative = run_speculative_scenario(smoke)
-    scheduler = run_scheduler_scenario(smoke)
-    quantized = run_quantized_scenario(smoke)
-    sharded = run_sharded_scenario(smoke)
     out = {"config": {"smoke": smoke, "requests": requests,
                       "max_new": max_new, "slots": 8,
                       "page_size": tuned["page_size"],
                       "tuned": tuned,
                       "backend": jax.default_backend(),
-                      "jax_version": jax.__version__},
-           "rows": rows, "speedups": speedups,
-           "speculative": speculative,
-           "scheduler": scheduler, "quantized": quantized,
-           "sharded": sharded}
+                      "jax_version": jax.__version__,
+                      "sections": list(sections)}}
+    rows = []
+    if "grid" in sections:
+        for impl in impls:
+            for mode in modes:
+                for k in ks:
+                    row = _run_cell(cfg, model, params, impl=impl,
+                                    mode=mode, macro_steps=k,
+                                    requests=requests, max_new=max_new,
+                                    page_size=tuned["page_size"])
+                    rows.append(row)
+                    print(f"{impl:6s} {mode:10s} K={k:<3d} "
+                          f"{row['tokens_per_s']:9.1f} tok/s  "
+                          f"{row['syncs_per_token']:.4f} syncs/tok  "
+                          f"wall {row['wall_s']:.2f}s")
+        # headline: fused-vs-legacy speedup per (impl, mode)
+        speedups = {}
+        for impl in impls:
+            for mode in modes:
+                base = next(r for r in rows if r["impl"] == impl
+                            and r["mode"] == mode
+                            and r["macro_steps"] == ks[0])
+                best = max((r for r in rows if r["impl"] == impl
+                            and r["mode"] == mode),
+                           key=lambda r: r["tokens_per_s"])
+                speedups[f"{impl}/{mode}"] = {
+                    "best_k": best["macro_steps"],
+                    "tokens_per_s_legacy": base["tokens_per_s"],
+                    "tokens_per_s_best": best["tokens_per_s"],
+                    "speedup": best["tokens_per_s"]
+                    / max(base["tokens_per_s"], 1e-9),
+                    "sync_reduction":
+                        base["syncs_per_token"]
+                        / max(best["syncs_per_token"], 1e-9),
+                }
+        out["rows"], out["speedups"] = rows, speedups
+    if "speculative" in sections:
+        out["speculative"] = run_speculative_scenario(smoke)
+    if "scheduler" in sections:
+        out["scheduler"] = run_scheduler_scenario(smoke)
+    if "quantized" in sections:
+        out["quantized"] = run_quantized_scenario(smoke)
+    if "sharded" in sections:
+        out["sharded"] = run_sharded_scenario(smoke)
+    if "open_loop" in sections:
+        out["open_loop"] = run_open_loop_scenario(smoke)
     with open("BENCH_serve.json", "w") as f:
         json.dump(out, f, indent=2)
     print("wrote BENCH_serve.json")
     # cross-cell comparability: every grid cell must have completed the
     # same token work, or tokens/sec columns are not comparable
-    for mode in modes:
+    for mode in (modes if "grid" in sections else []):
         per_mode = {r["tokens"] for r in rows if r["mode"] == mode}
         assert len(per_mode) == 1, \
             f"unequal completed-token work across {mode} cells: {per_mode}"
     if smoke:
-        # CI sanity: the fused path must actually amortize host syncs
+        _smoke_asserts(out)
+    return out
+
+
+def _smoke_asserts(out: dict) -> None:
+    """CI sanity on whichever sections ran."""
+    if "rows" in out:
+        rows = out["rows"]
+        # the fused path must actually amortize host syncs
         fused = [r for r in rows if r["macro_steps"] >= 8]
         legacy = [r for r in rows if r["macro_steps"] == 0]
         assert all(r["tokens"] > 0 for r in rows)
         assert min(f["syncs_per_token"] for f in fused) < \
             min(l["syncs_per_token"] for l in legacy), \
             "macro-step loop did not reduce host syncs per token"
+    if "speculative" in out:
         # speculation must not change greedy output, and must actually
         # pay for its verify width on the shared-prefix workload
-        sh = speculative["headline"]
+        sh = out["speculative"]["headline"]
         assert sh["equal_outputs"], "speculative greedy streams diverged"
         for impl in ("xla", "paged"):
             assert sh[f"speedup_{impl}"] >= 1.5, \
                 f"speculative speedup below 1.5x on {impl}: " \
                 f"{sh[f'speedup_{impl}']:.2f}"
-        # ... and at equal budget, coverage-aware traffic scheduling must
+    if "scheduler" in out:
+        # at equal budget, coverage-aware traffic scheduling must
         # match-or-beat fifo on quality (one request of sampling slack —
         # the trained-LM comparison is stochastic and CI's jax is
         # unpinned) while spending strictly fewer tokens per served easy
         # request, with the prefix cache actually reusing KV
+        scheduler = out["scheduler"]
         h = scheduler["headline"]
         slack = 1.0 / scheduler["n_requests"]
         assert h["accuracy_coverage"] + slack >= h["accuracy_fifo"], h
@@ -615,21 +799,35 @@ def run(smoke: bool = False) -> dict:
                    if r["policy"] == "coverage")
         assert cov["prefix_cache"]["hits"] > 0
         assert cov["total_tokens"] <= scheduler["equal_budget"]
+    if "quantized" in out:
         # quantized KV: fp32 mode is a byte-identical no-op, int8 halves
         # (better) resident bytes and keeps oracle accuracy
-        qh = quantized["headline"]
+        qh = out["quantized"]["headline"]
         assert qh["fp32_identical_to_auto"], \
             "kv_dtype=fp32 changed the serve trace on an fp32 engine"
         assert qh["bytes_ratio_int8"] <= 0.55, qh
-        q_slack = 1.0 / quantized["n_requests"]
+        q_slack = 1.0 / out["quantized"]["n_requests"]
         assert qh["accuracy_delta_int8"] <= q_slack, qh
-        # ... and when the runtime has a mesh to shard over, sharding
-        # must be a pure placement decision: byte-identical streams
-        if "skipped" not in sharded:
-            assert sharded["streams_identical"], sharded
-    return out
+    if "sharded" in out and "skipped" not in out["sharded"]:
+        # when the runtime has a mesh to shard over, sharding must be a
+        # pure placement decision: byte-identical streams
+        assert out["sharded"]["streams_identical"], out["sharded"]
+    if "open_loop" in out:
+        # open-loop arrivals reorder admission but greedy streams are
+        # schedule-invariant; cancellation must leak nothing
+        oh = out["open_loop"]["headline"]
+        assert oh["streams_match_closed_loop"], oh
+        assert oh["completed_all"], oh
+        assert oh["no_leaks_after_cancel"], oh
 
 
 if __name__ == "__main__":
-    import sys
-    run(smoke="--smoke" in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sections", default=None,
+                    help="comma list from %s (default: all)"
+                    % ",".join(ALL_SECTIONS))
+    a = ap.parse_args()
+    run(smoke=a.smoke,
+        sections=a.sections.split(",") if a.sections else None)

@@ -28,11 +28,23 @@ against the committed ``BENCH_baseline.json`` and exits non-zero when:
     oracle accuracy must stay within one request of fp32 — all
     within-run and deterministic, so never version-skew-skipped;
   * the sharded scenario ran (multi-device lane) and the single-device
-    vs mesh token streams were not byte-identical.
+    vs mesh token streams were not byte-identical;
+  * the open-loop scenario's deterministic invariants break — open-loop
+    token streams must match the closed-loop reference byte-for-byte,
+    every offered request must complete, and the cancellation cell must
+    leak zero pages/slots/commitment — or (wall-clock, skippable) its
+    saturation tokens/s drops more than ``--tol`` vs baseline.
 
 ``--skip-throughput`` drops the wall-clock checks — used by the forced
 multi-device CI lane, whose 8 host devices oversubscribe the runner's
 cores (its job is the identity + conservation gate, not perf).
+``--sections a,b`` restricts the gate to named sections (a lane that
+only ran ``bench_serve --sections grid,open_loop`` gates only those);
+by default the gate covers whatever sections the current report
+declares it ran, or all known sections for pre-section reports.
+
+A section the gate expects but the report lacks is an actionable error
+(naming the section and the regeneration command), not a KeyError.
 
   python benchmarks/check_regression.py [current] [baseline]
 """
@@ -42,15 +54,57 @@ import argparse
 import json
 import sys
 
+ALL_SECTIONS = ("grid", "speculative", "scheduler", "quantized", "sharded",
+                "open_loop")
+
+REGEN = ("PYTHONPATH=src python -m benchmarks.bench_serve --smoke && "
+         "cp BENCH_serve.json BENCH_baseline.json")
+
 
 def _cells(report):
     return {(r["impl"], r["mode"], r["macro_steps"]): r
             for r in report.get("rows", [])}
 
 
-def check(cur: dict, base: dict, *, tol: float,
-          skip_throughput: bool) -> list:
+def _missing(which, what):
+    return (f"{what} missing from the {which} report — stale or partial "
+            f"benchmark file; regenerate with: {REGEN}")
+
+
+def _section(report, name, which, errors):
+    """The named section, or None after recording an actionable error
+    (replaces the bare KeyError a stale baseline used to raise)."""
+    sec = report.get(name)
+    if not isinstance(sec, dict):
+        errors.append(_missing(which, f"'{name}' section"))
+        return None
+    return sec
+
+
+def _head(report, name, which, errors):
+    sec = _section(report, name, which, errors)
+    if sec is None or "skipped" in sec:
+        return sec
+    head = sec.get("headline")
+    if not isinstance(head, dict):
+        errors.append(_missing(which, f"'{name}' section headline"))
+        return None
+    return head
+
+
+def _key(d, key, where, errors, default=None):
+    if key not in d:
+        errors.append(_missing("current", f"'{key}' in the {where}"))
+        return default
+    return d[key]
+
+
+def check(cur: dict, base: dict, *, tol: float, skip_throughput: bool,
+          sections=None) -> list:
     errors = []
+    if sections is None:
+        sections = tuple(cur.get("config", {}).get("sections")
+                         or ALL_SECTIONS)
 
     # wall-clock comparisons only mean something within one jax/XLA
     # generation — the matrix's floor lane matches the baseline's
@@ -67,101 +121,135 @@ def check(cur: dict, base: dict, *, tol: float,
               f"{base_v} (deterministic gates still apply)")
         skip_throughput = True
 
-    cur_cells, base_cells = _cells(cur), _cells(base)
-    for key in sorted(set(cur_cells) & set(base_cells)):
-        c, b = cur_cells[key], base_cells[key]
-        if not skip_throughput and \
-                c["tokens_per_s"] < (1.0 - tol) * b["tokens_per_s"]:
-            errors.append(
-                f"throughput regression in {key}: "
-                f"{c['tokens_per_s']:.1f} tok/s vs baseline "
-                f"{b['tokens_per_s']:.1f} (tolerance {tol:.0%})")
-        # sync amortization is near-deterministic (token streams — and so
-        # completion-boundary syncs — shift slightly across jax
-        # versions); 1.5x headroom still catches the loop de-fusing
-        if c["macro_steps"] >= 8 and \
-                c["syncs_per_token"] > b["syncs_per_token"] * 1.5 + 1e-9:
-            errors.append(
-                f"host-sync regression in {key}: "
-                f"{c['syncs_per_token']:.4f} syncs/token vs baseline "
-                f"{b['syncs_per_token']:.4f}")
-
-    # the fused macro-step loop must win over the per-token loop on the
-    # paged path: best_k == 0 means the refactor's core claim regressed
-    for name, sp in sorted(cur.get("speedups", {}).items()):
-        if skip_ratios:
-            break
-        if name.startswith("paged/") and sp.get("best_k", 0) == 0:
-            errors.append(
-                f"paged macro-step loop lost to the per-token loop in "
-                f"{name}: best_k == 0 "
-                f"({sp['tokens_per_s_best']:.1f} tok/s fused-best vs "
-                f"{sp['tokens_per_s_legacy']:.1f} legacy)")
-
-    spec = cur.get("speculative", {})
-    spec_head = spec.get("headline")
-    if spec_head is None:
-        errors.append("speculative section missing from current report")
-    else:
-        if not spec_head.get("equal_outputs", False):
-            errors.append("speculative greedy streams diverged from "
-                          "spec-off streams")
-        for impl in ("xla", "paged"):
-            s = spec_head.get(f"speedup_{impl}")
-            if s is None:
-                errors.append(f"speculative section has no {impl} row")
-            elif not skip_ratios and s < 1.5:
+    if "grid" in sections:
+        if "rows" not in cur:
+            errors.append(_missing("current", "'rows' grid section"))
+        cur_cells, base_cells = _cells(cur), _cells(base)
+        for key in sorted(set(cur_cells) & set(base_cells)):
+            c, b = cur_cells[key], base_cells[key]
+            if not skip_throughput and \
+                    c["tokens_per_s"] < (1.0 - tol) * b["tokens_per_s"]:
                 errors.append(
-                    f"speculative decode speedup below 1.5x on {impl}: "
-                    f"{s:.2f}x")
+                    f"throughput regression in {key}: "
+                    f"{c['tokens_per_s']:.1f} tok/s vs baseline "
+                    f"{b['tokens_per_s']:.1f} (tolerance {tol:.0%})")
+            # sync amortization is near-deterministic (token streams —
+            # and so completion-boundary syncs — shift slightly across
+            # jax versions); 1.5x headroom still catches de-fusing
+            if c["macro_steps"] >= 8 and \
+                    c["syncs_per_token"] > b["syncs_per_token"] * 1.5 + 1e-9:
+                errors.append(
+                    f"host-sync regression in {key}: "
+                    f"{c['syncs_per_token']:.4f} syncs/token vs baseline "
+                    f"{b['syncs_per_token']:.4f}")
 
-    sched = cur.get("scheduler", {})
-    head = sched.get("headline")
-    if head is None:
-        errors.append("scheduler section missing from current report")
-    else:
-        slack = 1.0 / max(sched.get("n_requests", 1), 1)
-        if head["accuracy_coverage"] + slack < head["accuracy_fifo"]:
-            errors.append(
-                f"coverage-vs-fifo accuracy win disappeared: "
-                f"{head['accuracy_coverage']:.3f} + {slack:.3f} slack < "
-                f"{head['accuracy_fifo']:.3f}")
-        if head["easy_per_served_coverage"] >= head["easy_per_served_fifo"]:
-            errors.append(
-                "coverage no longer spends fewer tokens per served easy "
-                f"request ({head['easy_per_served_coverage']:.2f} >= "
-                f"{head['easy_per_served_fifo']:.2f})")
+        # the fused macro-step loop must win over the per-token loop on
+        # the paged path: best_k == 0 means the core claim regressed
+        for name, sp in sorted(cur.get("speedups", {}).items()):
+            if skip_ratios:
+                break
+            if name.startswith("paged/") and sp.get("best_k", 0) == 0:
+                errors.append(
+                    f"paged macro-step loop lost to the per-token loop in "
+                    f"{name}: best_k == 0 "
+                    f"({sp.get('tokens_per_s_best', 0.0):.1f} tok/s "
+                    f"fused-best vs "
+                    f"{sp.get('tokens_per_s_legacy', 0.0):.1f} legacy)")
 
-    quant = cur.get("quantized", {})
-    q_head = quant.get("headline")
-    if q_head is None:
-        errors.append("quantized section missing from current report")
-    else:
-        # all three gates are within-run and deterministic, so they
-        # apply regardless of jax version skew or --skip-throughput
-        if not q_head.get("fp32_identical_to_auto", False):
-            errors.append("kv_dtype=fp32 is no longer byte-identical to "
-                          "auto on the fp32 bench engine")
-        ratio = q_head.get("bytes_ratio_int8", 1.0)
-        if ratio > 0.55:
-            errors.append(
-                f"resident_kv_bytes gate: int8 pages cost {ratio:.3f}x "
-                f"fp32 at equal config (gate: <= 0.55x)")
-        q_slack = 1.0 / max(quant.get("n_requests", 1), 1)
-        delta = q_head.get("accuracy_delta_int8", 1.0)
-        if delta > q_slack:
-            errors.append(
-                f"int8 KV quantization costs oracle accuracy: "
-                f"fp32 {q_head.get('accuracy_fp32'):.3f} -> int8 "
-                f"{q_head.get('accuracy_int8'):.3f} "
-                f"(delta {delta:.3f} > {q_slack:.3f} slack)")
+    if "speculative" in sections:
+        spec_head = _head(cur, "speculative", "current", errors)
+        if spec_head is not None:
+            if not spec_head.get("equal_outputs", False):
+                errors.append("speculative greedy streams diverged from "
+                              "spec-off streams")
+            for impl in ("xla", "paged"):
+                s = spec_head.get(f"speedup_{impl}")
+                if s is None:
+                    errors.append(f"speculative section has no {impl} row")
+                elif not skip_ratios and s < 1.5:
+                    errors.append(
+                        f"speculative decode speedup below 1.5x on {impl}: "
+                        f"{s:.2f}x")
 
-    sharded = cur.get("sharded", {})
-    if "skipped" in sharded:
-        print(f"sharded scenario skipped: {sharded['skipped']}")
-    elif not sharded.get("streams_identical", False):
-        errors.append("sharded serving diverged from single-device "
-                      "token streams")
+    if "scheduler" in sections:
+        sched = cur.get("scheduler", {})
+        head = _head(cur, "scheduler", "current", errors)
+        if head is not None:
+            slack = 1.0 / max(sched.get("n_requests", 1), 1)
+            acc_cov = _key(head, "accuracy_coverage",
+                           "scheduler headline", errors, 0.0)
+            acc_fifo = _key(head, "accuracy_fifo",
+                            "scheduler headline", errors, 0.0)
+            eps_cov = _key(head, "easy_per_served_coverage",
+                           "scheduler headline", errors, 0.0)
+            eps_fifo = _key(head, "easy_per_served_fifo",
+                            "scheduler headline", errors, 0.0)
+            if acc_cov + slack < acc_fifo:
+                errors.append(
+                    f"coverage-vs-fifo accuracy win disappeared: "
+                    f"{acc_cov:.3f} + {slack:.3f} slack < {acc_fifo:.3f}")
+            if eps_cov >= eps_fifo:
+                errors.append(
+                    "coverage no longer spends fewer tokens per served "
+                    f"easy request ({eps_cov:.2f} >= {eps_fifo:.2f})")
+
+    if "quantized" in sections:
+        quant = cur.get("quantized", {})
+        q_head = _head(cur, "quantized", "current", errors)
+        if q_head is not None:
+            # all three gates are within-run and deterministic, so they
+            # apply regardless of jax version skew or --skip-throughput
+            if not q_head.get("fp32_identical_to_auto", False):
+                errors.append("kv_dtype=fp32 is no longer byte-identical "
+                              "to auto on the fp32 bench engine")
+            ratio = q_head.get("bytes_ratio_int8", 1.0)
+            if ratio > 0.55:
+                errors.append(
+                    f"resident_kv_bytes gate: int8 pages cost {ratio:.3f}x "
+                    f"fp32 at equal config (gate: <= 0.55x)")
+            q_slack = 1.0 / max(quant.get("n_requests", 1), 1)
+            delta = q_head.get("accuracy_delta_int8", 1.0)
+            if delta > q_slack:
+                errors.append(
+                    f"int8 KV quantization costs oracle accuracy: "
+                    f"fp32 {q_head.get('accuracy_fp32', 0.0):.3f} -> int8 "
+                    f"{q_head.get('accuracy_int8', 0.0):.3f} "
+                    f"(delta {delta:.3f} > {q_slack:.3f} slack)")
+
+    if "sharded" in sections:
+        sharded = _section(cur, "sharded", "current", errors)
+        if sharded is not None:
+            if "skipped" in sharded:
+                print(f"sharded scenario skipped: {sharded['skipped']}")
+            elif not sharded.get("streams_identical", False):
+                errors.append("sharded serving diverged from single-device "
+                              "token streams")
+
+    if "open_loop" in sections:
+        o_head = _head(cur, "open_loop", "current", errors)
+        if o_head is not None:
+            # deterministic invariants: greedy streams are schedule-
+            # invariant, so open-loop admission order must not change a
+            # single token; cancels must refund everything
+            if not o_head.get("streams_match_closed_loop", False):
+                errors.append("open-loop token streams diverged from the "
+                              "closed-loop reference")
+            if not o_head.get("completed_all", False):
+                errors.append("open-loop run did not complete every "
+                              "offered request")
+            if not o_head.get("no_leaks_after_cancel", False):
+                errors.append("open-loop cancellation cell leaked pages, "
+                              "slots, or scheduler commitment")
+            b_head = base.get("open_loop", {}).get("headline")
+            if not skip_throughput and b_head is not None:
+                c_sat = _key(o_head, "tokens_per_s_saturation",
+                             "open_loop headline", errors, 0.0)
+                b_sat = b_head.get("tokens_per_s_saturation", 0.0)
+                if c_sat < (1.0 - tol) * b_sat:
+                    errors.append(
+                        f"open-loop saturation throughput regression: "
+                        f"{c_sat:.1f} tok/s vs baseline {b_sat:.1f} "
+                        f"(tolerance {tol:.0%})")
     return errors
 
 
@@ -173,6 +261,9 @@ def main(argv=None) -> int:
                     help="allowed fractional throughput drop (default 0.20)")
     ap.add_argument("--skip-throughput", action="store_true",
                     help="skip wall-clock gates (forced-multi-device lane)")
+    ap.add_argument("--sections", default=None,
+                    help="comma list of sections to gate (default: the "
+                         "sections the current report declares it ran)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -180,8 +271,16 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         base = json.load(f)
 
+    sections = tuple(args.sections.split(",")) if args.sections else None
+    if sections:
+        unknown = set(sections) - set(ALL_SECTIONS)
+        if unknown:
+            print(f"unknown sections {sorted(unknown)}; "
+                  f"choose from {ALL_SECTIONS}")
+            return 2
+
     errors = check(cur, base, tol=args.tol,
-                   skip_throughput=args.skip_throughput)
+                   skip_throughput=args.skip_throughput, sections=sections)
     if errors:
         print("BENCH REGRESSION GATE FAILED:")
         for e in errors:

@@ -2,6 +2,11 @@
 
     python -m repro.launch.serve --arch qwen3-0.6b --reduced --mode camd \
         --requests 8 --impl paged --page-size 16
+
+``--open-loop`` serves the same requests through the async streaming
+front-end as a timed arrival process (``--arrival poisson|bursty`` at
+``--arrival-rate`` rps) and prints SLO metrics — TTFT/TPOT percentiles
+and goodput at the ``--slo-ms`` TTFT SLO — instead of batch results.
 """
 import argparse
 
@@ -78,6 +83,18 @@ def main():
                     help="disable length-bucketed batched prefill")
     ap.add_argument("--prefill-bucket-min", type=int, default=16,
                     help="smallest power-of-two prompt bucket")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="serve through the async streaming front-end "
+                         "with timed arrivals instead of a pre-staged "
+                         "batch, and report SLO metrics (TTFT/TPOT "
+                         "percentiles, goodput); needs --macro-steps >= 1")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty"],
+                    help="open-loop arrival process")
+    ap.add_argument("--arrival-rate", type=float, default=8.0,
+                    help="open-loop offered load, requests/s")
+    ap.add_argument("--slo-ms", type=float, default=500.0,
+                    help="TTFT SLO for the goodput metric, milliseconds")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -121,14 +138,46 @@ def main():
         spec_mode=args.spec_mode,
         seed=args.seed)
     rng = np.random.default_rng(args.seed)
-    for i in range(args.requests):
+
+    def mk_request(i):
         prompt = rng.integers(2, cfg.vocab_size, size=8).astype(np.int32)
         ev = None
         if cfg.num_evidence_tokens:
             ev = rng.standard_normal(
                 (cfg.num_evidence_tokens, cfg.evidence_dim)).astype(np.float32)
-        eng.submit(Request(uid=i, prompt=prompt, evidence=ev))
-    for r in eng.run():
+        return Request(uid=i, prompt=prompt, evidence=ev)
+
+    if args.open_loop:
+        from repro.serving.traffic import ARRIVALS, run_open_loop
+        if args.macro_steps < 1:
+            raise SystemExit("--open-loop drives the fused macro-step "
+                             "loop; use --macro-steps >= 1")
+        reqs = [mk_request(i) for i in range(args.requests)]
+        arrivals = ARRIVALS[args.arrival](
+            args.arrival_rate, args.requests, seed=args.seed)
+        traces, metrics = run_open_loop(eng, reqs, arrivals,
+                                        slo_ttft_ms=args.slo_ms)
+        for tr in traces:
+            print(f"req {tr.uid}: arrival {tr.t_arrival * 1e3:7.1f}ms  "
+                  f"ttft {(tr.t_first - tr.t_arrival) * 1e3:7.1f}ms  "
+                  f"tokens={tr.n_tokens}")
+        print(f"open loop [{args.arrival} @ {args.arrival_rate:.1f} rps]: "
+              f"{metrics['completed']} completed over "
+              f"{metrics['span_s']:.2f}s")
+        print(f"  ttft p50/p99 {metrics['ttft_p50_ms']:.1f}/"
+              f"{metrics['ttft_p99_ms']:.1f} ms   "
+              f"tpot p50/p99 {metrics['tpot_p50_ms']:.1f}/"
+              f"{metrics['tpot_p99_ms']:.1f} ms")
+        print(f"  goodput {metrics['goodput_rps']:.2f} rps at "
+              f"{args.slo_ms:.0f}ms TTFT SLO "
+              f"({metrics['good_requests']}/{metrics['completed']}), "
+              f"{metrics['tokens_per_s']:.1f} tok/s")
+        results = []
+    else:
+        for i in range(args.requests):
+            eng.submit(mk_request(i))
+        results = eng.run()
+    for r in results:
         print(f"req {r.uid}: candidates={r.n_candidates} rounds={r.rounds} "
               f"tokens={r.tokens_spent} p*={r.p_star:.3f} "
               f"early={r.stopped_early} out={r.tokens[:8].tolist()}")

@@ -1,7 +1,11 @@
 from repro.serving.engine import EngineState, Request, Result, ServeEngine  # noqa: F401
+from repro.serving.frontend import AsyncServeFrontend  # noqa: F401
 from repro.serving.page_pool import (PagePool, PagePoolError,  # noqa: F401
                                      PrefixCache, prefix_page_keys)
 from repro.serving.scheduler import (CoverageScheduler,  # noqa: F401
                                      FifoScheduler, NewWork, RoundWork,
                                      Scheduler, SchedulerContext,
                                      make_scheduler)
+from repro.serving.traffic import (RequestTrace, bursty_arrivals,  # noqa: F401
+                                   drive_open_loop, poisson_arrivals,
+                                   run_open_loop, slo_metrics)

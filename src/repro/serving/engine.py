@@ -111,6 +111,7 @@ class Result:
     best_score: float
     stopped_early: bool
     candidates: List[Dict[str, Any]]        # per-candidate records
+    cancelled: bool = False                 # aborted via ServeEngine.cancel
 
 
 # ---------------------------------------------------------------------------
@@ -360,6 +361,18 @@ class ServeEngine:
         # speculation telemetry: drafts proposed / drafts accepted
         self.spec_drafted = 0
         self.spec_accepted = 0
+        # async front-end plumbing: opt-in per-launch token streaming
+        # (readbacks ride the launch sync — no extra host syncs), a
+        # completion feed the front-end drains between launches, and
+        # request-level cancellation applied at step boundaries.
+        self.stream_tokens = False
+        self.stream_events: List[Tuple[int, int, np.ndarray]] = []
+        self._slot_streamed = np.zeros(self.B, np.int64)
+        self._newly_done: List[int] = []
+        self._cancels: set = set()
+        self.cancelled_requests = 0
+        # evidence rows staged for the next launch (set by _begin)
+        self._evid = None
 
     # ------------------------------------------------------------------
     # mesh placement
@@ -1283,12 +1296,56 @@ class ServeEngine:
 
     def sched_stats(self) -> Dict[str, Any]:
         """Traffic-policy telemetry: budget accounting, admissions,
-        declined rounds, starvation."""
+        declined rounds, starvation, cancellations."""
         s = dict(self.scheduler.stats())
         s["starved"] = len(self.starved_uids)
         s["prefill_calls"] = self.prefill_calls
         s["prefill_tokens"] = self.prefill_tokens
+        s["cancelled_requests"] = self.cancelled_requests
         return s
+
+    def reset_stats(self) -> None:
+        """Zero telemetry for engine reuse across bench cells/scenarios
+        — without this, ``sched_stats``/``kv_stats`` counters (prefix
+        hits, host syncs, spec telemetry, frontier peaks) accumulate
+        across runs and pollute later cells. Serving state — request
+        table, budget ledgers (``spent``/``committed``), prefix-cache
+        contents, the decode-key position ``_t`` — is untouched: this
+        resets what the engine *reports*, never what it *decides*."""
+        self.total_steps = 0
+        self.total_tokens = 0
+        self.macro_launches = 0
+        self.host_syncs = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.prefill_calls = 0
+        self.prefill_tokens = 0
+        self.cancelled_requests = 0
+        self.starved_uids.clear()
+        self.scheduler.reset_stats()
+        if self.paged:
+            self.pool.reset_stats()
+
+    # -- async front-end hooks -----------------------------------------
+    def has_work(self) -> bool:
+        """Anything live, queued, or pending a round."""
+        return self._any_live() or self._has_pending()
+
+    def drain_stream_events(self) -> List[Tuple[int, int, np.ndarray]]:
+        """Token deltas ``(uid, cand_uid, tokens)`` emitted since the
+        last drain (requires ``stream_tokens = True``)."""
+        ev, self.stream_events = self.stream_events, []
+        return ev
+
+    def pop_finished(self) -> List[int]:
+        """Uids finalized since the last call (completion + cancel)."""
+        done, self._newly_done = self._newly_done, []
+        return done
+
+    def result(self, uid: int) -> Result:
+        """Public per-request result accessor (the async front-end's
+        completion path; ``run`` returns the same objects in bulk)."""
+        return self._result(uid)
 
     def _admit(self, req: Request, slot_ids: List[int],
                limit: Optional[int] = None):
@@ -1374,6 +1431,7 @@ class ServeEngine:
             self._slot_cand[s] = self._next_cand
             self._slot_lim[s] = lim
             self._slot_spec[s] = k_eff
+            self._slot_streamed[s] = 0
             info["cand_slots"].append((self._next_cand, s))
             self._next_cand += 1
         if self.dp > 1:
@@ -1420,6 +1478,20 @@ class ServeEngine:
             temb = temb / (jnp.linalg.norm(temb, axis=-1, keepdims=True) + 1e-8)
             sim = temb @ evn.T                               # (L, Ne)
             info["align_const"] = float(jnp.mean(jnp.max(sim, axis=-1)))
+            # difficulty prior for the traffic scheduler: normalized
+            # entropy of each prompt token's evidence attachment. A
+            # peaked attachment (every token clearly grounded in one
+            # evidence item) reads easy; a diffuse one marks grounding
+            # ambiguity — the kind of instance CAMD's heavy tail is made
+            # of. Costs one host float beside align_const, at prefill.
+            ne_ev = int(evn.shape[0])
+            if ne_ev > 1:
+                p_att = jax.nn.softmax(sim, axis=-1)
+                ent = -jnp.sum(p_att * jnp.log(p_att + 1e-9), axis=-1)
+                info["evidence_entropy"] = \
+                    float(jnp.mean(ent)) / float(np.log(ne_ev))
+            else:
+                info["evidence_entropy"] = 0.0
         else:
             info["evid_row"] = jnp.zeros((1, 1, self.d), jnp.float32)
         self._reqs[req.uid] = info
@@ -1784,6 +1856,9 @@ class ServeEngine:
         info["cache_row"] = None          # free the prompt cache
         if self.paged and info.get("prompt_pages"):
             self.pool.free(info.pop("prompt_pages"))
+        # completion feed for the async front-end (drained via
+        # pop_finished; harmless growth under synchronous run)
+        self._newly_done.append(uid)
 
     # ------------------------------------------------------------------
     def _has_pending(self) -> bool:
@@ -1844,54 +1919,224 @@ class ServeEngine:
     def run(self) -> List[Result]:
         if self.macro_steps <= 0:
             return self._run_legacy()
+        self._begin()
+        while self._step():
+            pass
+        return [self._result(uid) for uid in self._reqs]
+
+    def _begin(self):
+        """Admission pass + evidence-row staging before stepping."""
         self._schedule()
         evid = jnp.zeros((self.B, 1, self.d), jnp.float32)
         if self._evid_sharding is not None:
             evid = jax.device_put(evid, self._evid_sharding)
         if self.has_evidence:
             evid = self._gather_evid()
-        while True:
-            if not self._any_live():
-                if self._refill_idle():
-                    break
-                if self.has_evidence:
-                    evid = self._gather_evid()
+        self._evid = evid
+
+    def _step(self) -> bool:
+        """One fused-loop serving iteration: refill when idle, otherwise
+        stage the frontier, run one macro launch and fold its results
+        (cancellations first, then token streaming, frontier reclaim,
+        finished candidates). Returns False when all work is drained —
+        this is the old ``run`` loop body verbatim, extracted so the
+        async front-end can drive the engine launch-by-launch."""
+        if not self._any_live():
+            if self._refill_idle():
+                return False
+            if self.has_evidence:
+                self._evid = self._gather_evid()
+            return True
+        staged, frontier = (self._stage_frontier() if self.paged
+                            else (None, self._dummy_frontier))
+        if self._frontier_sharding is not None:
+            frontier = jax.device_put(frontier, self._frontier_sharding)
+        self._reshard()
+        if self.spec:
+            self.state, done, steps, nd, na = self._macro_fn(
+                self.params, self.state, self._decode_key,
+                jnp.int32(self._t), self._evid, frontier)
+        else:
+            self.state, done, steps = self._macro_fn(
+                self.params, self.state, self._decode_key,
+                jnp.int32(self._t), self._evid, frontier)
+        self.macro_launches += 1
+        # ONE host sync per launch: cancellation emission counts and
+        # streaming readbacks ride the tuple the fold already needs
+        tree = [done, self.state.cache["pos"], steps]
+        if self.spec:
+            tree += [nd, na]
+        want_ntok = self.stream_tokens or bool(self._cancels)
+        if want_ntok:
+            tree.append(self.state.n_tok)
+        if self.stream_tokens:
+            tree.append(self.state.out_buf)
+        vals = self._sync(tuple(tree))
+        done_np, pos_np, steps_np = vals[0], vals[1], vals[2]
+        k = 3
+        if self.spec:
+            self.spec_drafted += int(vals[3])
+            self.spec_accepted += int(vals[4])
+            k = 5
+        ntok_np = vals[k] if want_ntok else None
+        out_np = vals[k + 1] if self.stream_tokens else None
+        steps_n = int(steps_np)
+        self.total_steps += steps_n
+        # each speculative iteration consumes spec_k fold-in keys
+        self._t += steps_n * (self.spec_k if self.spec else 1)
+        cancelled = self._apply_cancels(staged, ntok_np) \
+            if self._cancels else False
+        if self.stream_tokens:
+            self._emit_stream(ntok_np, out_np)
+        if self.paged:
+            self._reclaim_frontier(staged, pos_np)
+        done_slots = [int(s) for s in np.nonzero(done_np)[0]
+                      if self._slot_req[s] >= 0]
+        if done_slots or cancelled:
+            if done_slots:
+                self._finish_candidates(done_slots)
+            self._schedule()
+            if self.has_evidence:
+                self._evid = self._gather_evid()
+        return True
+
+    def pump(self) -> bool:
+        """Drive ONE serving iteration (the async front-end's hook).
+
+        Unlike ``run`` — which only admits at completion boundaries —
+        ``pump`` also runs an admission pass when new work arrived
+        between launches, since an open-loop arrival process delivers
+        requests mid-flight. Returns False once the engine is drained
+        (call again after the next ``submit``)."""
+        if self.macro_steps <= 0:
+            raise RuntimeError(
+                "pump() drives the fused macro-step loop; construct the "
+                "engine with macro_steps >= 1 for async serving")
+        if self._evid is None:
+            self._begin()
+        elif self._queue and self._free_slots():
+            self._schedule()
+            if self.has_evidence and self._any_live():
+                self._evid = self._gather_evid()
+        return self._step()
+
+    def _emit_stream(self, ntok_np, out_np):
+        """Queue per-slot token deltas for the async front-end. Deltas
+        are emitted before finished slots fold, so a candidate's final
+        tokens are never lost; the concatenation of one candidate's
+        deltas is byte-identical to its finished ``tokens`` record."""
+        for s in range(self.B):
+            uid = int(self._slot_req[s])
+            if uid < 0:
                 continue
-            staged, frontier = (self._stage_frontier() if self.paged
-                                else (None, self._dummy_frontier))
-            if self._frontier_sharding is not None:
-                frontier = jax.device_put(frontier, self._frontier_sharding)
-            self._reshard()
-            if self.spec:
-                self.state, done, steps, nd, na = self._macro_fn(
-                    self.params, self.state, self._decode_key,
-                    jnp.int32(self._t), evid, frontier)
-            else:
-                self.state, done, steps = self._macro_fn(
-                    self.params, self.state, self._decode_key,
-                    jnp.int32(self._t), evid, frontier)
-            self.macro_launches += 1
-            if self.spec:
-                done_np, pos_np, steps_np, nd_np, na_np = self._sync(
-                    (done, self.state.cache["pos"], steps, nd, na))
-                self.spec_drafted += int(nd_np)
-                self.spec_accepted += int(na_np)
-            else:
-                done_np, pos_np, steps_np = self._sync(
-                    (done, self.state.cache["pos"], steps))
-            steps_n = int(steps_np)
-            self.total_steps += steps_n
-            # each speculative iteration consumes spec_k fold-in keys
-            self._t += steps_n * (self.spec_k if self.spec else 1)
+            n = int(ntok_np[s])
+            if n > self._slot_streamed[s]:
+                self.stream_events.append(
+                    (uid, int(self._slot_cand[s]),
+                     np.asarray(out_np[s][int(self._slot_streamed[s]):n])))
+                self._slot_streamed[s] = n
+
+    # ------------------------------------------------------------------
+    # cancellation (the abort path)
+    # ------------------------------------------------------------------
+    def cancel(self, uid: int) -> bool:
+        """Abort a request: queued/pending work is dropped immediately;
+        running candidates are torn down at the next step boundary —
+        staged frontier pages return to the pool, slots free, and the
+        scheduler's worst-case commitment is refunded (see
+        ``_apply_cancels``). Returns False for unknown or already-
+        finished uids. A cancelled request still yields a ``Result``
+        (``cancelled=True``) with whatever candidates it completed."""
+        info = self._reqs.get(uid)
+        if info is None:
+            # queued but never prefilled: drop from the queue, with a
+            # stub record so results stay uniform
+            for i, r in enumerate(self._queue):
+                if r.uid == uid:
+                    self._queue.pop(i)
+                    self._reqs[uid] = {
+                        "req": r, "cache_row": None,
+                        "camd": ctrl.init_state(self.camd, self.d, self.V),
+                        "bias": None, "round": 0, "cand_slots": [],
+                        "records": {}, "align_const": 0.0, "done": False,
+                        "cancelled": True}
+                    self._finish_request(uid)
+                    self.cancelled_requests += 1
+                    return True
+            return False
+        if info["done"]:
+            return False
+        if any(int(self._slot_req[s]) == uid for s in range(self.B)):
+            # live candidates: fold the teardown into the next launch's
+            # sync — the emission counts spent-accounting needs ride the
+            # readback the step already pays for
+            self._cancels.add(uid)
+            return True
+        # prefilled but not running (queued or pending a round): release
+        # its prompt-cache row and page holds now
+        self._queue = [r for r in self._queue if r.uid != uid]
+        info["cancelled"] = True
+        self._finish_request(uid)
+        self.cancelled_requests += 1
+        return True
+
+    def _apply_cancels(self, staged, ntok_np) -> bool:
+        """Tear down cancel-marked requests' live slots after a launch.
+
+        Runs BEFORE ``_reclaim_frontier``: a cancelled slot's staged
+        frontier pages are returned wholesale (``PagePool.return_
+        frontier``) and its entry dropped from ``staged``; its
+        pre-launch pages are freed, its shard's reservation released,
+        and the scheduler refunds the candidate's worst-case commitment
+        (tokens it did emit count as spent — the compute is burned).
+        Pages/slots/budget all return to their pre-admission accounting;
+        the hypothesis conservation suite pins this."""
+        uids = set(self._cancels)
+        self._cancels.clear()
+        slots = [s for s in range(self.B)
+                 if int(self._slot_req[s]) in uids]
+        if not slots:
+            return False
+        for s in slots:
+            uid = int(self._slot_req[s])
+            n = int(ntok_np[s])
+            self.total_tokens += n
+            self.scheduler.on_cancel(uid, n, int(self._slot_lim[s]))
+            self._slot_req[s] = -1
+            self._slot_cand[s] = -1
+            self._slot_spec[s] = 1
+            self._slot_lim[s] = self.max_new
+            self._slot_streamed[s] = 0
             if self.paged:
-                self._reclaim_frontier(staged, pos_np)
-            if done_np.any():
-                self._finish_candidates(
-                    [int(s) for s in np.nonzero(done_np)[0]])
-                self._schedule()
-                if self.has_evidence:
-                    evid = self._gather_evid()
-        return [self._result(uid) for uid in self._reqs]
+                if staged is not None and s in staged:
+                    _p0, pages = staged.pop(s)
+                    if pages:
+                        self.pool.return_frontier(pages)
+                self.pool.free(self._slot_pages[s])
+                self._slot_pages[s] = []
+                self._reserved_sh[self._slot_shard(s)] -= \
+                    int(self._slot_reserved[s])
+                self._slot_reserved[s] = 0
+        # deactivate on device so later launches neither decode into the
+        # dead slots nor early-exit on their stale done flags
+        idx = jnp.asarray(slots)
+        st = self.state
+        cache = st.cache
+        if self.paged:
+            quar = jnp.asarray([self._quarantine(s) for s in slots],
+                               jnp.int32)
+            cache = {**cache,
+                     "block_table": cache["block_table"].at[idx].set(
+                         quar[:, None])}
+        self.state = st._replace(active=st.active.at[idx].set(False),
+                                 cache=cache)
+        for uid in sorted(uids):
+            info = self._reqs.get(uid)
+            if info is not None and not info["done"]:
+                info["cancelled"] = True
+                self._finish_request(uid)
+                self.cancelled_requests += 1
+        return True
 
     def _run_legacy(self) -> List[Result]:
         """Pre-macro-step per-token host loop (macro_steps=0): one jitted
@@ -1919,11 +2164,15 @@ class ServeEngine:
             self.total_steps += 1
             self._t += 1
             done_np = self._sync(done)
-            if done_np.any():
+            cancelled = self._apply_cancels(
+                None, self._sync(self.state.n_tok)) \
+                if self._cancels else False
+            if done_np.any() or cancelled:
                 # per-slot finishes, as the pre-refactor loop did — this
                 # is the readback pattern the macro path amortizes away
                 for s in np.nonzero(done_np)[0]:
-                    self._finish_candidates([int(s)])
+                    if self._slot_req[int(s)] >= 0:
+                        self._finish_candidates([int(s)])
                 self._schedule()
                 if self.has_evidence:
                     evid = self._gather_evid()
@@ -1958,7 +2207,8 @@ class ServeEngine:
                 uid=uid, tokens=np.zeros((0,), np.int32), n_candidates=0,
                 tokens_spent=0, rounds=info["round"],
                 p_star=float(cs.p_star), best_score=float(cs.best_score),
-                stopped_early=False, candidates=[])
+                stopped_early=False, candidates=[],
+                cancelled=info.get("cancelled", False))
         if self.mode == "self_consistency":
             # majority vote: the largest cluster wins, then its
             # best-scoring member is the answer (falling back to the
@@ -1985,6 +2235,7 @@ class ServeEngine:
                            and float(cs.p_star) >= 1.0 - self.camd.delta),
             candidates=[{k: v for k, v in r.items() if k not in ("counts", "emb")}
                         for r in recs],
+            cancelled=info.get("cancelled", False),
         )
 
 
@@ -2008,8 +2259,12 @@ class _EngineSchedContext(SchedulerContext):
         for r in eng._queue:
             if r.uid not in eng._reqs:
                 break                    # prefill covers a queue prefix
+            info = eng._reqs[r.uid]
             out.append(NewWork(uid=r.uid, arrival=eng._arrival[r.uid],
-                               want=eng._per_round()))
+                               want=eng._per_round(),
+                               prompt_len=info.get("prompt_len", 0),
+                               evidence_entropy=info.get(
+                                   "evidence_entropy", 0.0)))
         return out
 
     def pending_rounds(self) -> List[RoundWork]:

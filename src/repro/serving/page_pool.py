@@ -275,6 +275,13 @@ class PrefixCache:
         for h in self._heap_sh:
             h.clear()
 
+    def reset_stats(self) -> None:
+        """Zero hit/miss telemetry only — the cached chains themselves
+        (and their refcounts) are engine state, not counters, and stay
+        resident so later cells still benefit from earlier prefills."""
+        self.probes = self.hits = self.misses = 0
+        self.hit_tokens = self.insertions = self.evictions = 0
+
     def stats(self) -> dict:
         return {
             "probes": self.probes, "hits": self.hits,
@@ -499,6 +506,19 @@ class PagePool:
                         node.parent not in self.prefix._nodes:
                     raise PagePoolError(
                         f"prefix chain broken at {k[:8]} (parent evicted)")
+
+    def reset_stats(self) -> None:
+        """Zero frontier/high-water telemetry for engine reuse across
+        bench cells. Allocation state (refcounts, free lists, prefix
+        chains) is untouched; ``max_in_use`` restarts from the CURRENT
+        occupancy so resident prefix-cache pages stay visible."""
+        self.frontier_staged = self.frontier_returned = 0
+        self.frontier_peak_stage = 0
+        self._frontier_staged_sh[:] = 0
+        self._frontier_returned_sh[:] = 0
+        self.max_in_use = self.in_use
+        if self.prefix is not None:
+            self.prefix.reset_stats()
 
     def stats(self) -> dict:
         s = {

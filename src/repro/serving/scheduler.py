@@ -43,10 +43,20 @@ import numpy as np
 
 @dataclasses.dataclass
 class NewWork:
-    """A prefilled queued request awaiting first admission."""
+    """A prefilled queued request awaiting first admission.
+
+    ``prompt_len`` and ``evidence_entropy`` are difficulty *priors*: a
+    new request has no posterior yet (no candidates, no p_star), so the
+    coverage policy ranks unobserved work by what the prompt alone
+    reveals — longer prompts carry more conditioning to satisfy, and a
+    diffuse prompt-to-evidence attachment (high normalized entropy of
+    the token-evidence alignment) marks grounding ambiguity. Both
+    default to 0 so fakes and non-coverage policies are unaffected."""
     uid: int
     arrival: int                 # submit order (FIFO tiebreak)
     want: int                    # candidates the mode wants per round
+    prompt_len: int = 0          # tokens in the prompt (difficulty prior)
+    evidence_entropy: float = 0.0  # normalized [0,1] alignment entropy
 
 
 @dataclasses.dataclass
@@ -140,6 +150,7 @@ class Scheduler:
         self.spent = 0
         self.admitted_candidates = 0
         self.declined_rounds = 0
+        self.cancelled_candidates = 0
         # per-shard admission telemetry (mesh-parallel serving): the
         # engine reports each admitted candidate's slot shard so skewed
         # placement (one shard's pool saturating while others idle) is
@@ -177,6 +188,25 @@ class Scheduler:
         self.spent += n_tokens
         assert self.committed >= 0, (uid, n_tokens, limit)
 
+    def on_cancel(self, uid: int, n_tokens: int, limit: int):
+        """A live candidate was aborted mid-flight: its worst-case
+        commitment is refunded exactly like a finish, and the tokens it
+        did emit count as spent — the compute is burned either way, so
+        the ``spent <= global_budget`` invariant is unchanged."""
+        self.on_finish(uid, n_tokens, limit)
+        self.cancelled_candidates += 1
+
+    def reset_stats(self) -> None:
+        """Zero telemetry counters for engine reuse across bench cells.
+
+        Budget LEDGERS (``spent``/``committed``) are accounting state —
+        resetting them would let a reused engine overspend its stream
+        budget — so they survive; only observability counters reset."""
+        self.admitted_candidates = 0
+        self.declined_rounds = 0
+        self.cancelled_candidates = 0
+        self.admitted_per_shard = {}
+
     def note_shard_admission(self, shards) -> None:
         """Engine callback: one entry per admitted candidate, the data
         shard of the slot it landed on."""
@@ -199,6 +229,7 @@ class Scheduler:
             "committed": self.committed,
             "admitted_candidates": self.admitted_candidates,
             "declined_rounds": self.declined_rounds,
+            "cancelled_candidates": self.cancelled_candidates,
         }
         if self.admitted_per_shard:
             s["admitted_per_shard"] = {
@@ -251,7 +282,10 @@ class CoverageScheduler(Scheduler):
 
     Priority of a pending round = coverage deficit + EI of one more
     sample + aging; priority of a new request = ``new_request_priority``
-    + aging. The default puts new requests above any continuing round
+    + ``difficulty_weight`` * difficulty-prior + aging, where the prior
+    ranks *unobserved* requests by prompt length and evidence-alignment
+    entropy (see ``NewWork``/``_difficulty``) instead of sharing one
+    flat prior. The default puts new requests above any continuing round
     (deficit <= 1 and EI is clamped to 1): a request's FIRST round buys
     far more residual-risk reduction than a hard request's n-th, so
     under budget pressure breadth beats depth — the saved depth comes
@@ -280,7 +314,9 @@ class CoverageScheduler(Scheduler):
     def __init__(self, *, global_budget: int = 0, aging_rate: float = 0.25,
                  new_request_priority: float = 2.5, ei_weight: float = 1.0,
                  ei_cost_per_token: float = 1e-4, min_rounds: int = 1,
-                 decline_low_gain: bool = True):
+                 decline_low_gain: bool = True,
+                 difficulty_weight: float = 0.5,
+                 difficulty_len_scale: float = 64.0):
         super().__init__(global_budget=global_budget)
         self.aging_rate = aging_rate
         self.new_request_priority = new_request_priority
@@ -288,6 +324,8 @@ class CoverageScheduler(Scheduler):
         self.ei_cost_per_token = ei_cost_per_token
         self.min_rounds = min_rounds
         self.decline_low_gain = decline_low_gain
+        self.difficulty_weight = difficulty_weight
+        self.difficulty_len_scale = difficulty_len_scale
         self._wait: Dict[Tuple[str, int], int] = {}
         self.max_wait_seen = 0
 
@@ -311,11 +349,26 @@ class CoverageScheduler(Scheduler):
         stop = ei < self.ei_cost_per_token * max(item.mean_len, 1.0)
         return ei, stop
 
+    def _difficulty(self, w: NewWork) -> float:
+        """Prompt-level difficulty prior in [0, 1) for *unobserved*
+        requests (no posterior yet). Saturating prompt-length term —
+        ``len_scale`` tokens is the half-difficulty point — averaged
+        with the normalized evidence-alignment entropy computed at
+        prefill (0 for text-only requests). Harder ranks first: a hard
+        request's first round buys more residual-risk reduction, and
+        admitting it early gives its later rounds time inside the same
+        budget window."""
+        lp = w.prompt_len / (w.prompt_len + self.difficulty_len_scale) \
+            if w.prompt_len > 0 else 0.0
+        ent = min(max(w.evidence_entropy, 0.0), 1.0)
+        return 0.5 * (lp + ent)
+
     def _priority(self, kind: str, item, ei: float = 0.0) -> float:
         wait = self._wait.get((kind, item.uid), 0)
         age = self.aging_rate * wait
         if kind == "new":
-            return self.new_request_priority + age
+            return self.new_request_priority \
+                + self.difficulty_weight * self._difficulty(item) + age
         deficit = max(0.0, (1.0 - item.delta) - item.p_star)
         return deficit + self.ei_weight * min(ei, 1.0) + age
 
@@ -370,6 +423,12 @@ class CoverageScheduler(Scheduler):
     def _bump(self, key):
         self._wait[key] = self._wait.get(key, 0) + 1
         self.max_wait_seen = max(self.max_wait_seen, self._wait[key])
+
+    def reset_stats(self) -> None:
+        super().reset_stats()
+        # the aging state (_wait) is POLICY state, not telemetry — the
+        # no-starvation guarantee must survive a stats reset
+        self.max_wait_seen = 0
 
     def stats(self) -> Dict[str, float]:
         s = super().stats()

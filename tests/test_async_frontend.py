@@ -1,0 +1,187 @@
+"""Async streaming front-end: streams must equal the synchronous path.
+
+The contract: routing requests through ``AsyncServeFrontend`` (token
+streams, interleaved submits, cancels) changes *when* tokens are
+delivered, never *what* tokens — greedy streams are byte-identical to a
+synchronous ``run()`` of the same prompts, and multi-candidate (camd)
+results match candidate-for-candidate. Golden streams come from one
+engine run per module; each test drives a fresh engine through the
+front-end and compares by prompt index.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from conftest import _mk_engine
+from repro.config import PagedKVConfig
+from repro.serving import AsyncServeFrontend, Request
+
+MAX_NEW = 8
+N_REQ = 6
+
+
+def _prompts(cfg, n=N_REQ, seed=0, plen=6):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, cfg.vocab_size, plen).astype(np.int32)
+            for _ in range(n)]
+
+
+def _greedy(tiny_model, **kw):
+    cfg, model, params = tiny_model
+    return _mk_engine(model, params, mode="greedy", macro_steps=2, slots=3,
+                      max_new=MAX_NEW, eos_id=cfg.vocab_size, impl="paged",
+                      paged_kv=PagedKVConfig(page_size=8), **kw)
+
+
+@pytest.fixture(scope="module")
+def golden(tiny_model):
+    """Synchronous greedy reference streams, by prompt index."""
+    cfg, _model, _params = tiny_model
+    eng = _greedy(tiny_model)
+    prompts = _prompts(cfg)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p))
+    return prompts, {r.uid: [int(t) for t in r.tokens] for r in eng.run()}
+
+
+def _consume(fe, uid, cancel_after=None):
+    async def inner():
+        toks = []
+        async for t in fe.stream(uid):
+            toks.append(int(t))
+            if cancel_after is not None and len(toks) >= cancel_after:
+                await fe.cancel(uid)
+        res = await fe.result(uid)
+        return toks, res
+    return inner()
+
+
+def test_greedy_stream_byte_identity(tiny_model, golden):
+    prompts, ref = golden
+    eng = _greedy(tiny_model)
+
+    async def main():
+        out = {}
+        async with AsyncServeFrontend(eng) as fe:
+            async def one(i):
+                await fe.submit(Request(uid=i, prompt=prompts[i]))
+                out[i] = await _consume(fe, i)
+            await asyncio.gather(*[one(i) for i in range(len(prompts))])
+        return out
+
+    out = asyncio.run(main())
+    for i, (stream, res) in out.items():
+        assert stream == ref[i], f"stream diverged for request {i}"
+        assert [int(t) for t in res.tokens] == ref[i]
+        assert not res.cancelled
+    # incremental delivery actually happened: max_new spans several
+    # macro launches, so tokens cannot all have arrived in one event
+    assert eng.macro_launches > 1
+
+
+def test_cancel_mid_stream_frees_everything(tiny_model, golden):
+    prompts, ref = golden
+    eng = _greedy(tiny_model)
+    cancel = {0, 3}
+
+    async def main():
+        out = {}
+        async with AsyncServeFrontend(eng) as fe:
+            async def one(i):
+                await fe.submit(Request(uid=i, prompt=prompts[i]))
+                out[i] = await _consume(
+                    fe, i, cancel_after=1 if i in cancel else None)
+            await asyncio.gather(*[one(i) for i in range(len(prompts))])
+        return out
+
+    out = asyncio.run(main())
+    for i, (stream, res) in out.items():
+        if i in cancel:
+            assert res.cancelled
+            # delivered tokens are a prefix of the golden stream
+            assert stream == ref[i][:len(stream)]
+        else:
+            assert not res.cancelled and stream == ref[i]
+    # conservation: the aborts returned every page, slot, and token of
+    # worst-case commitment
+    eng.pool.check()
+    assert eng.pool.in_use == 0
+    assert all(int(eng._slot_req[s]) == -1 for s in range(eng.B))
+    assert eng.scheduler.committed == 0
+    assert eng.cancelled_requests == len(cancel)
+
+
+def test_submit_while_running(tiny_model, golden):
+    """A request submitted mid-decode of another is admitted between
+    macro launches and still reproduces the golden stream."""
+    prompts, ref = golden
+    eng = _greedy(tiny_model)
+
+    async def main():
+        async with AsyncServeFrontend(eng) as fe:
+            await fe.submit(Request(uid=0, prompt=prompts[0]))
+            first = []
+            async for t in fe.stream(0):
+                first.append(int(t))
+                if len(first) == 2:       # mid-stream: inject request 1
+                    await fe.submit(Request(uid=1, prompt=prompts[1]))
+            second, res1 = await _consume(fe, 1)
+            res0 = await fe.result(0)
+            return first, second, res0, res1
+
+    first, second, res0, res1 = asyncio.run(main())
+    assert first == ref[0] and second == ref[1]
+    assert not res0.cancelled and not res1.cancelled
+
+
+def test_camd_results_match_sync(tiny_model):
+    """Multi-candidate modes stream the chosen candidate at completion;
+    results match the synchronous path field-for-field."""
+    cfg, model, params = tiny_model
+
+    def mk():
+        return _mk_engine(model, params, mode="camd", macro_steps=2,
+                          slots=4, max_new=4)
+
+    prompts = _prompts(cfg, n=4, seed=3)
+    sync = mk()
+    for i, p in enumerate(prompts):
+        sync.submit(Request(uid=i, prompt=p))
+    ref = {r.uid: r for r in sync.run()}
+
+    eng = mk()
+
+    async def main():
+        out = {}
+        async with AsyncServeFrontend(eng) as fe:
+            async def one(i):
+                await fe.submit(Request(uid=i, prompt=prompts[i]))
+                out[i] = await _consume(fe, i)
+            await asyncio.gather(*[one(i) for i in range(len(prompts))])
+        return out
+
+    out = asyncio.run(main())
+    for i, (stream, res) in out.items():
+        assert stream == [int(t) for t in ref[i].tokens]
+        assert [int(t) for t in res.tokens] == [int(t) for t in ref[i].tokens]
+        assert res.n_candidates == ref[i].n_candidates
+        assert res.tokens_spent == ref[i].tokens_spent
+
+
+def test_frontend_requires_macro_loop(tiny_model):
+    cfg, model, params = tiny_model
+    eng = _mk_engine(model, params, mode="greedy", macro_steps=0)
+    with pytest.raises(ValueError, match="macro"):
+        AsyncServeFrontend(eng)
+
+
+def test_submit_before_start_raises(tiny_model):
+    eng = _greedy(tiny_model)
+    fe = AsyncServeFrontend(eng)
+
+    async def main():
+        with pytest.raises(RuntimeError, match="not started"):
+            await fe.submit(Request(uid=0, prompt=np.arange(2, 8,
+                                                            dtype=np.int32)))
+    asyncio.run(main())

@@ -1,0 +1,116 @@
+"""Fake-clock unit tests for the open-loop traffic math.
+
+``slo_metrics``/``percentile`` are pure trace -> number functions, so
+every quantity the bench gates on (TTFT/TPOT percentiles, goodput at an
+SLO, tokens/s) is pinned here against hand-built timelines — no engine,
+no wall clock, no jax.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.traffic import (RequestTrace, bursty_arrivals,
+                                   percentile, poisson_arrivals,
+                                   slo_metrics)
+
+
+def _tr(uid, arrival, first, done, n, cancelled=False):
+    return RequestTrace(uid=uid, t_arrival=arrival, t_submit=arrival,
+                        t_first=first, t_done=done, n_tokens=n,
+                        cancelled=cancelled)
+
+
+# ---------------------------------------------------------------------------
+# percentile
+# ---------------------------------------------------------------------------
+
+def test_percentile_linear_interpolation():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    assert percentile([5.0, 1.0, 3.0], 50) == 3.0     # order-free
+    # matches numpy's default 'linear' method by construction
+    for q in (1, 25, 50, 75, 99):
+        assert percentile(xs, q) == pytest.approx(np.percentile(xs, q))
+
+
+def test_percentile_edges():
+    assert np.isnan(percentile([], 50))
+    assert percentile([7.0], 99) == 7.0
+
+
+# ---------------------------------------------------------------------------
+# slo_metrics on a hand-built fake-clock run
+# ---------------------------------------------------------------------------
+
+def test_slo_metrics_fake_clock():
+    traces = [
+        _tr(0, 0.0, 0.1, 0.5, 5),    # ttft 100ms, tpot 400/4 = 100ms
+        _tr(1, 1.0, 1.3, 1.3, 1),    # ttft 300ms, no tpot (1 token)
+        _tr(2, 2.0, 2.2, 3.0, 9),    # ttft 200ms, tpot 800/8 = 100ms
+        _tr(3, 0.5, 0.6, None, 2, cancelled=True),
+    ]
+    m = slo_metrics(traces, slo_ttft_ms=250.0)
+    assert m["completed"] == 3 and m["cancelled"] == 1
+    # span defaults to last completion minus earliest scheduled arrival
+    assert m["span_s"] == pytest.approx(3.0)
+    assert m["ttft_p50_ms"] == pytest.approx(200.0)
+    assert m["ttft_p99_ms"] == pytest.approx(
+        percentile([100.0, 200.0, 300.0], 99))
+    assert m["tpot_p50_ms"] == pytest.approx(100.0)
+    assert m["tpot_p99_ms"] == pytest.approx(100.0)
+    # uid 1 misses the 250ms SLO; cancelled uid 3 never counts
+    assert m["good_requests"] == 2
+    assert m["goodput_rps"] == pytest.approx(2 / 3.0)
+    assert m["tokens_per_s"] == pytest.approx((5 + 1 + 9) / 3.0)
+
+
+def test_goodput_counts_exact_slo_boundary():
+    traces = [_tr(0, 0.0, 0.25, 1.0, 4)]          # ttft == SLO exactly
+    m = slo_metrics(traces, slo_ttft_ms=250.0, span_s=1.0)
+    assert m["good_requests"] == 1
+    m = slo_metrics(traces, slo_ttft_ms=249.9, span_s=1.0)
+    assert m["good_requests"] == 0
+
+
+def test_span_override_scales_rates():
+    traces = [_tr(0, 0.0, 0.1, 0.2, 10)]
+    m = slo_metrics(traces, slo_ttft_ms=1e3, span_s=2.0)
+    assert m["tokens_per_s"] == pytest.approx(5.0)
+    assert m["goodput_rps"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def test_arrivals_deterministic_and_monotone():
+    for gen in (poisson_arrivals, bursty_arrivals):
+        a = gen(5.0, 200, seed=3)
+        b = gen(5.0, 200, seed=3)
+        assert np.array_equal(a, b)
+        assert np.all(np.diff(a) >= 0) and a[0] >= 0
+        assert not np.array_equal(a, gen(5.0, 200, seed=4))
+
+
+def test_poisson_mean_rate():
+    a = poisson_arrivals(8.0, 4000, seed=0)
+    rate = len(a) / a[-1]
+    assert rate == pytest.approx(8.0, rel=0.1)
+
+
+def test_bursty_same_offered_load_but_burstier():
+    n = 4000
+    p = poisson_arrivals(8.0, n, seed=1)
+    b = bursty_arrivals(8.0, n, seed=1)
+    # identical long-run offered load...
+    assert n / b[-1] == pytest.approx(n / p[-1], rel=0.25)
+    # ...but far more dispersed inter-arrivals (the point of the bursty
+    # cell: same mean rate, concentrated into on-windows)
+    cv = lambda xs: np.std(xs) / np.mean(xs)          # noqa: E731
+    assert cv(np.diff(b)) > 1.5 * cv(np.diff(p))
+
+
+def test_zero_rate_degenerates_to_t0():
+    assert np.array_equal(poisson_arrivals(0.0, 3), np.zeros(3))
+    assert np.array_equal(bursty_arrivals(0.0, 3), np.zeros(3))
