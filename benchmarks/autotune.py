@@ -9,11 +9,12 @@ Two sweeps, one artifact:
   correctness harness, ~1000x slow), so non-TPU runs record the builtin
   defaults with ``"source": "default"`` instead of fabricating numbers.
 - **serve shape** — page_size then macro-step K, timed end-to-end on the
-  real ``ServeEngine`` equal-work grid cell (``bench_serve._run_cell``).
-  This is a genuine wall-clock measurement on every backend. The paged
-  decode kernel has no independent block knob — its grid IS
-  (batch, kv_head, page), so page_size doubles as its block size and
-  this sweep covers it.
+  real ``ServeEngine`` equal-work grid cell (``bench_serve._run_cell``),
+  then the prefill chunk size on the head-of-line latency cell
+  (``bench_serve._run_chunked_cell``). These are genuine wall-clock
+  measurements on every backend. The paged decode kernel has no
+  independent block knob — its grid IS (batch, kv_head, page), so
+  page_size doubles as its block size and this sweep covers it.
 
 Writes ``BENCH_autotune.json``. ``load_tuned()`` merges that file over
 the builtin defaults; ``bench_serve`` / ``bench_kernels`` call it so a
@@ -33,7 +34,7 @@ import jax.numpy as jnp
 DEFAULTS = {
     "flash_attention": {"blk_q": 128, "blk_k": 128},
     "decode_attention": {"blk_s": 256},
-    "serve": {"page_size": 16, "macro_steps": 8},
+    "serve": {"page_size": 16, "macro_steps": 8, "prefill_chunk": 256},
 }
 
 _ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(
@@ -115,11 +116,15 @@ def tune_kernels(smoke: bool = False) -> dict:
 
 
 def tune_serve(smoke: bool = False) -> dict:
-    """Two-stage serving sweep on the equal-work benchmark cell:
-    page_size at the default K, then macro-step K at the winning
-    page_size — 2 one-dimensional passes instead of the full cross
-    (the two knobs are near-separable: page_size moves KV scatter and
-    pool pressure, K moves dispatch amortization)."""
+    """Three-stage serving sweep: page_size at the default K, macro-step
+    K at the winning page_size (both on the equal-work throughput cell —
+    near-separable knobs: page_size moves KV scatter and pool pressure,
+    K moves dispatch amortization), then the prefill chunk size on the
+    head-of-line latency cell (``bench_serve._run_chunked_cell``), where
+    the objective is short-prompt p99 TTFT subject to the long-prompt
+    p99 staying within 1.5x of the unchunked reference — the chunk knob
+    trades head-of-line blocking against per-chunk dispatch overhead,
+    which only a wall-clock measurement can balance."""
     from benchmarks.bench_serve import _bench_model, _run_cell
     cfg, model, params = _bench_model()
     requests, max_new, reps = (2, 16, 2) if smoke else (4, 32, 3)
@@ -143,8 +148,47 @@ def tune_serve(smoke: bool = False) -> dict:
     k_rows = [next(r for r in cells if r["page_size"] == best_ps)]
     k_rows += [cell(best_ps, k) for k in ks if k != k0]
     best_k = max(k_rows, key=lambda r: r["tokens_per_s"])["macro_steps"]
+    best_chunk, chunk_cells = _tune_prefill_chunk(smoke)
     return {"page_size": best_ps, "macro_steps": best_k,
-            "source": "measured", "cells": cells}
+            "prefill_chunk": best_chunk, "source": "measured",
+            "cells": cells, "chunk_cells": chunk_cells}
+
+
+def _tune_prefill_chunk(smoke: bool = False):
+    """Prefill-chunk-size sweep on the head-of-line latency workload.
+
+    Each candidate is scored against an unchunked reference run on the
+    same prompts: minimize short-prompt p99 TTFT among candidates whose
+    long-prompt p99 stays within 1.5x of the reference (a tiny chunk
+    frees shorts fastest but drip-feeds the tail long prompt through
+    too many budget turns)."""
+    from benchmarks.bench_serve import (_mixed_length_prompts,
+                                        _run_chunked_cell, _spec_model)
+    cfg, model, params = _spec_model()
+    n_long, n_short, long_len, max_new = \
+        (2, 4, 512, 8) if smoke else (2, 4, 1024, 16)
+    prompts = _mixed_length_prompts(n_long, n_short, vocab=cfg.vocab_size,
+                                    long_len=long_len)
+    candidates = (128, 256) if smoke else (64, 128, 256, 512)
+    ref, _ = _run_chunked_cell(model, params, prompts, chunk=0,
+                               max_new=max_new, uid0=0)
+    long_cap = 1.5 * ref["ttft_by_bucket"]["ge96"]["p99_ms"]
+    rows = [ref]
+    best = None
+    for i, c in enumerate(candidates):
+        row, _ = _run_chunked_cell(model, params, prompts, chunk=c,
+                                   max_new=max_new, uid0=(i + 1) * 100_000)
+        rows.append(row)
+        short_p99 = row["ttft_by_bucket"]["lt32"]["p99_ms"]
+        long_p99 = row["ttft_by_bucket"]["ge96"]["p99_ms"]
+        ok = long_p99 <= long_cap
+        print(f"autotune chunk={c:<4d} short p99 {short_p99:7.1f}ms  "
+              f"long p99 {long_p99:7.1f}ms{'' if ok else '  (long cap)'}")
+        if ok and (best is None or short_p99 < best[1]):
+            best = (c, short_p99)
+    # every candidate blowing the long cap means chunking overhead
+    # dominates on this backend — fall back to the builtin default
+    return (best[0] if best else DEFAULTS["serve"]["prefill_chunk"]), rows
 
 
 def run(smoke: bool = False) -> dict:

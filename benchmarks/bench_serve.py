@@ -49,10 +49,19 @@ The **open-loop scenario** serves the heavy-tailed shared-prefix
 workload through the async streaming front-end under Poisson and bursty
 arrival processes (offered at 0.7x the measured closed-loop capacity),
 recording SLO metrics — p50/p99 TTFT from scheduled arrival, p50/p99
-per-output-token latency, goodput at an adaptive TTFT SLO, and tokens/s
-at saturation — plus a cancellation cell asserting the abort path
-returns every page, slot, and byte of scheduler commitment, in an
-``open_loop`` section.
+per-output-token latency (both also bucketed by prompt length), goodput
+at an adaptive TTFT SLO, and tokens/s at saturation — plus a
+cancellation cell asserting the abort path returns every page, slot,
+and byte of scheduler commitment, in an ``open_loop`` section.
+
+The **chunked-prefill scenario** saturates a small greedy engine with
+short prompts and queues long prompts behind them, then serves the SAME
+workload with chunked prefill off (``prefill_chunk=0``) and on (the
+autotuned chunk size): with chunking on, the long prompts' page-aligned
+chunks run while they are still *queued* — prefill overlaps the shorts'
+decode instead of serializing after it — so the long-prompt TTFT bucket
+must improve while streams stay byte-identical and decode tokens/s
+stays within the regression tolerance (``chunked_prefill`` section).
 
 Writes ``BENCH_serve.json``; ``--smoke`` runs a reduced grid for CI and
 ``--sections grid,open_loop`` limits the run to named sections.
@@ -618,7 +627,8 @@ def run_open_loop_scenario(smoke: bool = False) -> dict:
         eng.reset_stats()
         _assert_clean(eng)
         traces, metrics = run_open_loop(eng, reqs(uid0), arr,
-                                        slo_ttft_ms=slo_ms)
+                                        slo_ttft_ms=slo_ms,
+                                        length_buckets=(18,))
         same = all(ref[tr.uid - uid0] ==
                    [int(t) for t in eng.result(tr.uid).tokens]
                    for tr in traces)
@@ -638,7 +648,8 @@ def run_open_loop_scenario(smoke: bool = False) -> dict:
     _assert_clean(eng)
     traces, metrics = run_open_loop(
         eng, reqs(4000), poisson_arrivals(rate, n_req, seed=13),
-        slo_ttft_ms=slo_ms, cancel_uids=cancel_uids, cancel_after_tokens=1)
+        slo_ttft_ms=slo_ms, cancel_uids=cancel_uids, cancel_after_tokens=1,
+        length_buckets=(18,))
     survivors_match = all(
         ref[tr.uid - 4000] == [int(t) for t in eng.result(tr.uid).tokens]
         for tr in traces if not tr.cancelled)
@@ -667,6 +678,7 @@ def run_open_loop_scenario(smoke: bool = False) -> dict:
             "completed_all": completed_all,
             "no_leaks_after_cancel": no_leaks,
             "ttft_p99_ms": pois["ttft_p99_ms"],
+            "ttft_by_bucket": pois["ttft_by_bucket"],
             "tpot_p99_ms": pois["tpot_p99_ms"],
             "goodput_rps": pois["goodput_rps"],
             "tokens_per_s_saturation": rows[2]["tokens_per_s"],
@@ -675,8 +687,136 @@ def run_open_loop_scenario(smoke: bool = False) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Chunked-prefill scenario: long-prompt TTFT under short-prompt load
+# ---------------------------------------------------------------------------
+
+CHUNK_BUCKETS = (32, 96)      # prompt-length buckets: lt32 / 32to96 / ge96
+
+
+def _mixed_length_prompts(n_long, n_short, *, vocab, long_len=1024,
+                          short_len=8, seed=5):
+    """Head-of-line workload for the chunked-prefill A/B: ``n_long``
+    long prompts listed FIRST, then ``n_short`` short prompts behind
+    them. All arrivals at t=0 and every request fits in a slot, so fifo
+    admission pins the order and the only variable is whether the short
+    prompts' admission (and everyone's first token) must wait for the
+    long prompts' monolithic prefills — with chunking on, the longs are
+    budget-paced chunk jobs and the shorts are admitted around them."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, vocab, long_len).astype(np.int32)
+            for _ in range(n_long)] + \
+           [rng.integers(2, vocab, short_len).astype(np.int32)
+            for _ in range(n_short)]
+
+
+def _run_chunked_cell(model, params, prompts, *, chunk, max_new,
+                      slo_ms=1e9, uid0=0):
+    """One chunked-prefill cell: greedy open-loop serve of ``prompts``
+    (everything offered at t=0) with ``prefill_chunk=chunk``. Returns
+    (row, streams) — streams keyed by request index so cells with
+    different uid bases compare directly. Greedy + fifo means the token
+    streams must be byte-identical for every chunk size including 0."""
+    from repro.serving.traffic import run_open_loop
+    cache_len = -(-(max(len(p) for p in prompts) + max_new) // 64) * 64
+    eng = ServeEngine(
+        model, params, slots=len(prompts), cache_len=cache_len,
+        sampling=SamplingConfig(temperature=0.0, top_p=1.0,
+                                repetition_penalty=1.0,
+                                max_new_tokens=max_new),
+        mode="greedy", n_candidates=1, max_new_tokens=max_new,
+        eos_id=model.cfg.vocab_size,
+        impl="paged", paged_kv=PagedKVConfig(page_size=8),
+        macro_steps=4, prefill_chunk=chunk, seed=0)
+    for i, p in enumerate(prompts):               # warmup / compile
+        eng.submit(Request(uid=uid0 + 10_000 + i, prompt=p))
+    eng.run()
+    eng.reset_stats()
+    _assert_clean(eng)
+    reqs = [Request(uid=uid0 + i, prompt=p) for i, p in enumerate(prompts)]
+    traces, metrics = run_open_loop(
+        eng, reqs, np.zeros(len(reqs)), slo_ttft_ms=slo_ms,
+        length_buckets=CHUNK_BUCKETS)
+    streams = {tr.uid - uid0: [int(t) for t in eng.result(tr.uid).tokens]
+               for tr in traces}
+    eng.pool.check()
+    s = eng.sched_stats()
+    row = {
+        "prefill_chunk": chunk,
+        "chunk_calls": s.get("chunk_calls", 0),
+        "chunk_tokens": s.get("chunk_tokens", 0),
+        "prefill_calls": s["prefill_calls"],
+        **metrics,
+    }
+    return row, streams
+
+
+def run_chunked_prefill_scenario(smoke: bool = False, *,
+                                 chunk: int = 256) -> dict:
+    """Chunked prefill off vs on on the head-of-line workload.
+
+    Streams must be byte-identical (greedy + fifo). With chunking on,
+    the short-prompt (lt32) TTFT bucket must improve sharply — shorts
+    stop queueing behind whole-prompt prefills — while the long-prompt
+    (ge96) p50 improves (the first long finishes its own prefill before
+    the others' rather than after) and its p99 plus decode tokens/s stay
+    within the regression tolerance (the budget-paced tail long pays a
+    bounded pacing cost on a serial backend)."""
+    cfg, model, params = _spec_model()
+    # the long prompts stay 1024 tokens even in smoke: the head-of-line
+    # effect the gates measure scales with prefill cost, and 512-token
+    # longs on the tiny model drown it in per-chunk dispatch overhead
+    n_long, n_short, long_len, max_new = \
+        (2, 4, 1024, 12) if smoke else (2, 4, 1024, 24)
+    # at least two chunks per long prompt, whatever autotune picked
+    chunk = min(chunk, long_len // 2)
+    prompts = _mixed_length_prompts(n_long, n_short, vocab=cfg.vocab_size,
+                                    long_len=long_len)
+    rows, streams = [], {}
+    for c in (0, chunk):
+        row, st = _run_chunked_cell(model, params, prompts, chunk=c,
+                                    max_new=max_new, uid0=c * 1000)
+        rows.append(row)
+        streams[c] = st
+        b = row["ttft_by_bucket"]
+        print(f"chunk  c={c:<3d}: long p50/p99 "
+              f"{b['ge96']['p50_ms']:6.1f}/{b['ge96']['p99_ms']:6.1f}ms  "
+              f"short p99 {b['lt32']['p99_ms']:6.1f}ms  "
+              f"{row['tokens_per_s']:7.1f} tok/s  "
+              f"{row['chunk_calls']} chunk calls")
+    off = next(r for r in rows if r["prefill_chunk"] == 0)
+    on = next(r for r in rows if r["prefill_chunk"] == chunk)
+
+    def bucket(row, name, q):
+        return row["ttft_by_bucket"][name][q]
+
+    headline = {
+        "prefill_chunk": chunk,
+        "streams_identical": streams[0] == streams[chunk],
+        "chunk_calls": on["chunk_calls"],
+        "chunk_tokens": on["chunk_tokens"],
+        "ttft_p99_short_off_ms": bucket(off, "lt32", "p99_ms"),
+        "ttft_p99_short_on_ms": bucket(on, "lt32", "p99_ms"),
+        "ttft_short_improvement": bucket(off, "lt32", "p99_ms")
+        / max(bucket(on, "lt32", "p99_ms"), 1e-9),
+        "ttft_p50_long_off_ms": bucket(off, "ge96", "p50_ms"),
+        "ttft_p50_long_on_ms": bucket(on, "ge96", "p50_ms"),
+        "ttft_p99_long_off_ms": bucket(off, "ge96", "p99_ms"),
+        "ttft_p99_long_on_ms": bucket(on, "ge96", "p99_ms"),
+        "ttft_long_p99_ratio": bucket(on, "ge96", "p99_ms")
+        / max(bucket(off, "ge96", "p99_ms"), 1e-9),
+        "tokens_per_s_off": off["tokens_per_s"],
+        "tokens_per_s_on": on["tokens_per_s"],
+        "decode_ratio": on["tokens_per_s"] / max(off["tokens_per_s"],
+                                                 1e-9),
+    }
+    return {"n_long": n_long, "n_short": n_short, "long_len": long_len,
+            "max_new": max_new, "length_buckets": list(CHUNK_BUCKETS),
+            "rows": rows, "headline": headline}
+
+
 ALL_SECTIONS = ("grid", "speculative", "scheduler", "quantized", "sharded",
-                "open_loop")
+                "open_loop", "chunked_prefill")
 
 
 def run(smoke: bool = False, sections=None) -> dict:
@@ -750,6 +890,9 @@ def run(smoke: bool = False, sections=None) -> dict:
         out["sharded"] = run_sharded_scenario(smoke)
     if "open_loop" in sections:
         out["open_loop"] = run_open_loop_scenario(smoke)
+    if "chunked_prefill" in sections:
+        out["chunked_prefill"] = run_chunked_prefill_scenario(
+            smoke, chunk=tuned["prefill_chunk"] or 256)
     with open("BENCH_serve.json", "w") as f:
         json.dump(out, f, indent=2)
     print("wrote BENCH_serve.json")
@@ -819,6 +962,18 @@ def _smoke_asserts(out: dict) -> None:
         assert oh["streams_match_closed_loop"], oh
         assert oh["completed_all"], oh
         assert oh["no_leaks_after_cancel"], oh
+        # bucketed TTFT must cover every completed request
+        for row in out["open_loop"]["rows"]:
+            if "ttft_by_bucket" in row:
+                assert sum(b["n"] for b in row["ttft_by_bucket"].values()) \
+                    == row["completed"], row
+    if "chunked_prefill" in out:
+        # chunking must be a pure latency optimization: byte-identical
+        # greedy streams, and the chunk machinery must actually run
+        ch = out["chunked_prefill"]["headline"]
+        assert ch["streams_identical"], \
+            "chunked prefill changed greedy token streams"
+        assert ch["chunk_calls"] > 0 and ch["chunk_tokens"] > 0, ch
 
 
 if __name__ == "__main__":

@@ -33,7 +33,14 @@ against the committed ``BENCH_baseline.json`` and exits non-zero when:
     token streams must match the closed-loop reference byte-for-byte,
     every offered request must complete, and the cancellation cell must
     leak zero pages/slots/commitment — or (wall-clock, skippable) its
-    saturation tokens/s drops more than ``--tol`` vs baseline.
+    saturation tokens/s drops more than ``--tol`` vs baseline;
+  * the chunked-prefill scenario breaks its contract: greedy streams
+    must stay byte-identical with chunking on (deterministic), the
+    chunk machinery must actually run, and (wall-clock, skippable)
+    short-prompt p99 TTFT must improve >= 1.2x over the unchunked
+    engine with the long-prompt p99 within 1.5x, decode tokens/s within
+    ``--tol``, and the chunked long-prompt p99 within ``--tol`` of the
+    committed baseline.
 
 ``--skip-throughput`` drops the wall-clock checks — used by the forced
 multi-device CI lane, whose 8 host devices oversubscribe the runner's
@@ -55,7 +62,7 @@ import json
 import sys
 
 ALL_SECTIONS = ("grid", "speculative", "scheduler", "quantized", "sharded",
-                "open_loop")
+                "open_loop", "chunked_prefill")
 
 REGEN = ("PYTHONPATH=src python -m benchmarks.bench_serve --smoke && "
          "cp BENCH_serve.json BENCH_baseline.json")
@@ -249,6 +256,46 @@ def check(cur: dict, base: dict, *, tol: float, skip_throughput: bool,
                     errors.append(
                         f"open-loop saturation throughput regression: "
                         f"{c_sat:.1f} tok/s vs baseline {b_sat:.1f} "
+                        f"(tolerance {tol:.0%})")
+
+    if "chunked_prefill" in sections:
+        c_head = _head(cur, "chunked_prefill", "current", errors)
+        if c_head is not None:
+            # deterministic: chunking must not change a single greedy
+            # token, and the chunk machinery must actually have run
+            if not c_head.get("streams_identical", False):
+                errors.append("chunked prefill changed greedy token "
+                              "streams vs the unchunked engine")
+            if c_head.get("chunk_calls", 0) <= 0:
+                errors.append("chunked-prefill cell ran zero chunk calls "
+                              "— chunking silently disabled")
+            if not skip_ratios:
+                # within-run wall-clock A/B: shorts must stop queueing
+                # behind whole-prompt prefills, the tail long prompt may
+                # pay a bounded pacing cost, decode throughput holds
+                imp = c_head.get("ttft_short_improvement", 0.0)
+                if imp < 1.2:
+                    errors.append(
+                        f"chunked prefill no longer improves short-prompt "
+                        f"p99 TTFT: {imp:.2f}x (gate: >= 1.2x)")
+                lr = c_head.get("ttft_long_p99_ratio", 10.0)
+                if lr > 1.5:
+                    errors.append(
+                        f"chunked prefill long-prompt p99 TTFT ratio "
+                        f"{lr:.2f}x vs unchunked (gate: <= 1.5x)")
+                dr = c_head.get("decode_ratio", 0.0)
+                if dr < 1.0 - tol:
+                    errors.append(
+                        f"chunked prefill decode throughput ratio "
+                        f"{dr:.2f}x vs unchunked (tolerance {tol:.0%})")
+            b_head = base.get("chunked_prefill", {}).get("headline")
+            if not skip_throughput and b_head is not None:
+                c_long = c_head.get("ttft_p99_long_on_ms", 0.0)
+                b_long = b_head.get("ttft_p99_long_on_ms", 0.0)
+                if b_long and c_long > (1.0 + tol) * b_long:
+                    errors.append(
+                        f"chunked long-prompt p99 TTFT regression: "
+                        f"{c_long:.1f}ms vs baseline {b_long:.1f}ms "
                         f"(tolerance {tol:.0%})")
     return errors
 

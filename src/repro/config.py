@@ -266,6 +266,15 @@ class PagedKVConfig:
     # scales and are dequantized inside the attention kernels; see
     # models.attention.KV_DTYPES.
     kv_dtype: str = "auto"
+    # Resident-KV byte ceiling for the cross-request prefix cache
+    # (0 = unbounded). Counted against TRUE resident bytes — quantized
+    # values plus their scale tensors, the same bytes-per-page the
+    # engine's kv_stats() reports. When total resident KV would exceed
+    # the ceiling, cached-only prefix pages are evicted LRU-leaf-first
+    # until it fits (or nothing cached remains evictable — live holds
+    # may legitimately exceed the budget; the ceiling bounds the CACHE,
+    # never live traffic).
+    kv_byte_budget: int = 0
 
 
 @dataclass(frozen=True)

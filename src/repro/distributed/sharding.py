@@ -294,6 +294,18 @@ def engine_state_specs(cfg: ModelConfig, state, mesh: Mesh,
     return type(state)(cache=cache, **rest)
 
 
+def prefill_shard_ids(dp: int, prefill_shards: int) -> Tuple[int, ...]:
+    """Data-shard ids eligible to host prompt/chunk pages under
+    prefill/decode disaggregation: the FIRST ``prefill_shards`` shards
+    of the page axis (0 = no disaggregation — every shard hosts its own
+    slots' prompt pages). Decode slots on the remaining shards read the
+    prompt pages cross-shard through the block table — pages are the
+    transfer currency, GSPMD inserts the gather; tail and frontier
+    pages always stay on the slot's own shard."""
+    assert 0 <= prefill_shards <= dp, (prefill_shards, dp)
+    return tuple(range(prefill_shards or dp))
+
+
 def serve_param_specs(cfg: ModelConfig, params, mesh: Mesh,
                       rules: ShardingRules = ShardingRules()):
     """Parameter placement for serving: replicate when the mesh has no

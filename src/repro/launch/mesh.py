@@ -39,6 +39,12 @@ def make_serve_mesh(dp: int = 0, *, model: int = 1):
     cover every device — the CI lane forces 8 host devices and shards
     4-wide). ``dp=0`` takes every device not claimed by ``model``.
 
+    Prefill/decode disaggregation (``ServeEngine(prefill_shards=k)``)
+    is a *logical* split of this mesh's data axis: prompt/chunk pages
+    land on the first ``k`` shards' page subpools, decode slots on all
+    shards read them cross-shard (see
+    ``distributed.sharding.prefill_shard_ids``) — no separate mesh.
+
     On CPU, multi-device serving needs forced host devices, e.g.::
 
         XLA_FLAGS=--xla_force_host_platform_device_count=8

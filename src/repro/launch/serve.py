@@ -30,6 +30,9 @@ def main():
                     choices=["camd", "best_of_n", "self_consistency",
                              "greedy"])
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="synthetic prompt length in tokens (long prompts "
+                         "exercise chunked prefill)")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt", default="")
@@ -70,6 +73,25 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="cross-request prompt-prefix KV reuse (paged "
                          "impls on all-attention decoders)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: split long prompts into "
+                         "page-aligned chunks of this many tokens and "
+                         "interleave them with decode launches (0 = "
+                         "whole-prompt prefill; paged all-attention "
+                         "decoders only, others degrade gracefully)")
+    ap.add_argument("--prefill-chunk-budget", type=int, default=0,
+                    help="max chunk tokens prefilled per engine turn "
+                         "(0 = one chunk per turn)")
+    ap.add_argument("--prefill-shards", type=int, default=0,
+                    help="prefill/decode disaggregation: place prompt/"
+                         "chunk pages on the first N data shards of the "
+                         "page axis; decode shards read them cross-shard "
+                         "(0 = prompt pages follow the admitting slot)")
+    ap.add_argument("--kv-byte-budget", type=int, default=0,
+                    help="resident-KV byte ceiling for the cross-request "
+                         "prefix cache: cached-only pages are evicted "
+                         "until resident KV bytes (incl. quant scales) "
+                         "fall under it (0 = unbounded)")
     ap.add_argument("--serve-dp", type=int, default=0,
                     help="shard the decode batch + KV page pools across "
                          "N data-parallel devices (0 = single device; "
@@ -126,13 +148,17 @@ def main():
         impl=args.impl,
         paged_kv=PagedKVConfig(page_size=args.page_size,
                                num_pages=args.num_pages,
-                               kv_dtype=args.kv_dtype),
+                               kv_dtype=args.kv_dtype,
+                               kv_byte_budget=args.kv_byte_budget),
         macro_steps=args.macro_steps,
         bucket_prefill=not args.no_bucket_prefill,
         prefill_bucket_min=args.prefill_bucket_min,
         sched_policy=args.sched_policy,
         global_budget=args.global_budget,
         prefix_cache=args.prefix_cache,
+        prefill_chunk=args.prefill_chunk,
+        prefill_chunk_budget=args.prefill_chunk_budget,
+        prefill_shards=args.prefill_shards,
         mesh=mesh,
         spec_k=args.spec_k,
         spec_mode=args.spec_mode,
@@ -140,7 +166,8 @@ def main():
     rng = np.random.default_rng(args.seed)
 
     def mk_request(i):
-        prompt = rng.integers(2, cfg.vocab_size, size=8).astype(np.int32)
+        prompt = rng.integers(2, cfg.vocab_size,
+                              size=args.prompt_len).astype(np.int32)
         ev = None
         if cfg.num_evidence_tokens:
             ev = rng.standard_normal(
@@ -195,6 +222,12 @@ def main():
     print(f"scheduler: {ss['policy']} admitted={ss['admitted_candidates']} "
           f"spent={ss['spent']}/{ss['global_budget'] or 'inf'} "
           f"declined={ss['declined_rounds']} starved={ss['starved']}")
+    if eng.chunked:
+        print(f"chunked prefill: chunk={eng.chunk} budget="
+              f"{eng.chunk_budget} tok/turn, {ss['chunk_calls']} chunk "
+              f"calls over {ss['chunk_tokens']} tokens"
+              + (f", prefill shards 0..{eng.prefill_shards - 1} of "
+                 f"{eng.dp}" if eng.prefill_shards else ""))
     if eng.paged:
         s = eng.kv_stats()
         print(f"paged kv [{s['kv_dtype']}]: peak {s['max_in_use']}/"
@@ -206,6 +239,9 @@ def main():
             print(f"prefix cache: {pc['hits']} page hits, "
                   f"{pc['hit_tokens']} prefill tokens skipped, "
                   f"{pc['bytes_saved'] / 1e6:.2f} MB KV writes saved")
+        if s.get("kv_byte_budget"):
+            print(f"kv byte budget: {s['kv_byte_budget'] / 1e6:.2f} MB "
+                  f"ceiling, {s['budget_evictions']} budget evictions")
 
 
 if __name__ == "__main__":

@@ -106,6 +106,18 @@ class Model:
                                                  cache, ctx_kv, start,
                                                  impl=impl)
 
+    def prefill_chunked(self, params: Params, tokens, cache, chunk: int,
+                        *, impl: str = "xla"):
+        """Reference fixed-size chunked prefill: process the prompt in
+        ``chunk``-token pieces through the suffix path, byte-identical
+        to whole-prompt ``prefill``. Falls back to whole prefill when
+        ``chunk`` is 0 or covers the prompt. Requires
+        ``supports_prefix_cache`` (unless falling back). The serving
+        engine runs its own paged version of this loop — this entry
+        pins the chunking math without an engine in the loop."""
+        return tf_lib.transformer_prefill_chunked(params, self.cfg, tokens,
+                                                  cache, chunk, impl=impl)
+
     @property
     def supports_prefix_cache(self) -> bool:
         """Cross-request prompt-prefix KV reuse needs every layer's

@@ -406,6 +406,76 @@ def transformer_prefill_suffix(params: Params, cfg: ModelConfig, tokens,
         {"super": new_super, "tail": tuple(new_tail), "pos": pos}
 
 
+def transformer_prefill_chunked(params: Params, cfg: ModelConfig, tokens,
+                                cache, chunk: int, *, impl: str = "xla"):
+    """Reference fixed-size chunked prefill: the prompt is processed in
+    ``chunk``-token pieces, each attending to the K/V of every earlier
+    piece through the suffix path, so the result is byte-identical to a
+    whole-prompt ``transformer_prefill`` (causal masking zeroes the
+    missing *future* keys in both). The serving engine has its own paged
+    incarnation of this loop; this entry exists so the chunking math can
+    be pinned against the whole-prompt path without an engine in the
+    loop. Compiles once per distinct (chunk length, context length)
+    shape pair instead of once per prompt length. Returns
+    (logits_last (B, V), hidden_last (B, d), cache).
+    """
+    B, L = tokens.shape
+    if chunk <= 0 or chunk >= L:
+        return transformer_prefill(params, cfg, tokens, cache, impl=impl)
+    assert not cfg.is_encoder_decoder and cfg.attn_window == 0 and \
+        all(k == ATTN for k in cfg.layer_kinds), \
+        "chunked prefill needs an all-attention decoder (suffix path)"
+
+    def chunk_kv(ch_cache, s):
+        # Both prefill entries seed the chunk's K/V at rows [0, s).
+        sup = tuple((e["k"][:, :, :s], e["v"][:, :, :s])
+                    for e in ch_cache["super"])
+        tl = tuple((e["k"][:, :s], e["v"][:, :s])
+                   for e in ch_cache["tail"])
+        return sup, tl
+
+    logits = hidden = ctx_sup = ctx_tl = None
+    pos = 0
+    while pos < L:
+        s = min(chunk, L - pos)
+        piece = tokens[:, pos:pos + s]
+        if pos == 0:
+            logits, hidden, ch_cache = transformer_prefill(
+                params, cfg, piece, cache, impl=impl)
+        else:
+            ctx = {"super": ctx_sup, "tail": ctx_tl}
+            logits, hidden, ch_cache = transformer_prefill_suffix(
+                params, cfg, piece, cache, ctx, jnp.int32(pos), impl=impl)
+        sup, tl = chunk_kv(ch_cache, s)
+        ctx_sup = sup if ctx_sup is None else tuple(
+            (jnp.concatenate([a[0], b[0]], axis=2),
+             jnp.concatenate([a[1], b[1]], axis=2))
+            for a, b in zip(ctx_sup, sup))
+        ctx_tl = tl if ctx_tl is None else tuple(
+            (jnp.concatenate([a[0], b[0]], axis=1),
+             jnp.concatenate([a[1], b[1]], axis=1))
+            for a, b in zip(ctx_tl, tl))
+        pos += s
+
+    def seed(ce, kv):
+        k, v = kv
+        return {
+            "k": jax.lax.dynamic_update_slice(
+                ce["k"], k.astype(ce["k"].dtype), (0,) * ce["k"].ndim),
+            "v": jax.lax.dynamic_update_slice(
+                ce["v"], v.astype(ce["v"].dtype), (0,) * ce["v"].ndim),
+        }
+
+    new_cache = {
+        "super": tuple(seed(ce, kv)
+                       for ce, kv in zip(cache["super"], ctx_sup)),
+        "tail": tuple(seed(ce, kv)
+                      for ce, kv in zip(cache["tail"], ctx_tl)),
+        "pos": jnp.full((B,), L, jnp.int32),
+    }
+    return logits, hidden, new_cache
+
+
 def _seed_entry(cfg: ModelConfig, kind: str, cache_entry, prefill_entry):
     if kind in (ATTN, LOCAL_ATTN):
         return attn_lib.prefill_into_cache(cache_entry, prefill_entry["k"],

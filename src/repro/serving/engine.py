@@ -84,8 +84,8 @@ from repro.models.model import Model
 from repro.sampling.samplers import (decode_step_key, sample_token,
                                      sample_token_batch, speculative_accept)
 from repro.serving.page_pool import PagePool, prefix_page_keys
-from repro.serving.scheduler import (NewWork, RoundWork, SchedulerContext,
-                                     make_scheduler)
+from repro.serving.scheduler import (NewWork, PrefillWork, RoundWork,
+                                     SchedulerContext, make_scheduler)
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +166,9 @@ class ServeEngine:
                  global_budget: int = 0,
                  sched_kwargs: Optional[Dict[str, Any]] = None,
                  prefix_cache: bool = False,
+                 prefill_chunk: int = 0,
+                 prefill_chunk_budget: int = 0,
+                 prefill_shards: int = 0,
                  mesh=None,
                  spec_k: int = 0,
                  spec_mode: str = "coverage",
@@ -257,7 +260,8 @@ class ServeEngine:
                 num_pages += self.dp - num_pages % self.dp
             self.pool = PagePool(num_pages, ps,
                                  prefix_cache=self.prefix_cache,
-                                 num_shards=self.dp)
+                                 num_shards=self.dp,
+                                 kv_byte_budget=paged_kv.kv_byte_budget)
             self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
             self._slot_pos = np.zeros(slots, np.int64)
             self._slot_limit = np.zeros(slots, np.int64)  # L + max_new
@@ -276,8 +280,32 @@ class ServeEngine:
             adv = max(macro_steps, 1) * max(spec_k, 1)
             self._frontier_width = min(max(1, -(-adv // ps) + 1),
                                        self.pages_per_slot)
+            # chunked prefill: long prompts stream into the pool in
+            # page-aligned chunks through the suffix path, interleaved
+            # with decode launches so decode-bound slots keep streaming
+            # behind a long prompt. Needs the suffix machinery (paged,
+            # all-attention full-context decoder); any other engine
+            # silently degrades to whole-prompt prefill.
+            self.chunked = prefill_chunk > 0 and model.supports_prefix_cache
+            self.chunk = -(-int(prefill_chunk) // ps) * ps \
+                if self.chunked else 0
+            self.chunk_budget = int(prefill_chunk_budget) or self.chunk
+            # prefill/decode disaggregation: prompt/chunk pages are
+            # placed on the first ``prefill_shards`` shards of the page
+            # axis; decode slots elsewhere reference them cross-shard
+            # (pages are the transfer currency — GSPMD gathers, no KV
+            # copies). Tail + frontier pages stay slot-local.
+            self.prefill_shards = int(prefill_shards)
+            assert 0 <= self.prefill_shards <= self.dp, \
+                f"prefill_shards {prefill_shards} must be in [0, dp={self.dp}]"
         else:
             self.pool = None
+            self.chunked = False
+            self.chunk = 0
+            self.chunk_budget = 0
+            assert prefill_shards == 0, \
+                "prefill/decode disaggregation needs a paged impl"
+            self.prefill_shards = 0
         self.key = jax.random.PRNGKey(seed)
         # decode-loop keys are folded from a dedicated base key and the
         # global step index (not split per step), so the sampled stream is
@@ -311,6 +339,16 @@ class ServeEngine:
         # prefill telemetry (the prefix cache exists to shrink these)
         self.prefill_calls = 0
         self.prefill_tokens = 0
+        # chunked-prefill ledger: uid -> in-flight job ({"req", "pos",
+        # "pages", "shard"}); requests stay queued until their final
+        # chunk promotes them to _reqs, so _has_pending/cancel/starved
+        # paths see them through the queue. The per-turn chunk-token
+        # budget (_chunk_left) resets each _step.
+        self._chunking: Dict[int, Dict[str, Any]] = {}
+        self._chunk_progress = False
+        self._chunk_left = self.chunk_budget
+        self.chunk_calls = 0
+        self.chunk_tokens = 0
 
         # bucketed prefill: only exact for attention-only decoders, and
         # only when the padded bucket fits every attention ring without
@@ -328,6 +366,10 @@ class ServeEngine:
         self._min_ring = min(rings) if rings else cache_len
 
         self.state = self._blank_state()
+        if self.paged:
+            # the pool enforces the resident-KV byte budget itself; give
+            # it the engine's bytes-per-page (values + quant scales)
+            self.pool.set_bytes_per_page(self._bytes_per_page())
         self._state_sharding = None
         self._evid_sharding = None
         self._frontier_sharding = None
@@ -346,7 +388,7 @@ class ServeEngine:
         self._bucket_fn = self._build_bucket_prefill()
         self._first_fn = self._build_first_tokens()
         self._suffix_fn = self._build_suffix_prefill() \
-            if self.prefix_cache else None
+            if (self.prefix_cache or self.chunked) else None
         self._greedy_row = jnp.asarray([self.mode == "greedy"])
         self._round_fn = jax.jit(ctrl.batched_round_update_assign(self.camd))
         self._dummy_frontier = jnp.zeros((slots, 1), jnp.int32)
@@ -895,17 +937,27 @@ class ServeEngine:
         """The shard a request's prompt pages live on (chosen once):
         prefix-cache holds pin it to the cached pages' shard; otherwise
         the caller's ``fallback`` (the first admitted slot's shard) or,
-        at early-seed time, the least-loaded shard."""
+        at early-seed time, the least-loaded shard. Disaggregated
+        engines (``prefill_shards`` set) ignore the fallback and place
+        every prompt page on the least-loaded *prefill* shard — decode
+        shards read those pages cross-shard, tail/frontier pages stay
+        slot-local."""
         if "page_shard" not in info:
             held = info.get("prompt_pages")
             if held:
                 info["page_shard"] = self.pool.shard_of(held[0])
-            elif fallback is not None:
+            elif fallback is not None and not self.prefill_shards:
                 info["page_shard"] = fallback
             else:
-                info["page_shard"] = int(np.argmax(
-                    [self._shard_headroom(s) for s in range(self.dp)]))
+                info["page_shard"] = self._prefill_shard_pick()
         return info["page_shard"]
+
+    def _prefill_shard_pick(self) -> int:
+        """Least-loaded shard eligible to host prompt/chunk pages: the
+        first ``prefill_shards`` shards when disaggregated, any shard
+        otherwise."""
+        k = self.prefill_shards or self.dp
+        return int(np.argmax([self._shard_headroom(s) for s in range(k)]))
 
     def _seed_prompt_pages(self, info, shard: Optional[int] = None):
         """Allocate + write the request's full prompt pages (once per
@@ -1062,9 +1114,14 @@ class ServeEngine:
             return 0
         avail = [self._shard_headroom(s) for s in range(self.dp)]
         held = info.get("prompt_pages")
-        hold_shard = info.get("page_shard",
-                              self.pool.shard_of(held[0]) if held
-                              else self._slot_shard(free[0]))
+        if "page_shard" in info:
+            hold_shard = info["page_shard"]
+        elif held:
+            hold_shard = self.pool.shard_of(held[0])
+        elif self.prefill_shards:
+            hold_shard = self._prefill_shard_pick()
+        else:
+            hold_shard = self._slot_shard(free[0])
         avail[hold_shard] -= need_hold
         if avail[hold_shard] < 0:
             # the shard pinned to hold the shared prompt pages cannot
@@ -1257,13 +1314,12 @@ class ServeEngine:
             self.state = self.state._replace(
                 cache={**cache, "block_table": bt})
 
-    def kv_stats(self) -> Dict[str, Any]:
-        """Pool accounting incl. resident KV bytes vs. the dense
-        worst case (slots × cache_len) the paged layout replaces."""
-        assert self.paged
-        stats = self.pool.stats()
+    def _bytes_per_page(self) -> int:
+        """True resident bytes per pool page across every attention
+        layer: quantized values + their scale tensors (CoW-shared pages
+        share both). Feeds both telemetry and the pool's byte budget."""
 
-        def bytes_per_page(leaf):
+        def per_leaf(leaf):
             # every paged leaf — values and quantization scales alike —
             # carries a num_pages axis (position depends on stacking)
             return leaf.size // self.pool.num_pages * leaf.dtype.itemsize
@@ -1272,9 +1328,15 @@ class ServeEngine:
         for entries in (self.state.cache["super"], self.state.cache["tail"]):
             for e in entries:
                 if isinstance(e, dict) and "k_pages" in e:
-                    # true resident bytes: quantized values + their
-                    # scale tensors (CoW-shared pages share both)
-                    bpp += sum(bytes_per_page(leaf) for leaf in e.values())
+                    bpp += sum(per_leaf(leaf) for leaf in e.values())
+        return bpp
+
+    def kv_stats(self) -> Dict[str, Any]:
+        """Pool accounting incl. resident KV bytes vs. the dense
+        worst case (slots × cache_len) the paged layout replaces."""
+        assert self.paged
+        stats = self.pool.stats()
+        bpp = self._bytes_per_page()
         stats["kv_dtype"] = self.kv_dtype
         stats["bytes_per_page"] = bpp
         stats["resident_kv_bytes"] = stats["in_use"] * bpp
@@ -1301,6 +1363,8 @@ class ServeEngine:
         s["starved"] = len(self.starved_uids)
         s["prefill_calls"] = self.prefill_calls
         s["prefill_tokens"] = self.prefill_tokens
+        s["chunk_calls"] = self.chunk_calls
+        s["chunk_tokens"] = self.chunk_tokens
         s["cancelled_requests"] = self.cancelled_requests
         return s
 
@@ -1320,6 +1384,8 @@ class ServeEngine:
         self.spec_accepted = 0
         self.prefill_calls = 0
         self.prefill_tokens = 0
+        self.chunk_calls = 0
+        self.chunk_tokens = 0
         self.cancelled_requests = 0
         self.starved_uids.clear()
         self.scheduler.reset_stats()
@@ -1591,6 +1657,126 @@ class ServeEngine:
         return {"super": gather(cache["super"]),
                 "tail": gather(cache["tail"])}
 
+    # -- chunked prefill -----------------------------------------------
+    def _start_chunk_job(self, req: Request) -> None:
+        """Open a chunked-prefill job for a long prompt: probe the
+        prefix cache for a page-aligned head (the hit pages are the
+        job's first chunks, already resident), pick the page shard the
+        whole prompt will live on, and register the cursor. If the
+        cached head leaves at most one chunk of work, the one-shot
+        suffix/whole paths are strictly better — no job is opened."""
+        prompt = np.asarray(req.prompt, np.int64)
+        pages: List[int] = []
+        cur = 0
+        if self.prefix_cache and req.evidence is None:
+            usable = (len(prompt) - 1) // self.page_size
+            if usable > 0:
+                keys = prefix_page_keys(prompt, self.page_size)
+                pages = self.pool.prefix.match_and_hold(keys[:usable]) or []
+                cur = len(pages) * self.page_size
+        if len(prompt) - cur <= self.chunk:
+            if pages:
+                self.pool.free(pages)    # release the probe hold
+            return
+        shard = self.pool.shard_of(pages[0]) if pages \
+            else self._prefill_shard_pick()
+        self._chunking[req.uid] = {"req": req, "pos": cur, "pages": pages,
+                                   "shard": shard}
+
+    def _run_chunk(self, uid: int, job: Dict[str, Any]) -> int:
+        """Advance one job by one chunk; returns chunk tokens consumed
+        (0 when the job's shard cannot fund the chunk's pages yet).
+
+        Non-final chunks run the suffix forward against the job's pages
+        as context and write their K/V into freshly allocated pool pages
+        (page-aligned by construction). The FINAL chunk instead keeps
+        its dense prefill row and promotes the job to a normal request
+        record — ``info`` is indistinguishable from a prefix-cache
+        suffix prefill (prompt_pages = chunk pages, prefix_len =
+        cursor), so admission, seeding and teardown are unchanged."""
+        req = job["req"]
+        prompt = np.asarray(req.prompt, np.int64)
+        L, cur, ps = len(prompt), job["pos"], self.page_size
+        final = L - cur <= self.chunk
+        take = L - cur if final else self.chunk
+        if not final:
+            # keep one worst-case candidate fundable after this chunk —
+            # chunk pages must never starve admission into deadlock
+            need = take // ps
+            if self._shard_headroom(job["shard"]) - need < \
+                    self._pages_per_candidate(L):
+                return 0
+        toks = jnp.asarray(prompt[cur:cur + take], jnp.int32)[None, :]
+        cache_row = self.model.make_cache(1, self.cache_len, self._dtype)
+        if cur == 0:
+            lg, h, cache_row = self._prefill_fn(self.params, toks,
+                                                cache_row, None)
+        else:
+            ctx = self._gather_prefix_ctx(job["pages"])
+            lg, h, cache_row = self._suffix_fn(self.params, toks, cache_row,
+                                               ctx, jnp.int32(cur))
+        self.chunk_calls += 1
+        self.chunk_tokens += take
+        if not final:
+            new_pages = self.pool.alloc(need, job["shard"])
+            # the chunk row holds K/V for [cur, cur+take) at row
+            # positions [0, take)
+            self.state = self.state._replace(cache=self._write_pages(
+                self.state.cache, cache_row, new_pages, 0))
+            job["pages"] = job["pages"] + new_pages
+            job["pos"] = cur + take
+            return take
+        del self._chunking[uid]
+        self.prefill_calls += 1
+        self.prefill_tokens += take
+        self._init_info(req, cache_row, lg, h, L)
+        info = self._reqs[uid]
+        info["prompt_pages"] = job["pages"]     # request hold carried over
+        info["prefix_len"] = cur
+        info["page_shard"] = job["shard"]
+        if self.prefix_cache and req.evidence is None:
+            info["page_keys"] = prefix_page_keys(prompt, ps)
+            info["cacheable"] = True
+            self._maybe_seed_early(req)
+        return take
+
+    def _prefill_chunks(self) -> None:
+        """One chunked-prefill pass: open jobs for long prompts in the
+        admission window, then spend the per-turn chunk-token budget on
+        the policy-ranked jobs. When no slot is decoding there is
+        nothing to protect — the budget is ignored, but the pass stops
+        as soon as a job completes so the request admits immediately
+        (cold-start TTFT)."""
+        if not self.chunked:
+            return
+        ahead = max(self.B, 4)
+        for r in self._queue[:ahead]:
+            if (r.uid in self._reqs or r.uid in self._chunking or
+                    r.evidence is not None or len(r.prompt) <= self.chunk):
+                continue
+            self._start_chunk_job(r)
+        if not self._chunking:
+            return
+        items = [PrefillWork(uid=uid, arrival=self._arrival[uid],
+                             prompt_len=len(job["req"].prompt),
+                             prefilled=job["pos"])
+                 for uid, job in self._chunking.items()]
+        idle = not self._any_live()
+        for w in self.scheduler.prefill_order(items):
+            while True:
+                job = self._chunking.get(w.uid)
+                if job is None:
+                    if idle:
+                        return       # a request just became admissible
+                    break
+                if not idle and self._chunk_left <= 0:
+                    return
+                took = self._run_chunk(w.uid, job)
+                if took == 0:
+                    break            # shard can't fund the chunk yet
+                self._chunk_left -= took
+                self._chunk_progress = True
+
     def _bucket_len(self, prompt_len: int) -> int:
         return _next_pow2(max(prompt_len, self.prefill_bucket_min))
 
@@ -1602,8 +1788,11 @@ class ServeEngine:
         is FIFO, so a prefix is always the next work): each prefilled
         request pins a dense cache row until admission, and an unbounded
         queue must not pin O(queue) rows of KV."""
+        self._prefill_chunks()
         ahead = max(self.B, 4)
-        pending = [r for r in self._queue[:ahead] if r.uid not in self._reqs]
+        pending = [r for r in self._queue[:ahead]
+                   if r.uid not in self._reqs and
+                   r.uid not in self._chunking]
         if not pending:
             return
         # prefix-cache hits take the suffix path (skipping the shared
@@ -1886,6 +2075,11 @@ class ServeEngine:
         candidates it already has (possibly none — ``Result.tokens``
         empty, recorded in ``starved_uids``). The budget invariant
         (total tokens <= budget) is preserved; nothing hangs."""
+        for job in self._chunking.values():
+            # half-prefilled chunk pages can never be used again
+            if job["pages"]:
+                self.pool.free(job["pages"])
+        self._chunking.clear()
         for req in self._queue:
             if req.uid not in self._reqs:
                 self._reqs[req.uid] = {
@@ -1905,6 +2099,7 @@ class ServeEngine:
         slots. Returns True when all work is complete (caller breaks)."""
         if not self._has_pending():
             return True
+        self._chunk_progress = False
         self._schedule()
         if not self._any_live():
             if self.scheduler.exhausted():
@@ -1912,6 +2107,10 @@ class ServeEngine:
                 # again — finalize instead of spinning
                 self._finalize_starved()
                 return True
+            if self._chunk_progress:
+                # chunked prefill advanced — not a sizing error, the
+                # caller loops and the next pass continues the job
+                return False
             if self.paged:
                 self._raise_pool_sizing()
         return False
@@ -1941,6 +2140,7 @@ class ServeEngine:
         finished candidates). Returns False when all work is drained —
         this is the old ``run`` loop body verbatim, extracted so the
         async front-end can drive the engine launch-by-launch."""
+        self._chunk_left = self.chunk_budget     # per-turn chunk budget
         if not self._any_live():
             if self._refill_idle():
                 return False
@@ -1998,6 +2198,12 @@ class ServeEngine:
             self._schedule()
             if self.has_evidence:
                 self._evid = self._gather_evid()
+        elif self.chunked and (self._chunking or
+                               (self._queue and self._free_slots())):
+            # no completions this launch, but prefill work is waiting:
+            # spend this turn's chunk budget between decode launches —
+            # the stall-free interleaving the chunking exists for
+            self._schedule()
         return True
 
     def pump(self) -> bool:
@@ -2014,7 +2220,7 @@ class ServeEngine:
                 "engine with macro_steps >= 1 for async serving")
         if self._evid is None:
             self._begin()
-        elif self._queue and self._free_slots():
+        elif (self._queue and self._free_slots()) or self._chunking:
             self._schedule()
             if self.has_evidence and self._any_live():
                 self._evid = self._gather_evid()
@@ -2049,6 +2255,11 @@ class ServeEngine:
         (``cancelled=True``) with whatever candidates it completed."""
         info = self._reqs.get(uid)
         if info is None:
+            # mid chunked prefill: return every chunk page to the pool
+            # (the job's hold) before dropping the queued request
+            job = self._chunking.pop(uid, None)
+            if job is not None and job["pages"]:
+                self.pool.free(job["pages"])
             # queued but never prefilled: drop from the queue, with a
             # stub record so results stay uniform
             for i, r in enumerate(self._queue):
@@ -2257,6 +2468,10 @@ class _EngineSchedContext(SchedulerContext):
         eng = self.eng
         out = []
         for r in eng._queue:
+            if r.uid in eng._chunking:
+                continue                 # mid chunked prefill: not yet
+                                         # admissible, but later short
+                                         # requests must keep streaming
             if r.uid not in eng._reqs:
                 break                    # prefill covers a queue prefix
             info = eng._reqs[r.uid]

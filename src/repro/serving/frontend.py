@@ -24,6 +24,14 @@ consistency) choose their answer only at completion, so their streams
 deliver the chosen candidate's tokens when the request finishes. In
 both cases the stream's concatenation is byte-identical to the
 synchronous ``run()`` result (pinned by ``tests/test_async_frontend``).
+
+TTFT under load: with chunked prefill on (``ServeEngine(prefill_
+chunk=...)``) the pump loop interleaves at most one chunk budget of
+prefill work per launch, so a long prompt no longer monopolizes the
+engine between macro steps — short requests' first tokens (and the
+long request's own TTFT, which starts at its *final* chunk rather
+than a monolithic whole-prompt prefill) stop queueing behind
+whole-prompt prefills.
 """
 from __future__ import annotations
 

@@ -193,6 +193,9 @@ class PrefixCache:
             else:
                 self._touch(k, node)
             parent = k
+        # registration makes these pages cache-resident: under a byte
+        # budget the oldest cached chains pay for the newest
+        self.pool.enforce_byte_budget()
 
     # -- eviction -------------------------------------------------------
     def _reclaimable_blocked(self) -> set:
@@ -249,18 +252,25 @@ class PrefixCache:
             else self._heap
         freed = 0
         stash: List[Tuple[int, str]] = []
-        while freed < n and heap:
-            tick, key = heapq.heappop(heap)
-            node = self._nodes.get(key)
-            if node is None or node.tick != tick:
-                continue                       # stale lazy-deletion entry
-            if node.children > 0 or self.pool.refcount(node.page) > 1 or \
-                    (shard is not None and
-                     self.pool.shard_of(node.page) != shard):
-                stash.append((tick, key))      # alive but not evictable now
-                continue
-            self._evict_node(key, node)
-            freed += 1
+        # evicting frees pages, and pool.free hooks byte-budget
+        # enforcement — which would re-enter THIS heap walk. Hold the
+        # pool's enforcement latch for the duration.
+        prev, self.pool._enforcing = self.pool._enforcing, True
+        try:
+            while freed < n and heap:
+                tick, key = heapq.heappop(heap)
+                node = self._nodes.get(key)
+                if node is None or node.tick != tick:
+                    continue                   # stale lazy-deletion entry
+                if node.children > 0 or self.pool.refcount(node.page) > 1 \
+                        or (shard is not None and
+                            self.pool.shard_of(node.page) != shard):
+                    stash.append((tick, key))  # alive but not evictable now
+                    continue
+                self._evict_node(key, node)
+                freed += 1
+        finally:
+            self.pool._enforcing = prev
         for entry in stash:
             heapq.heappush(heap, entry)
         return freed
@@ -268,8 +278,12 @@ class PrefixCache:
     def drop_all(self):
         """Release every cache hold (tests / shutdown). Pages still held
         by live requests survive with their remaining holders."""
-        for node in self._nodes.values():
-            self.pool.free([node.page])
+        prev, self.pool._enforcing = self.pool._enforcing, True
+        try:
+            for node in self._nodes.values():
+                self.pool.free([node.page])
+        finally:
+            self.pool._enforcing = prev
         self._nodes.clear()
         self._heap.clear()
         for h in self._heap_sh:
@@ -293,7 +307,8 @@ class PrefixCache:
 
 class PagePool:
     def __init__(self, num_pages: int, page_size: int, *, reserved: int = 1,
-                 prefix_cache: bool = False, num_shards: int = 1):
+                 prefix_cache: bool = False, num_shards: int = 1,
+                 kv_byte_budget: int = 0):
         if num_shards < 1:
             raise PagePoolError(f"num_shards={num_shards}")
         if num_pages % num_shards:
@@ -335,6 +350,18 @@ class PagePool:
         # cross-request prefix cache (None when disabled)
         self.prefix: Optional[PrefixCache] = \
             PrefixCache(self) if prefix_cache else None
+        # Byte-budgeted residency: once the engine reports bytes_per_page
+        # (quantized values + scale tensors — the kv_stats() definition),
+        # every refcount mutation that could leave resident KV above the
+        # ceiling drains cached-only prefix pages through the eviction
+        # heaps until it fits or nothing evictable remains. Live holds
+        # are never evicted, so under heavy live traffic residency may
+        # exceed the budget — the enforced invariant is
+        # ``resident <= budget OR evictable() == 0``.
+        self.kv_byte_budget = int(kv_byte_budget)
+        self.bytes_per_page = 0          # set via set_bytes_per_page
+        self.budget_evictions = 0
+        self._enforcing = False
 
     # ------------------------------------------------------------------
     @property
@@ -365,6 +392,48 @@ class PagePool:
 
     def live_tokens_capacity(self) -> int:
         return self.in_use * self.page_size
+
+    # ------------------------------------------------------------------
+    # Byte-budgeted residency (prefix-cache ceiling)
+    # ------------------------------------------------------------------
+    def set_bytes_per_page(self, bpp: int) -> None:
+        """Engine callback once the device cache exists: true resident
+        bytes per page (quantized values + scale tensors, summed over
+        every paged layer — the ``kv_stats()`` definition). Activates
+        ``kv_byte_budget`` enforcement and applies it immediately."""
+        self.bytes_per_page = int(bpp)
+        self.enforce_byte_budget()
+
+    @property
+    def resident_kv_bytes(self) -> int:
+        """Bytes held by in-use pages (0 until bytes_per_page is set)."""
+        return self.in_use * self.bytes_per_page
+
+    def over_budget_pages(self) -> int:
+        """Pages that must leave residency to meet the byte budget."""
+        if not (self.kv_byte_budget and self.bytes_per_page):
+            return 0
+        over = self.resident_kv_bytes - self.kv_byte_budget
+        return -(-over // self.bytes_per_page) if over > 0 else 0
+
+    def enforce_byte_budget(self) -> int:
+        """Evict cached-only prefix pages (LRU-leaf-first, through the
+        lazy-deletion heaps) until resident KV bytes fall under
+        ``kv_byte_budget``, or nothing cached remains evictable. Called
+        after every alloc/free/insert; re-entrant calls from the
+        eviction's own frees are no-ops. Returns pages evicted."""
+        if self._enforcing or self.prefix is None:
+            return 0
+        n = self.over_budget_pages()
+        if n == 0:
+            return 0
+        self._enforcing = True
+        try:
+            freed = self.prefix.evict(n)
+        finally:
+            self._enforcing = False
+        self.budget_evictions += freed
+        return freed
 
     # ------------------------------------------------------------------
     def evictable(self, shard: Optional[int] = None) -> int:
@@ -419,6 +488,7 @@ class PagePool:
             self._refs[p] = 1
         self.mutations += 1
         self.max_in_use = max(self.max_in_use, self.in_use)
+        self.enforce_byte_budget()
         return pages
 
     def share(self, pages: Iterable[int]):
@@ -443,6 +513,9 @@ class PagePool:
             if self._refs[p] == 0:
                 self._free_sh[self.shard_of(p)].append(p)
         self.mutations += 1
+        # a dropped request hold may have just unblocked cached pages
+        # (or their ancestors) the budget was waiting to reclaim
+        self.enforce_byte_budget()
 
     # ------------------------------------------------------------------
     # Page frontiers (macro-step decode)
@@ -517,6 +590,7 @@ class PagePool:
         self._frontier_staged_sh[:] = 0
         self._frontier_returned_sh[:] = 0
         self.max_in_use = self.in_use
+        self.budget_evictions = 0
         if self.prefix is not None:
             self.prefix.reset_stats()
 
@@ -531,6 +605,11 @@ class PagePool:
             "frontier_returned": self.frontier_returned,
             "frontier_peak_stage": self.frontier_peak_stage,
         }
+        if self.kv_byte_budget:
+            s["kv_byte_budget"] = self.kv_byte_budget
+            s["budget_evictions"] = self.budget_evictions
+            if self.bytes_per_page:
+                s["resident_kv_bytes"] = self.resident_kv_bytes
         if self.num_shards > 1:
             s["num_shards"] = self.num_shards
             s["shards"] = [{

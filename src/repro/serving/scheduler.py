@@ -60,6 +60,18 @@ class NewWork:
 
 
 @dataclasses.dataclass
+class PrefillWork:
+    """A queued request mid chunked prefill (or awaiting its first
+    chunk). The engine asks the policy to order these each pump turn —
+    the chunk-token budget goes to the top-ranked jobs first."""
+    uid: int
+    arrival: int                 # submit order (FIFO tiebreak)
+    prompt_len: int              # total prompt tokens
+    prefilled: int = 0           # chunk tokens already in the page pool
+    evidence_entropy: float = 0.0
+
+
+@dataclasses.dataclass
 class RoundWork:
     """A request whose last round completed and wants another."""
     uid: int
@@ -240,6 +252,14 @@ class Scheduler:
     def schedule(self, ctx: SchedulerContext) -> None:
         raise NotImplementedError
 
+    def prefill_order(self, items: List[PrefillWork]) -> List[PrefillWork]:
+        """Order chunked-prefill jobs for the engine's per-turn
+        chunk-token budget. Base/fifo: arrival order — the head-of-line
+        request's prefill completes first, so admission order (and
+        therefore fifo's token streams) matches the unchunked engine
+        exactly."""
+        return sorted(items, key=lambda w: w.arrival)
+
 
 class FifoScheduler(Scheduler):
     """The pre-refactor engine loop, verbatim: queued requests first (in
@@ -419,6 +439,20 @@ class CoverageScheduler(Scheduler):
                 ctx.admit_new(w.uid, take, limit)
             else:
                 ctx.admit_round(w.uid, take, limit)
+
+    def prefill_order(self, items: List[PrefillWork]) -> List[PrefillWork]:
+        """Coverage ranking of partially-prefilled work: the difficulty
+        prior (prompt length + evidence-alignment entropy — the same
+        prior that ranks unobserved NewWork) plus prefill *progress*, so
+        a nearly-complete prefill finishes ahead of a barely-started one
+        of equal difficulty — its first decode token (the TTFT the
+        chunking exists to protect) is the cheapest one to unlock.
+        Arrival breaks ties, so equal-priority work never reorders."""
+        def rank(w: PrefillWork) -> float:
+            progress = w.prefilled / w.prompt_len if w.prompt_len else 0.0
+            return self.difficulty_weight * self._difficulty(w) + progress
+
+        return sorted(items, key=lambda w: (-rank(w), w.arrival))
 
     def _bump(self, key):
         self._wait[key] = self._wait.get(key, 0) + 1

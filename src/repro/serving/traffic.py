@@ -45,6 +45,7 @@ class RequestTrace:
     t_first: Optional[float] = None  # first stream output seen
     t_done: Optional[float] = None   # result available
     n_tokens: int = 0                # chosen candidate's tokens
+    prompt_len: int = 0              # prompt tokens (TTFT bucketing)
     cancelled: bool = False
 
 
@@ -117,8 +118,18 @@ def percentile(xs: Sequence[float], q: float) -> float:
     return float(arr[lo] * (1.0 - frac) + arr[hi] * frac)
 
 
+def _bucket_label(b: int, bounds: Sequence[int]) -> str:
+    """Human-stable bucket names: "lt64", "64to256", "ge256"."""
+    if b == 0:
+        return f"lt{bounds[0]}"
+    if b == len(bounds):
+        return f"ge{bounds[-1]}"
+    return f"{bounds[b - 1]}to{bounds[b]}"
+
+
 def slo_metrics(traces: Sequence[RequestTrace], *, slo_ttft_ms: float,
-                span_s: Optional[float] = None) -> Dict[str, float]:
+                span_s: Optional[float] = None,
+                length_buckets: Sequence[int] = ()) -> Dict[str, object]:
     """SLO summary of an open-loop run.
 
     TTFT = first stream output minus *scheduled arrival* (queueing
@@ -126,7 +137,13 @@ def slo_metrics(traces: Sequence[RequestTrace], *, slo_ttft_ms: float,
     with >= 2 tokens. Goodput = completed requests meeting the TTFT SLO
     per second of span; ``tokens_per_s`` counts completed requests'
     tokens over the same span. Cancelled requests are excluded from the
-    latency distributions but reported."""
+    latency distributions but reported.
+
+    ``length_buckets``: ascending prompt-length boundaries (e.g.
+    ``(64, 256)``) adding ``ttft_by_bucket`` — per-prompt-length-bucket
+    TTFT percentiles keyed "lt64"/"64to256"/"ge256" — so a long-prompt
+    tail improvement (chunked prefill's whole point) is visible instead
+    of averaged away."""
     done = [t for t in traces
             if not t.cancelled and t.t_done is not None
             and t.t_first is not None]
@@ -138,7 +155,7 @@ def slo_metrics(traces: Sequence[RequestTrace], *, slo_ttft_ms: float,
         t_start = min((t.t_arrival for t in traces), default=0.0)
         span_s = max(t_end - t_start, 1e-9)
     good = sum(1 for ms in ttft_ms if ms <= slo_ttft_ms)
-    return {
+    out: Dict[str, object] = {
         "completed": len(done),
         "cancelled": sum(1 for t in traces if t.cancelled),
         "span_s": span_s,
@@ -151,6 +168,21 @@ def slo_metrics(traces: Sequence[RequestTrace], *, slo_ttft_ms: float,
         "good_requests": good,
         "tokens_per_s": sum(t.n_tokens for t in done) / span_s,
     }
+    if length_buckets:
+        bounds = list(length_buckets)
+        assert bounds == sorted(bounds) and len(set(bounds)) == len(bounds), \
+            f"length_buckets must be strictly ascending: {bounds}"
+        by: Dict[str, List[float]] = {}
+        for t in done:
+            b = int(np.searchsorted(bounds, t.prompt_len, side="right"))
+            by.setdefault(_bucket_label(b, bounds), []).append(
+                (t.t_first - t.t_arrival) * 1e3)
+        out["ttft_by_bucket"] = {
+            label: {"n": len(xs),
+                    "p50_ms": percentile(xs, 50),
+                    "p99_ms": percentile(xs, 99)}
+            for label, xs in sorted(by.items())}
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -173,7 +205,8 @@ async def drive_open_loop(frontend, requests: Sequence,
     assert len(requests) == len(arrivals)
     t0 = clock()
     cancel_set = set(cancel_uids)
-    traces = [RequestTrace(uid=r.uid, t_arrival=float(a))
+    traces = [RequestTrace(uid=r.uid, t_arrival=float(a),
+                           prompt_len=len(r.prompt))
               for r, a in zip(requests, arrivals)]
 
     async def one(req, tr: RequestTrace):
@@ -205,7 +238,8 @@ async def drive_open_loop(frontend, requests: Sequence,
 
 def run_open_loop(engine, requests: Sequence, arrivals: Sequence[float],
                   *, slo_ttft_ms: float, cancel_uids: Sequence[int] = (),
-                  cancel_after_tokens: int = 1):
+                  cancel_after_tokens: int = 1,
+                  length_buckets: Sequence[int] = ()):
     """Synchronous wrapper: build a front-end on ``engine``, drive the
     open-loop schedule, and return ``(traces, metrics)``."""
     from repro.serving.frontend import AsyncServeFrontend
@@ -217,4 +251,5 @@ def run_open_loop(engine, requests: Sequence, arrivals: Sequence[float],
                 cancel_after_tokens=cancel_after_tokens)
 
     traces = asyncio.run(main())
-    return traces, slo_metrics(traces, slo_ttft_ms=slo_ttft_ms)
+    return traces, slo_metrics(traces, slo_ttft_ms=slo_ttft_ms,
+                               length_buckets=length_buckets)

@@ -5,7 +5,8 @@ boundary: staged frontier pages go back via ``PagePool.return_frontier``
 (wholesale, before the per-token reclaim), held pages and the slot are
 freed, and the scheduler's worst-case commitment is refunded. These
 tests pin each cancel timing class (queued-unprefilled, prefilled-
-pending, running, finished, unknown) and a hypothesis property that
+pending, partially-prefilled mid-chunking, running, finished, unknown)
+and a hypothesis property that
 fires cancels at random pump boundaries and checks the conservation
 invariant — no page, slot, or budget token leaks — plus the difficulty
 priors and the telemetry-reset contract that ride the same PR.
@@ -111,6 +112,37 @@ def test_cancel_running_at_pump_boundary(greedy_eng):
         assert not r.cancelled and len(r.tokens) == MAX_NEW
     assert eng.cancelled_requests >= 1
     assert eng.sched_stats()["cancelled_candidates"] >= 1
+    _assert_conserved(eng)
+
+
+def test_cancel_partially_prefilled_returns_chunk_pages(tiny_model):
+    """The timing class chunked prefill adds: the cancel lands while
+    the request is mid-chunking — pages held by the job, no slot, no
+    request record yet — and must free every chunk page via the job
+    teardown path. The long prompt is submitted while shorts decode
+    with one slot free (``pump`` only runs admission passes when a
+    slot is free), so its job is budget-paced to one chunk per turn."""
+    cfg, model, params = tiny_model
+    eng = _mk_engine(model, params, mode="greedy", macro_steps=2, slots=3,
+                     max_new=MAX_NEW, eos_id=cfg.vocab_size, impl="paged",
+                     paged_kv=PagedKVConfig(page_size=8), cache_len=128,
+                     prefill_chunk=16, prefill_chunk_budget=16)
+    uids = _uids(3)
+    _submit(eng, cfg, uids[:2])
+    eng.pump()                            # shorts admitted and live
+    rng = np.random.default_rng(uids[2])
+    eng.submit(_request(
+        uids[2], rng.integers(2, cfg.vocab_size, 96).astype(np.int32)))
+    eng.pump()                            # job opens, one 16-token chunk
+    assert uids[2] in eng._chunking, "long prompt should be mid-chunking"
+    held = list(eng._chunking[uids[2]]["pages"])
+    assert held
+    assert eng.cancel(uids[2])
+    _drain(eng)
+    assert eng.result(uids[2]).cancelled
+    for uid in uids[:2]:
+        assert len(eng.result(uid).tokens) == MAX_NEW
+    assert all(eng.pool.refcount(p) == 0 for p in held)
     _assert_conserved(eng)
 
 

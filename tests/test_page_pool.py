@@ -1,6 +1,7 @@
 """PagePool invariants: alloc/free conservation, refcounted sharing
 (the CoW prompt-page mechanism), misuse detection, sharded subpools
-(mesh-parallel serving), and the min-tick-heap prefix eviction."""
+(mesh-parallel serving), the min-tick-heap prefix eviction, and the
+byte-budgeted residency ceiling (``kv_byte_budget``)."""
 import numpy as np
 import pytest
 
@@ -222,3 +223,119 @@ def test_sharded_eviction_filter():
     assert pool.prefix.evict(4, shard=1) == 2      # only shard 1's pages
     assert set(pool.prefix._nodes) == set(ka)
     pool.check()
+
+
+# ---------------------------------------------------------------------------
+# byte-budgeted residency (kv_byte_budget)
+# ---------------------------------------------------------------------------
+
+BPP = 64                                           # test bytes-per-page
+
+
+def test_byte_budget_evicts_cached_pages_on_pressure():
+    """Crossing the ceiling drains cached-only chains LRU-first and the
+    evictions land on the budget_evictions counter."""
+    pool = PagePool(17, 4, prefix_cache=True, kv_byte_budget=2 * BPP)
+    pool.set_bytes_per_page(BPP)                   # budget: 2 pages
+    ka, _ = _chain(pool, np.arange(2, 10), 4)      # 2 cached pages: fits
+    assert pool.resident_kv_bytes == 2 * BPP
+    assert pool.budget_evictions == 0
+    kb, _ = _chain(pool, np.arange(20, 28), 4)     # +2 pages: over budget
+    assert pool.resident_kv_bytes <= pool.kv_byte_budget
+    assert pool.budget_evictions == 2
+    assert set(pool.prefix._nodes) == set(kb)      # LRU chain a went first
+    pool.check()
+
+
+def test_byte_budget_never_evicts_live_holds():
+    """Live request holds may push residency over the ceiling; the
+    enforced invariant is resident <= budget OR evictable() == 0, and
+    enforcement fires as soon as the hold drops."""
+    pool = PagePool(17, 4, prefix_cache=True, kv_byte_budget=1 * BPP)
+    pool.set_bytes_per_page(BPP)
+    ka = prefix_page_keys(np.arange(2, 10), 4)
+    pa = pool.alloc(2)
+    pool.prefix.insert(ka, pa)                     # cached AND still held
+    assert pool.resident_kv_bytes > pool.kv_byte_budget
+    assert pool.evictable() == 0
+    pool.free(pa)                                  # hold drops: enforce
+    assert pool.resident_kv_bytes <= pool.kv_byte_budget
+    pool.check()
+
+
+def test_byte_budget_inactive_without_bytes_per_page():
+    """Until the engine reports bytes_per_page the budget cannot be
+    expressed in pages and must not evict anything."""
+    pool = PagePool(17, 4, prefix_cache=True, kv_byte_budget=1)
+    _chain(pool, np.arange(2, 10), 4)
+    assert pool.resident_kv_bytes == 0             # bpp unknown
+    assert pool.over_budget_pages() == 0
+    assert pool.budget_evictions == 0
+    pool.check()
+
+
+def _run_budget_ops(ops, budget_pages):
+    """Random alloc/insert/free/touch traffic against a byte budget.
+    After EVERY mutation the pool must satisfy the budget invariant
+    (resident <= budget, or nothing cached-only remains to evict) and
+    the structural self-check."""
+    pool = PagePool(33, 4, prefix_cache=True,
+                    kv_byte_budget=budget_pages * BPP)
+    pool.set_bytes_per_page(BPP)
+    held = []
+
+    def invariant():
+        assert (pool.resident_kv_bytes <= pool.kv_byte_budget
+                or pool.evictable() == 0), \
+            (pool.resident_kv_bytes, pool.kv_byte_budget, pool.evictable())
+        pool.check()
+
+    for kind, val in ops:
+        base = 100 * (val + 2)                     # distinct token ranges
+        toks = np.arange(base, base + 8)
+        if kind == "chain":                        # cache-only 2-page chain
+            if pool.free_pages + pool.evictable() < 2:
+                continue
+            _chain(pool, toks, 4)
+        elif kind == "hold":                       # live 2-page chain
+            if pool.free_pages + pool.evictable() < 2:
+                continue
+            pages = pool.alloc(2)
+            pool.prefix.insert(prefix_page_keys(toks, 4), pages)
+            held.append(pages)
+        elif kind == "release":
+            if held:
+                pool.free(held.pop(val % len(held)))
+        elif kind == "touch":                      # LRU refresh on a hit
+            got = pool.prefix.match_and_hold(prefix_page_keys(toks, 4))
+            if got:
+                pool.free(got)
+        invariant()
+    for pages in held:
+        pool.free(pages)
+    invariant()
+
+
+_BUDGET_OP = [("chain", 0), ("hold", 1), ("chain", 2), ("release", 0),
+              ("touch", 0), ("chain", 3), ("hold", 4), ("touch", 2),
+              ("release", 1), ("chain", 5)]
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                # no-hypothesis lane
+    st = None
+
+if st is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(ops=st.lists(
+               st.tuples(st.sampled_from(["chain", "hold", "release",
+                                          "touch"]),
+                         st.integers(0, 5)),
+               min_size=0, max_size=12),
+           budget_pages=st.integers(1, 5))
+    def test_byte_budget_invariant_under_random_traffic(ops, budget_pages):
+        _run_budget_ops(ops, budget_pages)
+else:
+    @pytest.mark.parametrize("budget_pages", [1, 2, 5])
+    def test_byte_budget_invariant_under_random_traffic(budget_pages):
+        _run_budget_ops(_BUDGET_OP, budget_pages)

@@ -1,0 +1,303 @@
+"""Chunked prefill + prefill/decode disaggregation.
+
+The contract under test: splitting a prompt's prefill into fixed-size
+page-aligned chunks — at the model level (``Model.prefill_chunked``) or
+inside the serving engine (``ServeEngine(prefill_chunk=...)``) — is a
+*scheduling* decision, never an output decision. Greedy token streams
+must be byte-identical for every chunk size including the degenerate
+ones (chunk-of-one rounds up to a page; a chunk covering the prompt
+disables chunking), across traffic policies, the prefix cache,
+speculation, and the chunk-token budget. Mid-prefill cancellation must
+return every chunk page, and disaggregated prefill (chunk jobs pinned
+to a shard range of the page axis, decode slots reading cross-shard)
+must also be stream-invariant.
+
+Multi-chunk model-level logits are compared with a tight tolerance, not
+bitwise: XLA reduction order varies with matmul shapes, so a 3-chunk
+split of a 2-layer fp32 model drifts ~1e-6 from the whole prefill while
+the argmax (and therefore every greedy stream) is unchanged.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import _mk_engine, _request
+from repro.config import PagedKVConfig
+
+MAX_NEW = 6
+PROMPT_LENS = (50, 6, 33, 80, 12, 64)
+
+
+def _mk(model, params, *, eos, **kw):
+    kw.setdefault("mode", "greedy")
+    kw.setdefault("macro_steps", 2)
+    kw.setdefault("slots", 4)
+    kw.setdefault("cache_len", 128)
+    kw.setdefault("impl", "paged")
+    kw.setdefault("paged_kv", PagedKVConfig(page_size=8))
+    return _mk_engine(model, params, max_new=MAX_NEW, eos_id=eos, **kw)
+
+
+def _prompts(cfg, lens=PROMPT_LENS, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+def _streams(eng, prompts, uid0=0):
+    for i, p in enumerate(prompts):
+        eng.submit(_request(uid0 + i, p))
+    res = sorted(eng.run(), key=lambda r: r.uid)
+    return [tuple(np.asarray(r.tokens).tolist()) for r in res]
+
+
+def _drained(eng):
+    eng.pool.check()
+    resident = len(eng.pool.prefix._nodes) if eng.pool.prefix else 0
+    assert eng.pool.in_use == resident
+    assert not eng._chunking
+    assert eng.scheduler.committed == 0
+
+
+# ---------------------------------------------------------------------------
+# model level: chunked == whole prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_model_chunked_prefill_matches_whole(tiny_model, chunk):
+    cfg, model, params = tiny_model
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(2, cfg.vocab_size, (2, 13)), jnp.int32)
+    lg_w, h_w, cache_w = model.prefill(
+        params, toks, model.make_cache(2, 32))
+    lg_c, h_c, cache_c = model.prefill_chunked(
+        params, toks, model.make_cache(2, 32), chunk)
+    np.testing.assert_allclose(np.asarray(lg_c), np.asarray(lg_w),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_w),
+                               atol=1e-5, rtol=1e-5)
+    assert np.array_equal(np.argmax(lg_c, -1), np.argmax(lg_w, -1))
+    for a, b in zip(jax.tree_util.tree_leaves(cache_c),
+                    jax.tree_util.tree_leaves(cache_w)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_model_chunked_prefill_degenerate_is_exact(tiny_model):
+    """chunk=0 and chunk >= L take the whole-prefill path: bitwise."""
+    cfg, model, params = tiny_model
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(2, cfg.vocab_size, (1, 9)), jnp.int32)
+    lg_w, _, _ = model.prefill(params, toks, model.make_cache(1, 16))
+    for chunk in (0, 9, 64):
+        lg_c, _, _ = model.prefill_chunked(
+            params, toks, model.make_cache(1, 16), chunk)
+        assert np.array_equal(np.asarray(lg_c), np.asarray(lg_w)), chunk
+
+
+# ---------------------------------------------------------------------------
+# engine level: greedy stream identity across the chunk grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("page_size", [8, 16])
+@pytest.mark.parametrize("chunk", [1, 16, 64, 128])
+def test_chunked_streams_byte_identical(tiny_model, chunk, page_size):
+    """chunk=1 rounds up to one page; chunk=128 exceeds every prompt
+    (chunking never engages); 16/64 exercise multi-chunk jobs. All four
+    must reproduce the unchunked engine's streams byte-for-byte."""
+    cfg, model, params = tiny_model
+    pk = PagedKVConfig(page_size=page_size)
+    ref = _streams(_mk(model, params, eos=cfg.vocab_size, paged_kv=pk),
+                   _prompts(cfg))
+    eng = _mk(model, params, eos=cfg.vocab_size, paged_kv=pk,
+              prefill_chunk=chunk)
+    got = _streams(eng, _prompts(cfg))
+    assert got == ref, f"chunk={chunk} ps={page_size} diverged"
+    s = eng.sched_stats()
+    if chunk < max(PROMPT_LENS):
+        assert s["chunk_calls"] > 0 and s["chunk_tokens"] > 0
+    else:
+        assert s["chunk_calls"] == 0
+    _drained(eng)
+
+
+def test_chunk_budget_paces_but_preserves_streams(tiny_model):
+    """A budget smaller than the chunk size stretches prefill across
+    more turns without changing a single token."""
+    cfg, model, params = tiny_model
+    ref = _streams(_mk(model, params, eos=cfg.vocab_size), _prompts(cfg))
+    eng = _mk(model, params, eos=cfg.vocab_size, prefill_chunk=16,
+              prefill_chunk_budget=8)
+    assert _streams(eng, _prompts(cfg)) == ref
+    assert eng.chunk_budget == 8
+    _drained(eng)
+
+
+@pytest.mark.parametrize("policy", ["fifo", "coverage"])
+def test_chunked_streams_identical_per_policy(tiny_model, policy):
+    """``prefill_order`` may reorder chunk jobs (coverage ranks by
+    difficulty prior + progress) but greedy streams are admission-order
+    invariant, so both policies must match their own unchunked runs."""
+    cfg, model, params = tiny_model
+    kw = dict(eos=cfg.vocab_size, sched_policy=policy)
+    ref = _streams(_mk(model, params, **kw), _prompts(cfg))
+    eng = _mk(model, params, prefill_chunk=16, **kw)
+    assert _streams(eng, _prompts(cfg)) == ref, policy
+    _drained(eng)
+
+
+def test_chunked_with_prefix_cache_identity_and_hits(tiny_model):
+    """Chunk jobs probe the prefix cache at job-open time (a full-page
+    hit becomes the job's already-resident head) and the final chunk
+    seeds new entries. Jobs probe once when opened, so hits need a
+    second wave whose prefixes wave one already seeded — within one
+    wave all jobs open before any seeds. Streams must match the
+    unchunked prefix-cache engine wave for wave."""
+    cfg, model, params = tiny_model
+    prompts = _prompts(cfg, lens=(40, 40, 40, 37), seed=5)
+    for p in prompts[1:]:
+        p[:32] = prompts[0][:32]             # 4 shared full pages at ps=8
+    kw = dict(eos=cfg.vocab_size, prefix_cache=True)
+    ref_eng = _mk(model, params, **kw)
+    eng = _mk(model, params, prefill_chunk=16, **kw)
+    for uid0 in (0, 100):                    # wave 2 re-sends the prompts
+        assert _streams(eng, prompts, uid0=uid0) == \
+            _streams(ref_eng, prompts, uid0=uid0), uid0
+    assert eng.kv_stats()["prefix_cache"]["hits"] > 0
+    _drained(eng)
+
+
+def test_chunked_with_speculation_identity(tiny_model):
+    """Chunked prefill composes with the n-gram draft + block-verify
+    decode loop: greedy streams stay byte-identical."""
+    cfg, model, params = tiny_model
+    prompts = [np.full(n, 7, np.int32) for n in (40, 9, 33)]
+    kw = dict(eos=cfg.vocab_size, macro_steps=4, spec_k=4)
+    ref = _streams(_mk(model, params, **kw), prompts)
+    eng = _mk(model, params, prefill_chunk=16, **kw)
+    assert _streams(eng, prompts) == ref
+    assert eng.sched_stats()["chunk_calls"] > 0
+    _drained(eng)
+
+
+def test_xla_impl_quietly_ignores_chunking(tiny_model):
+    """The dense xla cache has no pages to chunk into; the engine must
+    degrade to whole-prompt prefill, not crash or diverge."""
+    cfg, model, params = tiny_model
+    kw = dict(eos=cfg.vocab_size, impl="xla", cache_len=96)
+    ref = _streams(_mk(model, params, **kw), _prompts(cfg))
+    eng = _mk(model, params, prefill_chunk=16, **kw)
+    assert not eng.chunked
+    assert _streams(eng, _prompts(cfg)) == ref
+
+
+# ---------------------------------------------------------------------------
+# cancellation mid-prefill: every chunk page comes back
+# ---------------------------------------------------------------------------
+
+def test_cancel_mid_chunking_returns_pages(tiny_model):
+    """The long prompt is submitted while shorts are decoding, with one
+    slot left free (``pump`` only runs admission passes when a slot is
+    free), so its chunk job is budget-paced — one 16-token chunk per
+    turn — and a cancel lands mid-job with pages held."""
+    cfg, model, params = tiny_model
+    eng = _mk(model, params, eos=cfg.vocab_size, slots=3,
+              prefill_chunk=16, prefill_chunk_budget=16)
+    shorts = _prompts(cfg, lens=(6, 7), seed=1)
+    long_p = _prompts(cfg, lens=(96,), seed=2)[0]
+    for i, p in enumerate(shorts):
+        eng.submit(_request(i, p))
+    eng.pump()                               # shorts admitted and live
+    eng.submit(_request(99, long_p))
+    eng.pump()                               # one budget turn of chunks
+    assert 99 in eng._chunking, "long prompt should be mid-chunking"
+    held = list(eng._chunking[99]["pages"])
+    assert held, "no chunk pages held yet"
+    assert eng.cancel(99)
+    eng.run()
+    assert eng.result(99).cancelled
+    for uid in range(len(shorts)):
+        assert len(eng.result(uid).tokens) == MAX_NEW
+    _drained(eng)
+    assert all(eng.pool.refcount(p) == 0 for p in held)
+
+
+def test_finalize_starved_frees_chunk_pages(tiny_model):
+    """Terminal starvation (global token budget exhausted) with a job
+    mid-chunking must free the half-prefilled chunk pages and finalize
+    the request as starved, not leak or hang."""
+    cfg, model, params = tiny_model
+    eng = _mk(model, params, eos=cfg.vocab_size, prefill_chunk=16)
+    long_p = _prompts(cfg, lens=(96,), seed=4)[0]
+    req = _request(7, long_p)
+    eng.submit(req)
+    eng._start_chunk_job(req)
+    assert eng._run_chunk(7, eng._chunking[7]) > 0
+    held = list(eng._chunking[7]["pages"])
+    assert held
+    eng._finalize_starved()
+    assert not eng._chunking
+    assert 7 in eng.starved_uids
+    assert len(eng.result(7).tokens) == 0
+    _drained(eng)
+    assert all(eng.pool.refcount(p) == 0 for p in held)
+
+
+# ---------------------------------------------------------------------------
+# disaggregation: prefill shard range, decode reads cross-shard
+# ---------------------------------------------------------------------------
+
+def test_prefill_shard_ids_pure():
+    from repro.distributed.sharding import prefill_shard_ids
+    assert prefill_shard_ids(4, 2) == (0, 1)
+    assert prefill_shard_ids(4, 0) == (0, 1, 2, 3)
+    assert prefill_shard_ids(2, 2) == (0, 1)
+    with pytest.raises(AssertionError):
+        prefill_shard_ids(2, 3)
+
+
+def test_disaggregation_requires_paged(tiny_model):
+    cfg, model, params = tiny_model
+    with pytest.raises(AssertionError):
+        _mk(model, params, eos=cfg.vocab_size, impl="xla",
+            prefill_shards=1)
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="disaggregation needs >= 2 devices (set "
+                           "XLA_FLAGS=--xla_force_host_platform_device_"
+                           "count=8 on CPU)")
+def test_disaggregated_prefill_streams_identical(tiny_model):
+    """prefill_shards=k pins chunk-job pages to shards [0, k); decode
+    slots on every shard must read them (GSPMD cross-shard gathers)
+    byte-identically to the non-disaggregated engine."""
+    from repro.launch.mesh import make_serve_mesh
+    cfg, model, params = tiny_model
+    dp = 2
+    mesh = make_serve_mesh(dp)
+    prompts = _prompts(cfg, lens=(50, 6, 33, 44), seed=7)
+    kw = dict(eos=cfg.vocab_size, slots=4, cache_len=128)
+    ref = _streams(_mk(model, params, **kw), prompts)
+    plain = _streams(_mk(model, params, mesh=mesh, **kw), prompts)
+    eng = _mk(model, params, mesh=mesh, prefill_chunk=16,
+              prefill_shards=1, **kw)
+
+    seen_shards = []
+    orig = eng._run_chunk
+
+    def spy(uid, job):
+        seen_shards.append(job["shard"])
+        for p in job["pages"]:
+            assert eng.pool.shard_of(p) == job["shard"]
+        return orig(uid, job)
+
+    eng._run_chunk = spy
+    got = _streams(eng, prompts)
+    assert plain == ref
+    assert got == ref, "disaggregated streams diverged"
+    assert seen_shards and set(seen_shards) == {0}, \
+        "chunk jobs escaped the prefill shard range"
+    _drained(eng)

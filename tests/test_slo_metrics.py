@@ -13,10 +13,10 @@ from repro.serving.traffic import (RequestTrace, bursty_arrivals,
                                    slo_metrics)
 
 
-def _tr(uid, arrival, first, done, n, cancelled=False):
+def _tr(uid, arrival, first, done, n, cancelled=False, prompt_len=0):
     return RequestTrace(uid=uid, t_arrival=arrival, t_submit=arrival,
                         t_first=first, t_done=done, n_tokens=n,
-                        cancelled=cancelled)
+                        cancelled=cancelled, prompt_len=prompt_len)
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +78,53 @@ def test_span_override_scales_rates():
     m = slo_metrics(traces, slo_ttft_ms=1e3, span_s=2.0)
     assert m["tokens_per_s"] == pytest.approx(5.0)
     assert m["goodput_rps"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# per-prompt-length-bucket TTFT (chunked prefill's headline metric)
+# ---------------------------------------------------------------------------
+
+def test_ttft_by_bucket_labels_counts_and_percentiles():
+    traces = [
+        _tr(0, 0.0, 0.1, 0.5, 4, prompt_len=10),    # lt64: 100ms
+        _tr(1, 0.0, 0.3, 0.6, 4, prompt_len=63),    # lt64: 300ms
+        _tr(2, 0.0, 0.2, 0.7, 4, prompt_len=64),    # 64to256 boundary
+        _tr(3, 0.0, 0.4, 0.8, 4, prompt_len=255),   # 64to256: 400ms
+        _tr(4, 0.0, 0.9, 1.0, 4, prompt_len=256),   # ge256 boundary
+        _tr(5, 0.0, 0.5, None, 2, cancelled=True, prompt_len=10),
+    ]
+    m = slo_metrics(traces, slo_ttft_ms=1e3, length_buckets=(64, 256))
+    by = m["ttft_by_bucket"]
+    assert set(by) == {"lt64", "64to256", "ge256"}
+    # cancelled uid 5 is excluded; every completed trace lands somewhere
+    assert sum(b["n"] for b in by.values()) == m["completed"] == 5
+    assert by["lt64"]["n"] == 2
+    assert by["lt64"]["p50_ms"] == pytest.approx(200.0)
+    assert by["lt64"]["p99_ms"] == pytest.approx(
+        percentile([100.0, 300.0], 99))
+    assert by["64to256"] == {"n": 2,
+                             "p50_ms": pytest.approx(300.0),
+                             "p99_ms": pytest.approx(
+                                 percentile([200.0, 400.0], 99))}
+    assert by["ge256"]["n"] == 1
+    assert by["ge256"]["p50_ms"] == pytest.approx(900.0)
+
+
+def test_ttft_by_bucket_single_bound_and_empty_bucket():
+    # one bound -> two labels; a bucket nobody lands in is absent, not
+    # reported as NaN (consumers iterate what exists)
+    traces = [_tr(0, 0.0, 0.1, 0.2, 2, prompt_len=5)]
+    m = slo_metrics(traces, slo_ttft_ms=1e3, length_buckets=(18,))
+    assert set(m["ttft_by_bucket"]) == {"lt18"}
+    assert m["ttft_by_bucket"]["lt18"]["n"] == 1
+
+
+def test_ttft_by_bucket_off_by_default_and_validates_bounds():
+    traces = [_tr(0, 0.0, 0.1, 0.2, 2, prompt_len=5)]
+    assert "ttft_by_bucket" not in slo_metrics(traces, slo_ttft_ms=1e3)
+    for bad in ((256, 64), (64, 64)):
+        with pytest.raises(AssertionError):
+            slo_metrics(traces, slo_ttft_ms=1e3, length_buckets=bad)
 
 
 # ---------------------------------------------------------------------------
