@@ -54,6 +54,17 @@ at an adaptive TTFT SLO, and tokens/s at saturation — plus a
 cancellation cell asserting the abort path returns every page, slot,
 and byte of scheduler commitment, in an ``open_loop`` section.
 
+The **multimodal scenario** serves a shared-image heavy-tailed workload
+(most requests ask about the SAME hot image over a shared prompt
+preamble — the retrieval/chat pattern image-prefix caching exists for)
+through the vision-language engine with the image prefix cache off and
+on, recording the image-prefix cache hit rate, vision-tower encode vs
+feature-memo counts, prefill tokens actually computed, and TTFT with
+and without image reuse — plus the deterministic gates: dense, paged,
+and paged+cache streams byte-identical, the shared image must hit, and
+the reuse cell must compute strictly fewer prefill tokens
+(``multimodal`` section).
+
 The **chunked-prefill scenario** saturates a small greedy engine with
 short prompts and queues long prompts behind them, then serves the SAME
 workload with chunked prefill off (``prefill_chunk=0``) and on (the
@@ -688,6 +699,153 @@ def run_open_loop_scenario(smoke: bool = False) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Multimodal scenario: shared-image heavy-tailed traffic, image-prefix reuse
+# ---------------------------------------------------------------------------
+
+def _vlm_model():
+    """Reduced vision-language model (llava-family): a real vision tower
+    feeding image-token embeddings through the engine's prefill path."""
+    from repro.configs import get_config
+    cfg = get_config("llava_1_5_7b").reduced().with_overrides(
+        dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _vlm_image(cfg, idx):
+    v = cfg.vision
+    rng = np.random.default_rng(1000 + idx)
+    return rng.standard_normal(
+        (v.image_h, v.image_w, v.channels)).astype(np.float32)
+
+
+def _multimodal_requests(cfg, n, seed=9):
+    """Heavy-tailed image popularity over a shared prompt preamble:
+    Pareto-distributed image ids (most requests share image 0, a short
+    tail brings fresh ones) with a common 24-token preamble and a short
+    per-request question tail — exactly the shape where the content-hash
+    image prefix cache converts repeat images into skipped prefill."""
+    rng = np.random.default_rng(seed)
+    preamble = rng.integers(2, cfg.vocab_size, 24).astype(np.int32)
+    reqs = []
+    for _ in range(n):
+        img_id = min(int(rng.pareto(1.0)), 3)
+        tail = rng.integers(2, cfg.vocab_size,
+                            int(rng.integers(2, 6))).astype(np.int32)
+        reqs.append((np.concatenate([preamble, tail]).astype(np.int32),
+                     img_id))
+    return reqs, len({im for _, im in reqs})
+
+
+def _run_multimodal_cell(cfg, model, params, reqs, *, impl, prefix_cache,
+                         max_new, uid0):
+    """One multimodal cell: greedy open-loop serve (all arrivals at t=0)
+    of the shared-image workload. Greedy + fifo means every cell must
+    stream byte-identically whatever the cache/impl — the image arm of
+    the paged differential discipline. Returns (row, streams) keyed by
+    request index. Image-encode counters are read after submit (the
+    vision tower runs at submit time): on a cold engine they pin the
+    tower-encode vs feature-memo split deterministically."""
+    from repro.serving.traffic import run_open_loop
+    images = {im: _vlm_image(cfg, im) for _, im in reqs}
+    eng = ServeEngine(
+        model, params, slots=4, cache_len=128,
+        sampling=SamplingConfig(temperature=0.0, top_p=1.0,
+                                repetition_penalty=1.0,
+                                max_new_tokens=max_new),
+        mode="greedy", n_candidates=1, max_new_tokens=max_new,
+        eos_id=cfg.vocab_size,
+        impl=impl, paged_kv=PagedKVConfig(page_size=8),
+        prefix_cache=prefix_cache, macro_steps=4, seed=0)
+
+    def mk(base):
+        return [Request(uid=base + i, prompt=p, image=images[im])
+                for i, (p, im) in enumerate(reqs)]
+
+    for r in mk(uid0 + 10_000):               # warmup / compile
+        eng.submit(r)
+    cold_encodes, cold_hits = eng.image_encodes, eng.image_feat_hits
+    eng.run()
+    eng.reset_stats()
+    _assert_clean(eng)
+    traces, metrics = run_open_loop(eng, mk(uid0), np.zeros(len(reqs)),
+                                    slo_ttft_ms=1e9)
+    streams = {tr.uid - uid0: [int(t) for t in eng.result(tr.uid).tokens]
+               for tr in traces}
+    pc = None
+    if eng.paged:
+        eng.pool.check()
+        pc = eng.kv_stats().get("prefix_cache")
+    row = {
+        "impl": impl,
+        "prefix_cache": bool(prefix_cache),
+        "image_encodes_cold": cold_encodes,
+        "image_feat_hits_cold": cold_hits,
+        "prefill_tokens": eng.prefill_tokens,
+        "image_prefix": pc,
+        **metrics,
+    }
+    return row, streams
+
+
+def run_multimodal_scenario(smoke: bool = False) -> dict:
+    """Shared-image heavy-tailed traffic through the vision-language
+    engine: dense vs paged vs paged+image-prefix-cache. All three cells
+    must stream byte-identically (greedy); the cache cell must hit on
+    the shared image and compute strictly fewer prefill tokens; TTFT
+    with/without image reuse is recorded (wall-clock, not gated)."""
+    cfg, model, params = _vlm_model()
+    n_req, max_new = (8, 8) if smoke else (12, 16)
+    reqs, n_imgs = _multimodal_requests(cfg, n_req)
+    cells = [("xla", False), ("paged", False), ("paged", True)]
+    rows, streams = [], {}
+    for i, (impl, pc) in enumerate(cells):
+        row, st = _run_multimodal_cell(
+            cfg, model, params, reqs, impl=impl, prefix_cache=pc,
+            max_new=max_new, uid0=100_000 * (i + 1))
+        rows.append(row)
+        streams[(impl, pc)] = st
+        hits = (row["image_prefix"] or {}).get("hit_tokens", 0)
+        print(f"mmodal {impl:6s} cache={'on ' if pc else 'off'}: "
+              f"prefill {row['prefill_tokens']:4d} tok  "
+              f"hit_tokens {hits:4d}  "
+              f"ttft p50 {row['ttft_p50_ms']:6.1f}ms  "
+              f"{row['tokens_per_s']:7.1f} tok/s")
+    off = next(r for r in rows if r["impl"] == "paged"
+               and not r["prefix_cache"])
+    on = next(r for r in rows if r["prefix_cache"])
+    pc = on["image_prefix"] or {}
+    identical = (streams[("xla", False)] == streams[("paged", False)]
+                 == streams[("paged", True)])
+    headline = {
+        "streams_identical": identical,
+        "n_requests": n_req,
+        "distinct_images": n_imgs,
+        "image_encodes_cold": on["image_encodes_cold"],
+        "image_feat_hits_cold": on["image_feat_hits_cold"],
+        "image_prefix_hits": pc.get("hits", 0),
+        "image_prefix_hit_tokens": pc.get("hit_tokens", 0),
+        "image_prefix_hit_rate": pc.get("hits", 0)
+        / max(pc.get("probes", 0), 1),
+        "prefill_tokens_no_reuse": off["prefill_tokens"],
+        "prefill_tokens_reuse": on["prefill_tokens"],
+        "prefill_reuse_savings": 1.0 - on["prefill_tokens"]
+        / max(off["prefill_tokens"], 1),
+        "ttft_p50_no_reuse_ms": off["ttft_p50_ms"],
+        "ttft_p50_reuse_ms": on["ttft_p50_ms"],
+        "ttft_p99_no_reuse_ms": off["ttft_p99_ms"],
+        "ttft_p99_reuse_ms": on["ttft_p99_ms"],
+        "ttft_reuse_improvement": off["ttft_p50_ms"]
+        / max(on["ttft_p50_ms"], 1e-9),
+    }
+    return {"n_requests": n_req, "max_new": max_new,
+            "distinct_images": n_imgs,
+            "image_tokens": cfg.num_evidence_tokens,
+            "rows": rows, "headline": headline}
+
+
+# ---------------------------------------------------------------------------
 # Chunked-prefill scenario: long-prompt TTFT under short-prompt load
 # ---------------------------------------------------------------------------
 
@@ -816,7 +974,7 @@ def run_chunked_prefill_scenario(smoke: bool = False, *,
 
 
 ALL_SECTIONS = ("grid", "speculative", "scheduler", "quantized", "sharded",
-                "open_loop", "chunked_prefill")
+                "open_loop", "chunked_prefill", "multimodal")
 
 
 def run(smoke: bool = False, sections=None) -> dict:
@@ -893,6 +1051,8 @@ def run(smoke: bool = False, sections=None) -> dict:
     if "chunked_prefill" in sections:
         out["chunked_prefill"] = run_chunked_prefill_scenario(
             smoke, chunk=tuned["prefill_chunk"] or 256)
+    if "multimodal" in sections:
+        out["multimodal"] = run_multimodal_scenario(smoke)
     with open("BENCH_serve.json", "w") as f:
         json.dump(out, f, indent=2)
     print("wrote BENCH_serve.json")
@@ -974,6 +1134,18 @@ def _smoke_asserts(out: dict) -> None:
         assert ch["streams_identical"], \
             "chunked prefill changed greedy token streams"
         assert ch["chunk_calls"] > 0 and ch["chunk_tokens"] > 0, ch
+    if "multimodal" in out:
+        # image prefill must be a pure storage/caching decision: dense,
+        # paged, and paged+cache greedy streams byte-identical; the
+        # shared hot image must actually hit and skip prefill work
+        mh = out["multimodal"]["headline"]
+        assert mh["streams_identical"], \
+            "multimodal streams diverged across dense/paged/cache cells"
+        assert mh["image_encodes_cold"] == mh["distinct_images"], mh
+        assert mh["image_feat_hits_cold"] == \
+            mh["n_requests"] - mh["distinct_images"], mh
+        assert mh["image_prefix_hit_tokens"] > 0, mh
+        assert mh["prefill_tokens_reuse"] < mh["prefill_tokens_no_reuse"], mh
 
 
 if __name__ == "__main__":

@@ -40,7 +40,15 @@ against the committed ``BENCH_baseline.json`` and exits non-zero when:
     short-prompt p99 TTFT must improve >= 1.2x over the unchunked
     engine with the long-prompt p99 within 1.5x, decode tokens/s within
     ``--tol``, and the chunked long-prompt p99 within ``--tol`` of the
-    committed baseline.
+    committed baseline;
+  * the multimodal scenario breaks its (all-deterministic) contract:
+    dense, paged, and paged+image-prefix-cache greedy streams must stay
+    byte-identical, the cold vision tower must encode each distinct
+    image exactly once (everything else feature-memoized), the shared
+    hot image must actually hit the prefix cache, and the reuse cell
+    must compute strictly fewer prefill tokens than the no-reuse cell —
+    TTFT with/without image reuse is recorded but never wall-clock
+    gated.
 
 ``--skip-throughput`` drops the wall-clock checks — used by the forced
 multi-device CI lane, whose 8 host devices oversubscribe the runner's
@@ -62,7 +70,7 @@ import json
 import sys
 
 ALL_SECTIONS = ("grid", "speculative", "scheduler", "quantized", "sharded",
-                "open_loop", "chunked_prefill")
+                "open_loop", "chunked_prefill", "multimodal")
 
 REGEN = ("PYTHONPATH=src python -m benchmarks.bench_serve --smoke && "
          "cp BENCH_serve.json BENCH_baseline.json")
@@ -297,6 +305,31 @@ def check(cur: dict, base: dict, *, tol: float, skip_throughput: bool,
                         f"chunked long-prompt p99 TTFT regression: "
                         f"{c_long:.1f}ms vs baseline {b_long:.1f}ms "
                         f"(tolerance {tol:.0%})")
+
+    if "multimodal" in sections:
+        m_head = _head(cur, "multimodal", "current", errors)
+        if m_head is not None:
+            # every multimodal gate is within-run and deterministic —
+            # never skipped for jax version skew or --skip-throughput
+            if not m_head.get("streams_identical", False):
+                errors.append("multimodal greedy streams diverged across "
+                              "dense / paged / image-prefix-cache cells")
+            enc = m_head.get("image_encodes_cold", -1)
+            distinct = m_head.get("distinct_images", 0)
+            if enc != distinct:
+                errors.append(
+                    f"vision-tower encode memoization broke: {enc} cold "
+                    f"encodes for {distinct} distinct images")
+            if m_head.get("image_prefix_hit_tokens", 0) <= 0:
+                errors.append("shared hot image never hit the image "
+                              "prefix cache (hit_tokens == 0)")
+            reuse = m_head.get("prefill_tokens_reuse", 1 << 30)
+            no_reuse = m_head.get("prefill_tokens_no_reuse", 0)
+            if reuse >= no_reuse:
+                errors.append(
+                    f"image-prefix reuse no longer skips prefill work: "
+                    f"{reuse} prefill tokens with the cache vs {no_reuse} "
+                    f"without")
     return errors
 
 

@@ -58,6 +58,40 @@ class RGLRUConfig:
 
 
 @dataclass(frozen=True)
+class VisionConfig:
+    """ViT vision tower for the image-prefill serving path.
+
+    ``(image_h // patch) * (image_w // patch)`` patch embeddings come out
+    of the tower; the model builder asserts that product equals the LM's
+    ``num_evidence_tokens`` so an encoded image drops into the evidence
+    slots one-to-one, and the serving engine can treat image tokens
+    exactly like prompt tokens (page-aligned, chunkable, prefix-cached
+    on the image's content hash).
+    """
+    image_h: int = 336
+    image_w: int = 336
+    patch: int = 14
+    channels: int = 3
+    num_layers: int = 4
+    d_model: int = 256
+    num_heads: int = 4
+    d_ff: int = 512
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image_h // self.patch) * (self.image_w // self.patch)
+
+    @staticmethod
+    def for_tokens(n: int, patch: int = 4, **kw) -> "VisionConfig":
+        """A tower whose patch grid yields exactly ``n`` tokens (square
+        grid when ``n`` is a perfect square, else ``n``x1)."""
+        r = int(round(n ** 0.5))
+        gh, gw = (r, r) if r * r == n else (n, 1)
+        return VisionConfig(image_h=gh * patch, image_w=gw * patch,
+                            patch=patch, **kw)
+
+
+@dataclass(frozen=True)
 class ModelConfig:
     """A single architecture. All assigned archs + the paper's own models."""
     name: str
@@ -86,11 +120,13 @@ class ModelConfig:
     # --- encoder-decoder ------------------------------------------------------
     is_encoder_decoder: bool = False
     num_encoder_layers: int = 0
-    # --- multimodal frontend stub ---------------------------------------------
+    # --- multimodal frontend ----------------------------------------------------
     # number of evidence (patch/frame) embeddings prepended to the sequence;
-    # 0 for text-only models. Embeddings arrive precomputed (stub frontend).
+    # 0 for text-only models. Embeddings arrive precomputed (stub frontend)
+    # or, when ``vision`` is set, from the in-repo vision tower.
     num_evidence_tokens: int = 0
     evidence_dim: int = 0         # dim of incoming evidence embeddings
+    vision: Optional[VisionConfig] = None  # None => precomputed evidence only
     # --- misc -------------------------------------------------------------------
     norm_eps: float = 1e-6
     dtype: str = "bfloat16"
@@ -145,6 +181,10 @@ class ModelConfig:
         if self.num_evidence_tokens:
             kw["num_evidence_tokens"] = 8
             kw["evidence_dim"] = min(self.evidence_dim, 256) or 256
+            if self.vision is not None:
+                kw["vision"] = VisionConfig.for_tokens(
+                    8, patch=4, num_layers=2, d_model=64, num_heads=2,
+                    d_ff=128)
         if self.attn_window:
             kw["attn_window"] = 64
         kw["local_window"] = 64

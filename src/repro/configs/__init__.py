@@ -42,7 +42,11 @@ def _load() -> None:
 
 
 def get_config(name: str) -> ModelConfig:
+    """Look up a config by arch id ("llava-1.5-7b") or module name
+    ("llava_1_5_7b") — CLI flags accept either spelling."""
     _load()
+    if name in _MODULES:
+        name = _MODULES[name]
     if name not in _BY_NAME:
         raise KeyError(f"unknown arch {name!r}; known: {sorted(_BY_NAME)}")
     return _BY_NAME[name]
@@ -51,6 +55,10 @@ def get_config(name: str) -> ModelConfig:
 def list_configs() -> List[str]:
     _load()
     return sorted(_BY_NAME)
+
+
+# public view for the config-zoo smoke test: every shipped config module.
+MODULE_NAMES = tuple(sorted(_MODULES))
 
 
 ASSIGNED_ARCHS = [

@@ -2,9 +2,11 @@
 LLaVA-1.5: Vicuna-7B + CLIP ViT-L/14 projector).
 
 [arXiv:2310.03744 / paper §5.1]: 32L, d_model=4096, 32 heads MHA, d_ff=11008,
-vocab 32000; 576 CLIP patch embeddings per image (stubbed frontend).
+vocab 32000; 576 patch embeddings per 336x336 image (ViT-L/14 grid:
+(336/14)^2 = 576), encoded by the in-repo vision tower (a CLIP-shaped
+stand-in: same patch grid and token count, far fewer layers).
 """
-from repro.config import ATTN, ModelConfig
+from repro.config import ATTN, ModelConfig, VisionConfig
 
 CONFIG = ModelConfig(
     name="llava-1.5-7b",
@@ -19,5 +21,7 @@ CONFIG = ModelConfig(
     mlp_activation="swiglu",
     num_evidence_tokens=576,
     evidence_dim=4096,
+    vision=VisionConfig(image_h=336, image_w=336, patch=14,
+                        num_layers=4, d_model=1024, num_heads=16, d_ff=4096),
     source="arXiv:2310.03744",
 )

@@ -32,7 +32,8 @@ from repro.config import ModelConfig, ShapeConfig
 ROW_PARALLEL = {"wo", "w_down", "out_proj"}
 # parameters that stay replicated regardless of shape
 ALWAYS_REPLICATED = {"router", "lam", "A_log", "D", "dt_bias", "norm",
-                     "scale", "bias", "conv_b", "q_norm", "k_norm"}
+                     "scale", "bias", "conv_b", "q_norm", "k_norm",
+                     "pos_emb"}
 
 
 @dataclasses.dataclass(frozen=True)

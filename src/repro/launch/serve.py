@@ -15,7 +15,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.config import CAMDConfig, PagedKVConfig, SamplingConfig
+from repro.config import (CAMDConfig, PagedKVConfig, SamplingConfig,
+                          VisionConfig)
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import Request, ServeEngine
@@ -24,8 +25,25 @@ from repro.training import load_checkpoint
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--arch", "--config", default="qwen3-0.6b",
+                    help="arch id ('llava-1.5-7b') or config module name "
+                         "('llava_1_5_7b') — both spellings resolve")
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--image-tokens", type=int, default=0,
+                    help="multimodal serving: encode synthetic images "
+                         "through the config's vision tower into N "
+                         "image tokens per request (overrides the "
+                         "config's evidence-token count; vision configs "
+                         "only)")
+    ap.add_argument("--image-pool", type=int, default=2,
+                    help="distinct images the synthetic requests draw "
+                         "from: repeats hit the submit-time feature "
+                         "memo and, with --prefix-cache, the image-page "
+                         "prefix cache")
+    ap.add_argument("--xmodal-rescore", action="store_true",
+                    help="rescore finished candidates' S_align through "
+                         "the fused xmodal_score kernel (Eq. 8-9) "
+                         "instead of the incremental aggregate")
     ap.add_argument("--mode", default="camd",
                     choices=["camd", "best_of_n", "self_consistency",
                              "greedy"])
@@ -124,6 +142,16 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     cfg = cfg.with_overrides(dtype="float32")
+    if args.image_tokens:
+        if cfg.vision is None:
+            raise SystemExit(f"--image-tokens needs a vision config; "
+                             f"{cfg.name} has no vision tower")
+        v = cfg.vision
+        cfg = cfg.with_overrides(
+            num_evidence_tokens=args.image_tokens,
+            vision=VisionConfig.for_tokens(
+                args.image_tokens, patch=v.patch, num_layers=v.num_layers,
+                d_model=v.d_model, num_heads=v.num_heads, d_ff=v.d_ff))
     model = build_model(cfg, jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
     if args.ckpt:
@@ -162,12 +190,25 @@ def main():
         mesh=mesh,
         spec_k=args.spec_k,
         spec_mode=args.spec_mode,
+        xmodal_rescore=args.xmodal_rescore,
         seed=args.seed)
     rng = np.random.default_rng(args.seed)
+
+    images = []
+    if cfg.num_evidence_tokens and cfg.vision is not None:
+        v = cfg.vision
+        images = [rng.standard_normal(
+            (v.image_h, v.image_w, v.channels)).astype(np.float32)
+            for _ in range(max(1, args.image_pool))]
 
     def mk_request(i):
         prompt = rng.integers(2, cfg.vocab_size,
                               size=args.prompt_len).astype(np.int32)
+        if images:
+            # draw from a small shared pool: repeated images exercise
+            # the submit-time feature memo and the image prefix cache
+            return Request(uid=i, prompt=prompt,
+                           image=images[int(rng.integers(len(images)))])
         ev = None
         if cfg.num_evidence_tokens:
             ev = rng.standard_normal(
@@ -242,6 +283,14 @@ def main():
         if s.get("kv_byte_budget"):
             print(f"kv byte budget: {s['kv_byte_budget'] / 1e6:.2f} MB "
                   f"ceiling, {s['budget_evictions']} budget evictions")
+    if eng.arena is not None:
+        a = eng.arena_stats()
+        print(f"state arena [{a['state_kind']}]: peak {a['max_in_use']}/"
+              f"{a['num_rows']} rows of {a['bytes_per_row'] / 1e3:.1f} kB "
+              f"({a['alloc_count']} allocs, {a['sizing_stalls']} stalls)")
+    if eng.image_encodes or eng.image_feat_hits:
+        print(f"vision frontend: {eng.image_encodes} tower encodes, "
+              f"{eng.image_feat_hits} feature-memo hits")
 
 
 if __name__ == "__main__":

@@ -75,8 +75,12 @@ class Model:
                 impl: str = "xla", unroll: bool = False, lengths=None):
         """``lengths``: optional (B,) int32 true per-row lengths (counting
         evidence tokens) for length-bucketed batched prefill over
-        right-padded rows — see ``transformer_prefill``. Requires
-        ``supports_bucketed_prefill``."""
+        right-padded rows — see ``transformer_prefill``. Byte-exact for
+        all-attention stacks (``supports_bucketed_prefill``); recurrent
+        layers (SSM/RG-LRU) mask pads out of their state transition,
+        which is allclose- but NOT byte-exact (chunk/scan shapes change
+        with the padded length), so the serving engine keeps bucketing
+        gated on ``supports_bucketed_prefill``."""
         if self.cfg.is_encoder_decoder:
             assert evidence is not None
             assert lengths is None, "bucketed prefill is decoder-only"
@@ -86,6 +90,67 @@ class Model:
         return tf_lib.transformer_prefill(params, self.cfg, tokens, cache,
                                           evidence, impl=impl, unroll=unroll,
                                           lengths=lengths)
+
+    @property
+    def state_kind(self) -> str:
+        """What a serving slot owns for this architecture:
+
+        - ``"kv"``        — every layer caches attention KV (possibly
+          windowed); encoder-decoder stacks are also ``"kv"`` (decoder
+          self/cross caches are attention KV).
+        - ``"recurrent"`` — every layer carries fixed-size recurrent
+          state (SSD state + conv tails, RG-LRU h + conv).
+        - ``"hybrid"``    — both (e.g. RG-LRU + local-attention stacks).
+
+        The serving engine dispatches slot-state management on this:
+        kv slots may page, recurrent/hybrid slots hold their prompt
+        state in the fixed-stride ``StateArena``.
+        """
+        from repro.config import ATTN, LOCAL_ATTN
+        if self.cfg.is_encoder_decoder:
+            return "kv"
+        kinds = set(self.cfg.layer_kinds)
+        attn = bool(kinds & {ATTN, LOCAL_ATTN})
+        recurrent = bool(kinds - {ATTN, LOCAL_ATTN})
+        if attn and recurrent:
+            return "hybrid"
+        return "recurrent" if recurrent else "kv"
+
+    @property
+    def has_pageable_layers(self) -> bool:
+        """True when at least one layer's decode KV can live in the
+        shared page pool (full-context full attention, decoder-only —
+        the layers ``make_paged_cache`` actually pages)."""
+        from repro.config import ATTN
+        return (not self.cfg.is_encoder_decoder and
+                self.cfg.attn_window == 0 and
+                any(k == ATTN for k in self.cfg.layer_kinds))
+
+    def capabilities(self) -> Dict[str, Any]:
+        """Structured capability report: what the serving stack may
+        enable for this architecture. The config-zoo smoke test asserts
+        these flags stay mutually consistent for every shipped config."""
+        return {
+            "state_kind": self.state_kind,
+            "is_encoder_decoder": self.cfg.is_encoder_decoder,
+            "has_pageable_layers": self.has_pageable_layers,
+            "supports_bucketed_prefill": self.supports_bucketed_prefill,
+            "supports_prefix_cache": self.supports_prefix_cache,
+            "supports_speculative": self.supports_speculative,
+            "has_vision_tower": self.cfg.vision is not None,
+            "num_evidence_tokens": self.cfg.num_evidence_tokens,
+        }
+
+    def encode_image(self, params: Params, images):
+        """Vision-tower encode: images (B, H, W, C) float -> evidence
+        embeddings (B, num_evidence_tokens, evidence_dim), ready to
+        prefill exactly like precomputed evidence. Requires
+        ``cfg.vision``."""
+        from repro.models import vision as vision_lib
+        if self.cfg.vision is None:
+            raise ValueError(f"{self.cfg.name} has no vision tower "
+                             "(cfg.vision is None)")
+        return vision_lib.vision_encode(params["vision"], self.cfg, images)
 
     @property
     def supports_bucketed_prefill(self) -> bool:

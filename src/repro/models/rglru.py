@@ -52,8 +52,16 @@ def _gates(params, x):
     return log_a, b
 
 
-def rglru_prefill(params, cfg: ModelConfig, u) -> Tuple[jax.Array, Dict]:
-    """u: (B, L, d). Returns (out (B,L,d), state)."""
+def rglru_prefill(params, cfg: ModelConfig, u, lengths=None) -> Tuple[jax.Array, Dict]:
+    """u: (B, L, d). Returns (out (B,L,d), state).
+
+    ``lengths``: optional (B,) int32 true per-row lengths for
+    right-padded batched prefill. Padded steps become the identity
+    recurrence (log_a=0, b=0) so h at the last padded position equals h
+    at the row's last real position — allclose-exact vs a per-row
+    prefill (the associative-scan tree shape still depends on the
+    padded L). Per-row outputs beyond lengths-1 are garbage.
+    """
     w = _width(cfg)
     W = cfg.rglru.conv_width
     B, L, _ = u.shape
@@ -65,6 +73,10 @@ def rglru_prefill(params, cfg: ModelConfig, u) -> Tuple[jax.Array, Dict]:
     conv = conv + params["conv_b"]
 
     log_a, b = _gates(params, conv)                    # (B,L,w) fp32
+    if lengths is not None:
+        valid = (jnp.arange(L)[None, :] < lengths[:, None])[..., None]
+        log_a = jnp.where(valid, log_a, 0.0)
+        b = jnp.where(valid, b, 0.0)
 
     def combine(left, right):
         la_l, h_l = left
@@ -74,7 +86,14 @@ def rglru_prefill(params, cfg: ModelConfig, u) -> Tuple[jax.Array, Dict]:
     _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
     y = (h.astype(u.dtype) * gate)
     out = dense(params["out_proj"], y)
-    state = {"h": h[:, -1], "conv": x_pad[:, L:L + W - 1]}
+    if lengths is None:
+        conv_state = x_pad[:, L:L + W - 1]
+    else:
+        # input j sits at x_pad position j + W - 1: gather each row's
+        # last W-1 real inputs (short rows pick up the left zero-pad).
+        idx = lengths[:, None] + jnp.arange(W - 1)[None, :]
+        conv_state = jnp.take_along_axis(x_pad, idx[:, :, None], axis=1)
+    state = {"h": h[:, -1], "conv": conv_state}
     return out, state
 
 

@@ -68,8 +68,17 @@ def _gated_norm(params, y, z, eps):
     return (y * params["norm"].astype(jnp.float32)).astype(z.dtype)
 
 
-def ssm_prefill(params, cfg: ModelConfig, u) -> Tuple[jax.Array, Dict]:
-    """u: (B, L, d). Returns (y (B,L,d), state for decode seeding)."""
+def ssm_prefill(params, cfg: ModelConfig, u, lengths=None) -> Tuple[jax.Array, Dict]:
+    """u: (B, L, d). Returns (y (B,L,d), state for decode seeding).
+
+    ``lengths``: optional (B,) int32 true per-row lengths for
+    right-padded batched prefill. Padded steps get dt=0 (identity
+    transition, zero contribution) so each row's final state matches a
+    per-row prefill at its true length up to float accumulation order
+    (the chunk/cumsum shapes still depend on the padded L, so this is
+    allclose-, not byte-, exact); per-row outputs beyond lengths-1 are
+    garbage and must be ignored by the caller.
+    """
     inner, H, P, N, W = _dims(cfg)
     Bsz, Lreal, _ = u.shape
     Q = min(cfg.ssm.chunk_size, Lreal)
@@ -79,11 +88,12 @@ def ssm_prefill(params, cfg: ModelConfig, u) -> Tuple[jax.Array, Dict]:
     L = Lreal + Lpad
 
     z, xbc, dt = _split_proj(params, cfg, u)
-    conv_tail = xbc[:, max(0, Lreal - (W - 1)):, :]     # real inputs for decode seed
-    if Lreal < W - 1:  # short prompt: left-pad the conv window with zeros
-        conv_tail = jnp.concatenate(
-            [jnp.zeros((Bsz, W - 1 - Lreal, xbc.shape[-1]), xbc.dtype),
-             conv_tail], axis=1)
+    if lengths is None:
+        conv_tail = xbc[:, max(0, Lreal - (W - 1)):, :]  # real inputs for decode seed
+        if Lreal < W - 1:  # short prompt: left-pad the conv window with zeros
+            conv_tail = jnp.concatenate(
+                [jnp.zeros((Bsz, W - 1 - Lreal, xbc.shape[-1]), xbc.dtype),
+                 conv_tail], axis=1)
     if Lpad:
         zpad = jnp.zeros((Bsz, Lpad, xbc.shape[-1]), xbc.dtype)
         xbc = jnp.concatenate([xbc, zpad], axis=1)
@@ -92,13 +102,22 @@ def ssm_prefill(params, cfg: ModelConfig, u) -> Tuple[jax.Array, Dict]:
     # causal depthwise conv over [x, B, C]
     pad = jnp.zeros((Bsz, W - 1, xbc.shape[-1]), xbc.dtype)
     xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    if lengths is not None:
+        # per-row decode seed: the last W-1 real inputs of each row, in
+        # xbc_pad coordinates (input j sits at pad position j + W - 1,
+        # so rows shorter than W-1 pick up the left zero-pad exactly).
+        idx = lengths[:, None] + jnp.arange(W - 1)[None, :]
+        conv_tail = jnp.take_along_axis(xbc_pad, idx[:, :, None], axis=1)
     conv = sum(xbc_pad[:, i:i + L] * params["conv_w"][i] for i in range(W))
     conv = jax.nn.silu(conv + params["conv_b"])
     x, B_in, C_in = jnp.split(conv, [inner, inner + N], axis=-1)
 
     x = x.reshape(Bsz, L, H, P)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,L,H)
-    if Lpad:
+    if lengths is not None:
+        valid = (jnp.arange(L)[None, :] < lengths[:, None])[..., None]
+        dt = jnp.where(valid, dt, 0.0)
+    elif Lpad:
         valid = (jnp.arange(L) < Lreal)[None, :, None]
         dt = jnp.where(valid, dt, 0.0)
     A = -jnp.exp(params["A_log"])                                      # (H,)

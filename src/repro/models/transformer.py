@@ -73,8 +73,8 @@ def _window_for(cfg: ModelConfig, kind: str) -> int:
 
 
 def block_prefill(params: Params, cfg: ModelConfig, kind: str, x, positions,
-                  impl: str, kv_mask=None, ctx_kv=None, q_offset=0
-                  ) -> Tuple[jax.Array, Any, Dict]:
+                  impl: str, kv_mask=None, ctx_kv=None, q_offset=0,
+                  lengths=None) -> Tuple[jax.Array, Any, Dict]:
     aux: Dict[str, jax.Array] = {}
     h = rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind in (ATTN, LOCAL_ATTN):
@@ -87,10 +87,11 @@ def block_prefill(params: Params, cfg: ModelConfig, kind: str, x, positions,
             x, aux = _mlp_part(params, cfg, x)
         entry = {"k": k, "v": v}
     elif kind == SSM:
-        y, entry = ssm_lib.ssm_prefill(params["ssm"], cfg, h)
+        y, entry = ssm_lib.ssm_prefill(params["ssm"], cfg, h, lengths=lengths)
         x = x + y
     else:  # RGLRU
-        y, entry = rglru_lib.rglru_prefill(params["rglru"], cfg, h)
+        y, entry = rglru_lib.rglru_prefill(params["rglru"], cfg, h,
+                                           lengths=lengths)
         x = x + y
         if _has_mlp(cfg, kind):
             x, aux = _mlp_part(params, cfg, x)
@@ -161,6 +162,9 @@ def transformer_init(key, cfg: ModelConfig, dtype) -> Params:
     if cfg.num_evidence_tokens and cfg.evidence_dim != cfg.d_model:
         params["evidence_proj"] = dense_init(keys[4], cfg.evidence_dim,
                                              cfg.d_model, dtype)
+    if cfg.vision is not None:
+        from repro.models import vision as vision_lib
+        params["vision"] = vision_lib.vision_init(keys[5], cfg, dtype)
     return params
 
 
@@ -303,9 +307,12 @@ def transformer_prefill(params: Params, cfg: ModelConfig, tokens, cache,
     sound for attention layers because causal masking means a real
     position never attends a pad; the pad K/V written beyond ``pos`` are
     exactly the ring slots the decode validity mask rejects until they
-    are overwritten. Recurrent layers (SSM/RG-LRU) fold pad tokens into
-    their state, so callers must not bucket those architectures — the
-    serving engine gates on layer kinds. Returns (logits_last (B,V),
+    are overwritten. Recurrent layers (SSM/RG-LRU) mask pad steps out of
+    their state transition (dt=0 / identity recurrence) and gather their
+    decode seed at each row's true length — allclose- but NOT byte-exact
+    vs per-row prefill (chunk/scan shapes track the padded L), which is
+    why the serving engine still gates byte-exact bucketing on
+    ``supports_bucketed_prefill``. Returns (logits_last (B,V),
     hidden_last (B,d), cache).
     """
     pat, n_super, tail = _pattern_split(cfg)
@@ -321,7 +328,7 @@ def transformer_prefill(params: Params, cfg: ModelConfig, tokens, cache,
         new_entries = []
         for p, kind, ce in zip(layer_params, pat, cache_entries):
             x, entry, _ = block_prefill(p, cfg, kind, x, positions, impl,
-                                        kv_mask=kv_mask)
+                                        kv_mask=kv_mask, lengths=lengths)
             new_entries.append(_seed_entry(cfg, kind, ce, entry))
         return x, tuple(new_entries)
 
@@ -339,7 +346,7 @@ def transformer_prefill(params: Params, cfg: ModelConfig, tokens, cache,
     new_tail = []
     for p, kind, ce in zip(params["tail"], tail, cache["tail"]):
         x, entry, _ = block_prefill(p, cfg, kind, x, positions, impl,
-                                    kv_mask=kv_mask)
+                                    kv_mask=kv_mask, lengths=lengths)
         new_tail.append(_seed_entry(cfg, kind, ce, entry))
     if lengths is None:
         x_last = x[:, -1:]

@@ -1,0 +1,92 @@
+"""ViT vision tower for image-prefill serving.
+
+Images arrive as (B, H, W, C) float arrays; the tower patchifies,
+adds a learned position table, runs ``cfg.vision.num_layers``
+bidirectional pre-LN attention blocks, and projects to the LM's
+evidence embedding dim. The output is shaped exactly like the stub
+frontend's precomputed evidence — (B, num_evidence_tokens,
+evidence_dim) — so downstream prefill, CAMD scoring, and the serving
+engine's page accounting are unchanged: an encoded image IS evidence.
+
+Kept deliberately simple (plain jnp, no flash path): vision encode is a
+one-shot submit-time cost amortized by the engine's content-hash
+memoization, not a decode-loop hot path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense, dense_init, mlp, mlp_init, rmsnorm, \
+    rmsnorm_init
+
+Params = Dict[str, Any]
+
+
+def _patchify(images, patch: int):
+    """(B, H, W, C) -> (B, n_patches, patch*patch*C), row-major grid."""
+    B, H, W, C = images.shape
+    gh, gw = H // patch, W // patch
+    x = images.reshape(B, gh, patch, gw, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, gh * gw, patch * patch * C)
+    return x
+
+
+def vision_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    v = cfg.vision
+    assert v is not None
+    assert v.n_patches == cfg.num_evidence_tokens, (
+        f"vision tower yields {v.n_patches} patches but the LM expects "
+        f"{cfg.num_evidence_tokens} evidence tokens")
+    out_dim = cfg.evidence_dim or cfg.d_model
+    keys = jax.random.split(key, 4 + v.num_layers)
+    blocks = []
+    for i in range(v.num_layers):
+        ks = jax.random.split(keys[4 + i], 5)
+        blocks.append({
+            "ln1": rmsnorm_init(v.d_model, dtype),
+            "wq": dense_init(ks[0], v.d_model, v.d_model, dtype),
+            "wk": dense_init(ks[1], v.d_model, v.d_model, dtype),
+            "wv": dense_init(ks[2], v.d_model, v.d_model, dtype),
+            "wo": dense_init(ks[3], v.d_model, v.d_model, dtype),
+            "ln2": rmsnorm_init(v.d_model, dtype),
+            "mlp": mlp_init(ks[4], v.d_model, v.d_ff, "gelu", dtype),
+        })
+    return {
+        "patch_proj": dense_init(keys[0], v.patch * v.patch * v.channels,
+                                 v.d_model, dtype),
+        "pos_emb": (jax.random.normal(keys[1], (v.n_patches, v.d_model))
+                    * 0.02).astype(dtype),
+        "blocks": tuple(blocks),
+        "final_norm": rmsnorm_init(v.d_model, dtype),
+        "out_proj": dense_init(keys[2], v.d_model, out_dim, dtype),
+    }
+
+
+def _mha(p: Params, num_heads: int, x):
+    """Bidirectional multi-head attention (no mask — patches all see
+    each other)."""
+    B, N, d = x.shape
+    hd = d // num_heads
+    q = dense(p["wq"], x).reshape(B, N, num_heads, hd)
+    k = dense(p["wk"], x).reshape(B, N, num_heads, hd)
+    v = dense(p["wv"], x).reshape(B, N, num_heads, hd)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    att = jax.nn.softmax(att * (hd ** -0.5), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, N, d)
+    return dense(p["wo"], o)
+
+
+def vision_encode(params: Params, cfg: ModelConfig, images) -> jax.Array:
+    """(B, H, W, C) float images -> (B, n_patches, evidence_dim)."""
+    v = cfg.vision
+    x = _patchify(images, v.patch)
+    x = dense(params["patch_proj"], x) + params["pos_emb"][None]
+    for blk in params["blocks"]:
+        x = x + _mha(blk, v.num_heads, rmsnorm(blk["ln1"], x, cfg.norm_eps))
+        x = x + mlp(blk["mlp"], rmsnorm(blk["ln2"], x, cfg.norm_eps), "gelu")
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return dense(params["out_proj"], x)

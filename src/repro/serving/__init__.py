@@ -2,6 +2,7 @@ from repro.serving.engine import EngineState, Request, Result, ServeEngine  # no
 from repro.serving.frontend import AsyncServeFrontend  # noqa: F401
 from repro.serving.page_pool import (PagePool, PagePoolError,  # noqa: F401
                                      PrefixCache, prefix_page_keys)
+from repro.serving.state_arena import StateArena, StateArenaError  # noqa: F401
 from repro.serving.scheduler import (CoverageScheduler,  # noqa: F401
                                      FifoScheduler, NewWork, RoundWork,
                                      Scheduler, SchedulerContext,

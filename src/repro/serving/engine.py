@@ -69,6 +69,7 @@ entirely via ``Model.prefill_suffix`` against the cached pages' KV.
 from __future__ import annotations
 
 import dataclasses
+import hashlib as _hashlib
 from functools import partial
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
@@ -86,6 +87,7 @@ from repro.sampling.samplers import (decode_step_key, sample_token,
 from repro.serving.page_pool import PagePool, prefix_page_keys
 from repro.serving.scheduler import (NewWork, PrefillWork, RoundWork,
                                      SchedulerContext, make_scheduler)
+from repro.serving.state_arena import StateArena
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +100,10 @@ class Request:
     prompt: np.ndarray                      # (L,) int32
     evidence: Optional[np.ndarray] = None   # (Ne, De) frontend embeddings
     max_new_tokens: int = 0                 # 0 => engine default
+    image: Optional[np.ndarray] = None      # (H, W, C) raw image; the
+                                            # engine's vision tower encodes
+                                            # it into evidence at submit
+                                            # (content-hash memoized)
 
 
 @dataclasses.dataclass
@@ -173,6 +179,7 @@ class ServeEngine:
                  spec_k: int = 0,
                  spec_mode: str = "coverage",
                  spec_ngram: int = 2,
+                 xmodal_rescore: bool = False,
                  seed: int = 0):
         assert mode in ("camd", "best_of_n", "self_consistency", "greedy")
         assert impl in ("xla", "pallas", "paged", "paged_pallas")
@@ -227,6 +234,18 @@ class ServeEngine:
         # gather+sdpa XLA attention (bit-identical to the dense path),
         # "paged_pallas" the block-table flash-decode kernel.
         self.paged = impl.startswith("paged")
+        # slot-state kind: "kv" slots own pageable KV only, "recurrent"
+        # slots own fixed-size state only (SSD/RG-LRU rows), "hybrid"
+        # both. Paged impls need at least one full-context attention
+        # layer to page; recurrent/hybrid state is fixed-stride and is
+        # managed by the StateArena below instead.
+        self.state_kind = model.state_kind
+        if self.paged and not model.has_pageable_layers:
+            raise ValueError(
+                f"impl={impl!r} pages full-context attention KV, but "
+                f"{model.cfg.name} ({self.state_kind}) has no pageable "
+                "layers — serve it with impl='xla'/'pallas' (fixed-stride "
+                "state rows are arena-managed, not paged)")
         self._model_impl = {"paged": "xla", "paged_pallas": "pallas"}[impl] \
             if self.paged else impl
         # cross-request prefix cache: paged engines on all-attention
@@ -315,6 +334,19 @@ class ServeEngine:
                                               0x6d6163)
         self._t = 0                      # global decode step counter
         self.has_evidence = bool(self.cfg.num_evidence_tokens)
+        # image frontend: submit-time vision-tower encode, memoized by
+        # image content hash (bounded FIFO); the digest also keys the
+        # image's pseudo-token prefix-cache stream.
+        self._vision_fn = None
+        self._image_feats: Dict[bytes, np.ndarray] = {}
+        self._image_digest: Dict[int, bytes] = {}
+        self.image_encodes = 0
+        self.image_feat_hits = 0
+        # evidence-weighted candidate rescoring through the fused
+        # xmodal_score kernel (Eq. 8-9) instead of the running host-side
+        # alignment aggregate — opt-in, recorded per candidate.
+        self.xmodal_rescore = bool(xmodal_rescore) and self.has_evidence
+        self._xmodal_jit = None
 
         self._queue: List[Request] = []
         self._slot_req = np.full(slots, -1, np.int64)   # uid per slot
@@ -366,6 +398,19 @@ class ServeEngine:
         self._min_ring = min(rings) if rings else cache_len
 
         self.state = self._blank_state()
+        # fixed-stride state arena: recurrent/hybrid prompt rows live in
+        # a bounded device-side buffer (model.make_cache over arena
+        # rows) managed with PagePool's disciplines — per-shard free
+        # lists, refcounts, conservation, telemetry — instead of the
+        # unbounded per-request host dict the kv path never needed.
+        self.arena = None
+        self._arena_buf = None
+        if self.state_kind != "kv" and not self.paged:
+            per_shard = 2 * self.slots_per_shard + 4
+            rows = per_shard * self.dp
+            self.arena = StateArena(rows, num_shards=self.dp)
+            self._arena_buf = self.model.make_cache(
+                rows, self.cache_len, dtype=self._dtype)
         if self.paged:
             # the pool enforces the resident-KV byte budget itself; give
             # it the engine's bytes-per-page (values + quant scales)
@@ -428,12 +473,21 @@ class ServeEngine:
         has a real "model" axis."""
         from jax.sharding import NamedSharding
         from repro.distributed.sharding import (batch_leading_spec,
+                                                cache_specs,
                                                 engine_state_specs,
                                                 serve_param_specs,
                                                 to_shardings)
         specs = engine_state_specs(self.cfg, self.state, mesh)
         self._state_sharding = to_shardings(mesh, specs)
         self.state = jax.device_put(self.state, self._state_sharding)
+        if self._arena_buf is not None:
+            # arena rows partition over the data axis exactly like slot
+            # rows: shard s's row range [s*rows_per_shard, ...) lands on
+            # shard s, matching the host allocator's per-shard free lists
+            self._arena_buf = jax.device_put(
+                self._arena_buf,
+                to_shardings(mesh, cache_specs(self.cfg, self._arena_buf,
+                                               mesh)))
         self.params = jax.device_put(
             self.params,
             to_shardings(mesh, serve_param_specs(self.cfg, self.params,
@@ -899,9 +953,60 @@ class ServeEngine:
         if req.uid in self._reqs or any(r.uid == req.uid
                                         for r in self._queue):
             raise ValueError(f"duplicate request uid {req.uid}")
+        if req.image is not None and req.evidence is None:
+            self._encode_image(req)
         self._arrival[req.uid] = self._submit_seq
         self._submit_seq += 1
         self._queue.append(req)
+
+    # -- image frontend ------------------------------------------------
+    def _encode_image(self, req: Request) -> None:
+        """Vision-tower encode at submit time: the image becomes the
+        request's evidence embeddings — downstream prefill/scoring is
+        unchanged. Features are memoized by content hash, so a repeated
+        image (the multi-turn / shared-asset pattern) costs one dict
+        lookup, and the same hash keys the cross-request prefix cache
+        (``_prefix_token_stream``) so repeated images skip their pages'
+        prefill entirely."""
+        if self.cfg.vision is None:
+            raise ValueError(
+                f"request {req.uid} carries an image but {self.cfg.name} "
+                "has no vision tower (cfg.vision is None)")
+        img = np.ascontiguousarray(np.asarray(req.image, np.float32))
+        digest = _hashlib.sha256(img.tobytes()).digest()
+        self._image_digest[req.uid] = digest
+        feats = self._image_feats.get(digest)
+        if feats is None:
+            if self._vision_fn is None:
+                self._vision_fn = jax.jit(self.model.encode_image)
+            feats = np.asarray(self._vision_fn(self.params, img[None])[0],
+                               np.float32)
+            self.image_encodes += 1
+            self._image_feats[digest] = feats
+            while len(self._image_feats) > 64:   # bounded FIFO memo
+                self._image_feats.pop(next(iter(self._image_feats)))
+        else:
+            self.image_feat_hits += 1
+        req.evidence = feats
+
+    def _prefix_token_stream(self, req: Request) -> Optional[np.ndarray]:
+        """The request's cache-position key stream for the prefix cache:
+        one int64 per cache position. Text-only prompts are the prompt
+        itself. Image requests prepend ``ne`` pseudo-tokens derived from
+        the image content hash — two requests sharing image bytes and a
+        prompt prefix then share page keys, so the image's KV pages hit
+        across requests. Raw precomputed-evidence requests have no
+        stable content key and stay uncacheable (None)."""
+        if req.evidence is None:
+            return np.asarray(req.prompt, np.int64)
+        digest = self._image_digest.get(req.uid)
+        if digest is None:
+            return None
+        ne = self.cfg.num_evidence_tokens
+        rep = (digest * (ne * 8 // len(digest) + 1))[:ne * 8]
+        pseudo = np.frombuffer(rep, np.int64).copy()
+        return np.concatenate(
+            [pseudo, np.asarray(req.prompt, np.int64)])
 
     def _cache_batch_axis(self, path) -> int:
         for p in path:
@@ -931,6 +1036,29 @@ class ServeEngine:
         return jax.tree_util.tree_map_with_path(
             lambda path, leaf: leaf[:, i:i + 1]
             if self._cache_batch_axis(path) == 1 else leaf[i:i + 1], cache)
+
+    # -- fixed-stride state arena (recurrent / hybrid slots) -----------
+    def _arena_put(self, info) -> None:
+        """Move a freshly prefilled prompt row into the state arena: one
+        refcounted row hold (released at ``_finish_request``), so
+        prefilled-but-unadmitted recurrent state is bounded and
+        accounted instead of pinning anonymous per-request device
+        buffers the way the dense kv path does."""
+        if self.arena is None or info.get("cache_row") is None:
+            return
+        r = self.arena.alloc(1, self.arena.best_shard())[0]
+        self._arena_buf = self._scatter_cache_rows(
+            self._arena_buf, info["cache_row"], [r])
+        info["cache_row"] = None
+        info["arena_row"] = r
+
+    def _request_row(self, info):
+        """The request's 1-row prompt cache: an arena view for
+        recurrent/hybrid engines, the per-request dense row otherwise."""
+        r = info.get("arena_row")
+        if r is not None:
+            return self._slice_cache_row(self._arena_buf, r)
+        return info["cache_row"]
 
     # -- paged cache plumbing ------------------------------------------
     def _page_shard_of(self, info, fallback: Optional[int] = None) -> int:
@@ -1366,6 +1494,22 @@ class ServeEngine:
         s["chunk_calls"] = self.chunk_calls
         s["chunk_tokens"] = self.chunk_tokens
         s["cancelled_requests"] = self.cancelled_requests
+        s["image_encodes"] = self.image_encodes
+        s["image_feat_hits"] = self.image_feat_hits
+        return s
+
+    def arena_stats(self) -> Dict[str, Any]:
+        """Fixed-stride state-arena telemetry (recurrent/hybrid
+        engines); ``{}`` on kv engines, mirroring ``kv_stats`` for the
+        paged pool."""
+        if self.arena is None:
+            return {}
+        s: Dict[str, Any] = dict(self.arena.stats())
+        s["state_kind"] = self.state_kind
+        bpr = sum(leaf.size // self.arena.num_rows * leaf.dtype.itemsize
+                  for leaf in jax.tree.leaves(self._arena_buf))
+        s["bytes_per_row"] = int(bpr)
+        s["resident_state_bytes"] = int(bpr) * self.arena.num_rows
         return s
 
     def reset_stats(self) -> None:
@@ -1387,10 +1531,14 @@ class ServeEngine:
         self.chunk_calls = 0
         self.chunk_tokens = 0
         self.cancelled_requests = 0
+        self.image_encodes = 0
+        self.image_feat_hits = 0
         self.starved_uids.clear()
         self.scheduler.reset_stats()
         if self.paged:
             self.pool.reset_stats()
+        if self.arena is not None:
+            self.arena.reset_stats()
 
     # -- async front-end hooks -----------------------------------------
     def has_work(self) -> bool:
@@ -1433,7 +1581,8 @@ class ServeEngine:
         if self.paged:
             cache = self._seed_paged_slots(info, slot_ids, lim)
         else:
-            cache = self._scatter_cache_rows(st.cache, info["cache_row"],
+            cache = self._scatter_cache_rows(st.cache,
+                                             self._request_row(info),
                                              slot_ids)
         idx = jnp.asarray(slot_ids)
         n = len(slot_ids)
@@ -1542,6 +1691,10 @@ class ServeEngine:
                             jnp.asarray(req.prompt, jnp.int32),
                             axis=0).astype(jnp.float32)
             temb = temb / (jnp.linalg.norm(temb, axis=-1, keepdims=True) + 1e-8)
+            if self.xmodal_rescore:
+                # prompt-token rows for the fused kernel's term-2 max
+                # reduction (already normalized; kernel renorm is a no-op)
+                info["text_row"] = temb[None]                # (1, L, d)
             sim = temb @ evn.T                               # (L, Ne)
             info["align_const"] = float(jnp.mean(jnp.max(sim, axis=-1)))
             # difficulty prior for the traffic scheduler: normalized
@@ -1561,6 +1714,7 @@ class ServeEngine:
         else:
             info["evid_row"] = jnp.zeros((1, 1, self.d), jnp.float32)
         self._reqs[req.uid] = info
+        self._arena_put(info)
 
     def _prefill_request(self, req: Request):
         """Unbucketed fallback: one prefill call per request (recompiles
@@ -1579,39 +1733,50 @@ class ServeEngine:
     def _mark_cacheable(self, req: Request):
         """Record the request's page-key chain so its prompt pages get
         registered in the prefix cache at seed time."""
-        if not self.prefix_cache or req.evidence is not None:
+        if not self.prefix_cache:
+            return
+        stream = self._prefix_token_stream(req)
+        if stream is None:
             return
         info = self._reqs[req.uid]
-        info["page_keys"] = prefix_page_keys(
-            np.asarray(req.prompt, np.int64), self.page_size)
+        info["page_keys"] = prefix_page_keys(stream, self.page_size)
         info["cacheable"] = True
 
     def _try_prefill_suffix(self, req: Request) -> bool:
-        """Prefix-cache fast path: if a page-aligned prefix of the prompt
-        is cached (same content hash chain), take a request hold on those
-        pages and prefill only the *suffix*, attending to the cached
-        pages' KV as context — the shared pages' prefill is skipped
-        entirely. The hit is capped at ``(L-1)//page_size`` pages so at
-        least one prompt token remains to produce last-token logits."""
-        if not self.prefix_cache or req.evidence is not None:
+        """Prefix-cache fast path: if a page-aligned prefix of the key
+        stream (image pseudo-tokens + prompt, or the prompt alone) is
+        cached, take a request hold on those pages and prefill only the
+        *suffix*, attending to the cached pages' KV as context — the
+        shared pages' prefill is skipped entirely. The hit is capped at
+        ``(L-1)//page_size`` pages so at least one prompt token remains
+        to produce last-token logits. An image request's hit must cover
+        the whole image span (positions below ``ne`` hold embeddings,
+        not tokens — no suffix forward can resume inside it)."""
+        if not self.prefix_cache:
             return False
-        prompt = np.asarray(req.prompt, np.int64)
-        usable = (len(prompt) - 1) // self.page_size
+        stream = self._prefix_token_stream(req)
+        if stream is None:
+            return False
+        usable = (len(stream) - 1) // self.page_size
         if usable <= 0:
             return False
-        keys = prefix_page_keys(prompt, self.page_size)
+        keys = prefix_page_keys(stream, self.page_size)
         pages = self.pool.prefix.match_and_hold(keys[:usable])
         if not pages:
             return False
         start = len(pages) * self.page_size
-        suffix = jnp.asarray(prompt[start:], jnp.int32)[None, :]
+        ne = len(stream) - len(req.prompt)
+        if start < ne:
+            self.pool.free(pages)        # partial image hit: re-prefill
+            return False
+        suffix = jnp.asarray(stream[start:], jnp.int32)[None, :]
         ctx = self._gather_prefix_ctx(pages)
         cache_row = self.model.make_cache(1, self.cache_len, self._dtype)
         lg, h, cache_row = self._suffix_fn(
             self.params, suffix, cache_row, ctx, jnp.int32(start))
         self.prefill_calls += 1
-        self.prefill_tokens += len(prompt) - start          # suffix only
-        self._init_info(req, cache_row, lg, h, len(prompt))
+        self.prefill_tokens += len(stream) - start          # suffix only
+        self._init_info(req, cache_row, lg, h, len(stream))
         info = self._reqs[req.uid]
         info["prompt_pages"] = pages         # request hold already taken
         info["prefix_len"] = start
@@ -1664,17 +1829,26 @@ class ServeEngine:
         job's first chunks, already resident), pick the page shard the
         whole prompt will live on, and register the cursor. If the
         cached head leaves at most one chunk of work, the one-shot
-        suffix/whole paths are strictly better — no job is opened."""
-        prompt = np.asarray(req.prompt, np.int64)
+        suffix/whole paths are strictly better — no job is opened.
+        Image requests chunk over their key stream (image pseudo-tokens
+        + prompt): the first chunk carries the whole image span, and a
+        cached head that ends inside the image span is unusable (those
+        positions hold embeddings, not resumable tokens)."""
+        stream = self._prefix_token_stream(req)
+        assert stream is not None
+        ne = len(stream) - len(req.prompt)
         pages: List[int] = []
         cur = 0
-        if self.prefix_cache and req.evidence is None:
-            usable = (len(prompt) - 1) // self.page_size
+        if self.prefix_cache:
+            usable = (len(stream) - 1) // self.page_size
             if usable > 0:
-                keys = prefix_page_keys(prompt, self.page_size)
+                keys = prefix_page_keys(stream, self.page_size)
                 pages = self.pool.prefix.match_and_hold(keys[:usable]) or []
                 cur = len(pages) * self.page_size
-        if len(prompt) - cur <= self.chunk:
+                if pages and cur < ne:
+                    self.pool.free(pages)   # partial image hit
+                    pages, cur = [], 0
+        if len(stream) - cur <= self.chunk:
             if pages:
                 self.pool.free(pages)    # release the probe hold
             return
@@ -1695,8 +1869,9 @@ class ServeEngine:
         suffix prefill (prompt_pages = chunk pages, prefix_len =
         cursor), so admission, seeding and teardown are unchanged."""
         req = job["req"]
-        prompt = np.asarray(req.prompt, np.int64)
-        L, cur, ps = len(prompt), job["pos"], self.page_size
+        stream = self._prefix_token_stream(req)
+        ne = len(stream) - len(req.prompt)
+        L, cur, ps = len(stream), job["pos"], self.page_size
         final = L - cur <= self.chunk
         take = L - cur if final else self.chunk
         if not final:
@@ -1706,12 +1881,24 @@ class ServeEngine:
             if self._shard_headroom(job["shard"]) - need < \
                     self._pages_per_candidate(L):
                 return 0
-        toks = jnp.asarray(prompt[cur:cur + take], jnp.int32)[None, :]
         cache_row = self.model.make_cache(1, self.cache_len, self._dtype)
         if cur == 0:
+            # the first chunk carries the whole image span (pseudo-token
+            # positions [0, ne) are evidence embeddings, not tokens):
+            # feed the evidence through the normal prefill frontend and
+            # only the chunk's real-token remainder as tokens
+            ev = None
+            if ne:
+                assert take > ne, \
+                    f"prefill_chunk {self.chunk} must exceed the image " \
+                    f"span ({ne} evidence tokens)"
+                ev = jnp.asarray(req.evidence, self._dtype)[None]
+            toks = jnp.asarray(np.asarray(req.prompt)[:take - ne],
+                               jnp.int32)[None, :]
             lg, h, cache_row = self._prefill_fn(self.params, toks,
-                                                cache_row, None)
+                                                cache_row, ev)
         else:
+            toks = jnp.asarray(stream[cur:cur + take], jnp.int32)[None, :]
             ctx = self._gather_prefix_ctx(job["pages"])
             lg, h, cache_row = self._suffix_fn(self.params, toks, cache_row,
                                                ctx, jnp.int32(cur))
@@ -1734,8 +1921,8 @@ class ServeEngine:
         info["prompt_pages"] = job["pages"]     # request hold carried over
         info["prefix_len"] = cur
         info["page_shard"] = job["shard"]
-        if self.prefix_cache and req.evidence is None:
-            info["page_keys"] = prefix_page_keys(prompt, ps)
+        if self.prefix_cache:
+            info["page_keys"] = prefix_page_keys(stream, ps)
             info["cacheable"] = True
             self._maybe_seed_early(req)
         return take
@@ -1750,10 +1937,15 @@ class ServeEngine:
         if not self.chunked:
             return
         ahead = max(self.B, 4)
+        ne = self.cfg.num_evidence_tokens
         for r in self._queue[:ahead]:
-            if (r.uid in self._reqs or r.uid in self._chunking or
-                    r.evidence is not None or len(r.prompt) <= self.chunk):
+            if r.uid in self._reqs or r.uid in self._chunking:
                 continue
+            stream = self._prefix_token_stream(r)
+            if stream is None or len(stream) <= self.chunk:
+                continue
+            if len(stream) > len(r.prompt) and self.chunk <= ne:
+                continue    # image span doesn't fit one chunk: one-shot
             self._start_chunk_job(r)
         if not self._chunking:
             return
@@ -1793,19 +1985,25 @@ class ServeEngine:
         pending = [r for r in self._queue[:ahead]
                    if r.uid not in self._reqs and
                    r.uid not in self._chunking]
+        if self.arena is not None and len(pending) > self.arena.free_rows:
+            # arena-bounded prefill-ahead: defer the overflow to the next
+            # pass instead of letting prompt rows outgrow the arena
+            self.arena.sizing_stalls += 1
+            pending = pending[:self.arena.free_rows]
         if not pending:
             return
         # prefix-cache hits take the suffix path (skipping the shared
         # pages' prefill). Cacheable misses are prefilled one by one with
         # their pages seeded immediately, so same-prefix requests later
         # in the SAME batch hit too (the trade against bucketed batching
-        # applies only when the prefix cache is on).
+        # applies only when the prefix cache is on). Image requests are
+        # cacheable through their content-hash pseudo-token stream.
         if self.prefix_cache:
             misses = []
             for r in pending:
                 if self._try_prefill_suffix(r):
                     self._maybe_seed_early(r)
-                elif r.evidence is None:
+                elif self._prefix_token_stream(r) is not None:
                     self._prefill_request(r)
                     self._mark_cacheable(r)
                     self._maybe_seed_early(r)
@@ -1890,6 +2088,30 @@ class ServeEngine:
         return max(0, self.n_candidates - done_cands - running)
 
     # ------------------------------------------------------------------
+    def _xmodal_fn(self, tokens: np.ndarray, evid_row, text_row):
+        """S_align for one finished candidate via the fused Eq. 8-9
+        kernel (``kernels.ops`` picks mosaic/interpret/ref per
+        platform). Tokens pad to ``max_new`` so the call compiles once
+        per prompt length, not per generation length."""
+        if self._xmodal_jit is None:
+            from repro.kernels import ops as kops
+
+            def fn(params, toks, mask, evid, text):
+                emb = jnp.take(params["embed"]["table"], toks,
+                               axis=0).astype(jnp.float32)
+                emb = emb / (jnp.linalg.norm(emb, axis=-1,
+                                             keepdims=True) + 1e-8)
+                return kops.xmodal_score(emb[None], mask[None], evid,
+                                         text)[0]
+
+            self._xmodal_jit = jax.jit(fn)
+        n = len(tokens)
+        toks = np.zeros(self.max_new, np.int32)
+        toks[:n] = tokens
+        mask = (np.arange(self.max_new) < n).astype(np.float32)
+        return self._xmodal_jit(self.params, jnp.asarray(toks),
+                                jnp.asarray(mask), evid_row, text_row)
+
     def _finish_candidates(self, slots: List[int]):
         """Fold finished slots into candidate records: ONE batched
         ``device_get`` of the finished rows (the legacy loop issued ~7
@@ -1921,6 +2143,14 @@ class ServeEngine:
             s_coh = rec["sum_coh"] / max(n - 1, 1)
             s_align = 0.5 * (rec["align"] + info["align_const"]) \
                 if self.has_evidence else 0.0
+            if self.xmodal_rescore and "text_row" in info and n > 0:
+                # recompute S_align through the fused Eq. 8-9 kernel
+                # over the candidate's generated-token embeddings — the
+                # block-reduced equivalent of the incremental aggregate
+                # (same math, kernel-verified), recorded per candidate
+                s_align = float(self._xmodal_fn(
+                    rec["tokens"], info["evid_row"], info["text_row"]))
+                rec["s_align_xmodal"] = s_align
             rec["score"] = s_gen + self.camd.lambda_g * s_align \
                 + self.camd.lambda_c * s_coh
             info["records"][cand] = rec
@@ -2043,6 +2273,9 @@ class ServeEngine:
         info["done"] = True
         info["pending_round"] = False
         info["cache_row"] = None          # free the prompt cache
+        r = info.pop("arena_row", None)
+        if r is not None:
+            self.arena.free([r])
         if self.paged and info.get("prompt_pages"):
             self.pool.free(info.pop("prompt_pages"))
         # completion feed for the async front-end (drained via
@@ -2113,6 +2346,14 @@ class ServeEngine:
                 return False
             if self.paged:
                 self._raise_pool_sizing()
+            if self.arena is not None:
+                # defensively unreachable: a full arena means held rows,
+                # and held rows mean live or admissible work — fail fast
+                # instead of spinning if that invariant ever breaks
+                raise RuntimeError(
+                    f"state arena ({self.arena.num_rows} rows, "
+                    f"{self.arena.free_rows} free) cannot admit pending "
+                    "work — arena sizing invariant violated")
         return False
 
     def run(self) -> List[Result]:

@@ -1,0 +1,75 @@
+"""Config-zoo smoke: EVERY module shipped in ``repro.configs`` —
+including the ones no other suite imports — must resolve through the
+registry under both spellings, build a reduced model, report a
+consistent capability surface, and survive one forward step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ATTN, LOCAL_ATTN
+from repro.configs import MODULE_NAMES, get_config, list_configs
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("module", MODULE_NAMES)
+def test_registry_resolves_both_spellings(module):
+    import importlib
+    m = importlib.import_module(f"repro.configs.{module}")
+    cfg = m.CONFIG
+    assert get_config(module) is cfg          # module-name spelling
+    assert get_config(cfg.name) is cfg        # arch-id spelling
+    assert cfg.name in list_configs()
+
+
+@pytest.mark.parametrize("module", MODULE_NAMES)
+def test_capabilities_consistent(module):
+    cfg = get_config(module).reduced()
+    model = build_model(cfg, jnp.float32)
+    caps = model.capabilities()
+    kinds = set(cfg.layer_kinds)
+    attn_kinds = {ATTN, LOCAL_ATTN}
+    # state kind partitions the layer stack
+    if cfg.is_encoder_decoder:
+        assert caps["state_kind"] == "kv"
+    elif kinds <= attn_kinds:
+        assert caps["state_kind"] == "kv"
+    elif kinds & attn_kinds:
+        assert caps["state_kind"] == "hybrid"
+    else:
+        assert caps["state_kind"] == "recurrent"
+    # implications between capability flags
+    if caps["supports_speculative"] or caps["supports_prefix_cache"]:
+        assert caps["state_kind"] == "kv"
+        assert caps["has_pageable_layers"]
+    if caps["has_pageable_layers"]:
+        assert not caps["is_encoder_decoder"]
+        assert ATTN in kinds
+    if caps["supports_bucketed_prefill"]:
+        assert kinds <= attn_kinds
+    assert caps["has_vision_tower"] == (cfg.vision is not None)
+    if cfg.vision is not None:
+        assert cfg.vision.n_patches == cfg.num_evidence_tokens
+        assert caps["num_evidence_tokens"] > 0
+    assert caps["num_evidence_tokens"] == cfg.num_evidence_tokens
+
+
+@pytest.mark.parametrize("module", MODULE_NAMES)
+def test_reduced_forward_step(module):
+    cfg = get_config(module).reduced().with_overrides(dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    B, L = 2, 8
+    kt, ke = jax.random.split(jax.random.PRNGKey(1))
+    toks = jax.random.randint(kt, (B, L), 0, cfg.vocab_size)
+    ev = None
+    if cfg.num_evidence_tokens:
+        ev = jax.random.normal(ke, (B, cfg.num_evidence_tokens,
+                                    cfg.evidence_dim or cfg.d_model))
+    logits, hidden, aux = model.forward(params, toks, ev)
+    offs = cfg.num_evidence_tokens if (cfg.num_evidence_tokens and
+                                       not cfg.is_encoder_decoder) else 0
+    assert logits.shape == (B, L + offs, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    for v in aux.values():
+        assert np.isfinite(np.asarray(v)).all()

@@ -1,0 +1,231 @@
+"""Multimodal (vision-language) family serving: the vision tower,
+image prefill through the engine, content-hash image prefix caching,
+and paged-vs-dense byte identity — the same differential discipline the
+attention family's paged suite pins, now with an image frontend in the
+loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServeEngine
+
+
+@pytest.fixture(scope="session")
+def vlm_model():
+    cfg = get_config("llava_1_5_7b").reduced().with_overrides(dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _image(cfg, seed=0):
+    v = cfg.vision
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(
+        (v.image_h, v.image_w, v.channels)).astype(np.float32)
+
+
+def _engine(model, params, **kw):
+    defaults = dict(slots=4, cache_len=128, mode="greedy",
+                    max_new_tokens=8, impl="xla", macro_steps=4, seed=0)
+    defaults.update(kw)
+    return ServeEngine(model, params, **defaults)
+
+
+# ---------------------------------------------------------------------------
+# vision tower
+# ---------------------------------------------------------------------------
+
+def test_vision_config_grid(vlm_model):
+    cfg, model, params = vlm_model
+    v = cfg.vision
+    assert v.n_patches == cfg.num_evidence_tokens
+    assert model.capabilities()["has_vision_tower"]
+    # full-size configs keep the published grids
+    for arch, want in (("llava_1_5_7b", 576), ("internvl2_2b", 256)):
+        full = get_config(arch)
+        assert full.vision.n_patches == want == full.num_evidence_tokens
+
+
+def test_vision_encode_shapes(vlm_model):
+    cfg, model, params = vlm_model
+    imgs = np.stack([_image(cfg, 0), _image(cfg, 1)])
+    feats = model.encode_image(params, imgs)
+    De = cfg.evidence_dim or cfg.d_model
+    assert feats.shape == (2, cfg.num_evidence_tokens, De)
+    assert np.isfinite(np.asarray(feats)).all()
+    # deterministic, batch-order equivariant
+    f0 = model.encode_image(params, imgs[:1])
+    np.testing.assert_allclose(np.asarray(feats[0]), np.asarray(f0[0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_encode_image_without_tower_raises():
+    cfg = get_config("qwen3_0_6b").reduced()
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="vision"):
+        model.encode_image(params, np.zeros((1, 8, 8, 3), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# image prefill through the engine
+# ---------------------------------------------------------------------------
+
+def _image_requests(cfg, n=4, shared=True, seed=0, plen=(4, 10)):
+    rng = np.random.default_rng(seed)
+    imgs = [_image(cfg, 0), _image(cfg, 1)]
+    reqs = []
+    for i in range(n):
+        p = rng.integers(2, cfg.vocab_size,
+                         size=int(rng.integers(*plen))).astype(np.int32)
+        img = imgs[i % 2] if shared else _image(cfg, 10 + i)
+        reqs.append((i, p, img))
+    return reqs
+
+
+def test_image_serving_and_memoization(vlm_model):
+    cfg, model, params = vlm_model
+    eng = _engine(model, params)
+    for uid, p, img in _image_requests(cfg, n=6):
+        eng.submit(Request(uid=uid, prompt=p, image=img))
+    res = eng.run()
+    assert len(res) == 6
+    assert all(r.tokens.size > 0 for r in res)
+    # 2 distinct images, 6 requests: 2 tower encodes, 4 memo hits
+    assert eng.image_encodes == 2
+    assert eng.image_feat_hits == 4
+
+
+def test_image_on_visionless_config_raises():
+    cfg = get_config("qwen3_0_6b").reduced()
+    model = build_model(cfg, jnp.float32)
+    eng = _engine(model, model.init(jax.random.PRNGKey(0)), cache_len=64)
+    with pytest.raises(ValueError, match="vision"):
+        eng.submit(Request(uid=0, prompt=np.arange(2, 6, dtype=np.int32),
+                           image=np.zeros((8, 8, 3), np.float32)))
+
+
+def test_paged_vs_dense_identity_with_images(vlm_model):
+    """Image prefill into pool pages must stream byte-identically to
+    the dense cache path — the multimodal arm of the paged differential
+    suite."""
+    cfg, model, params = vlm_model
+    reqs = _image_requests(cfg, n=4, seed=1)
+
+    def run(impl):
+        eng = _engine(model, params, impl=impl)
+        for uid, p, img in reqs:
+            eng.submit(Request(uid=uid, prompt=p, image=img))
+        return {r.uid: r.tokens for r in eng.run()}
+
+    a, b = run("xla"), run("paged")
+    for uid in a:
+        np.testing.assert_array_equal(a[uid], b[uid])
+
+
+def test_image_prefix_cache_hits_and_identity(vlm_model):
+    """Repeated image + shared prompt prefix must hit the cross-request
+    prefix cache (content-hash pseudo-token keys over the image span),
+    skip prefill tokens, and leave the streams byte-identical."""
+    cfg, model, params = vlm_model
+    rng = np.random.default_rng(2)
+    img = _image(cfg, 3)
+    base = rng.integers(2, cfg.vocab_size, size=24).astype(np.int32)
+    prompts = [np.concatenate([base, rng.integers(
+        2, cfg.vocab_size, size=3).astype(np.int32)]) for _ in range(3)]
+
+    def run(prefix_cache):
+        eng = _engine(model, params, impl="paged",
+                      prefix_cache=prefix_cache)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, image=img))
+        return {r.uid: r.tokens for r in eng.run()}, eng
+
+    a, _ = run(False)
+    b, eng = run(True)
+    for uid in a:
+        np.testing.assert_array_equal(a[uid], b[uid])
+    pc = eng.kv_stats()["prefix_cache"]
+    assert pc["hits"] > 0 and pc["hit_tokens"] > 0
+    assert eng.prefill_tokens < sum(
+        len(p) + cfg.num_evidence_tokens for p in prompts)
+
+
+def test_distinct_images_never_cross_hit(vlm_model):
+    """Different image bytes produce different pseudo-token keys: no
+    prefix-cache hit even under identical prompts."""
+    cfg, model, params = vlm_model
+    prompt = np.arange(2, 26, dtype=np.int32)
+    eng = _engine(model, params, impl="paged", prefix_cache=True)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=prompt.copy(),
+                           image=_image(cfg, 20 + i)))
+    eng.run()
+    pc = eng.kv_stats()["prefix_cache"]
+    assert pc["hit_tokens"] == 0
+
+
+def test_raw_evidence_stays_uncacheable(vlm_model):
+    """Precomputed-evidence requests have no stable content key: they
+    must not enter the prefix cache."""
+    cfg, model, params = vlm_model
+    rng = np.random.default_rng(5)
+    De = cfg.evidence_dim or cfg.d_model
+    ev = rng.standard_normal(
+        (cfg.num_evidence_tokens, De)).astype(np.float32)
+    prompt = np.arange(2, 26, dtype=np.int32)
+    eng = _engine(model, params, impl="paged", prefix_cache=True)
+    for i in range(2):
+        eng.submit(Request(uid=i, prompt=prompt.copy(), evidence=ev.copy()))
+    eng.run()
+    pc = eng.kv_stats()["prefix_cache"]
+    assert pc["insertions"] == 0 and pc["hits"] == 0
+
+
+def test_chunked_image_prefill_identity(vlm_model):
+    """Long image prompts stream through chunked prefill (first chunk
+    carries the whole image span) byte-identically to whole-prompt
+    prefill."""
+    cfg, model, params = vlm_model
+    rng = np.random.default_rng(6)
+    img = _image(cfg, 7)
+    prompts = [rng.integers(2, cfg.vocab_size,
+                            size=n).astype(np.int32) for n in (70, 40, 9)]
+
+    def run(chunk):
+        eng = _engine(model, params, impl="paged", prefix_cache=True,
+                      prefill_chunk=chunk)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, image=img))
+        return {r.uid: r.tokens for r in eng.run()}, eng
+
+    a, _ = run(0)
+    b, eng = run(32)
+    for uid in a:
+        np.testing.assert_array_equal(a[uid], b[uid])
+    assert eng.chunk_calls > 0
+
+
+def test_xmodal_rescore_matches_aggregate(vlm_model):
+    """The fused Eq. 8-9 kernel rescoring must agree with the engine's
+    incremental alignment aggregate (same math, block-reduced)."""
+    cfg, model, params = vlm_model
+    reqs = _image_requests(cfg, n=3, seed=8)
+    eng = _engine(model, params, mode="camd", xmodal_rescore=True)
+    for uid, p, img in reqs:
+        eng.submit(Request(uid=uid, prompt=p, image=img))
+    res = eng.run()
+    checked = 0
+    for r in res:
+        for c in r.candidates:
+            if "s_align_xmodal" in c and c["n"] > 0:
+                info = eng._reqs[r.uid]
+                agg = 0.5 * (c["align"] + info["align_const"])
+                np.testing.assert_allclose(c["s_align_xmodal"], agg,
+                                           rtol=1e-4, atol=1e-4)
+                checked += 1
+    assert checked > 0

@@ -1,0 +1,205 @@
+"""Recurrent / hybrid family serving: state-kind dispatch, the
+fixed-stride state arena, and byte-identity of engine streams against
+the per-request legacy loop.
+
+The differential discipline mirrors the attention family's paged-vs-
+dense suite: for each recurrent architecture, the slot-scheduled
+macro-step engine must produce byte-identical token streams to a
+1-slot legacy (macro_steps=0) engine — the per-request fallback path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Request, ServeEngine
+from repro.serving.state_arena import StateArena  # noqa: F401
+
+ARCHS = ["mamba2_780m", "recurrentgemma_2b"]
+
+
+@pytest.fixture(scope="session", params=ARCHS)
+def recurrent_model(request):
+    cfg = get_config(request.param).reduced().with_overrides(dtype="float32")
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, cfg.vocab_size,
+                         size=int(rng.integers(4, 12))).astype(np.int32)
+            for _ in range(n)]
+
+
+def _engine(model, params, **kw):
+    defaults = dict(slots=4, cache_len=64, mode="greedy",
+                    max_new_tokens=8, impl="xla", macro_steps=4, seed=0)
+    defaults.update(kw)
+    return ServeEngine(model, params, **defaults)
+
+
+def test_state_kind_dispatch():
+    kinds = {
+        "mamba2_780m": "recurrent",
+        "recurrentgemma_2b": "hybrid",
+        "qwen3_0_6b": "kv",
+        "llava_1_5_7b": "kv",
+    }
+    for arch, want in kinds.items():
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg, jnp.float32)
+        caps = model.capabilities()
+        assert model.state_kind == want, arch
+        assert caps["state_kind"] == want
+        if want != "kv":
+            assert not caps["has_pageable_layers"]
+            assert not caps["supports_prefix_cache"]
+
+
+def test_paged_impl_rejected(recurrent_model):
+    cfg, model, params = recurrent_model
+    with pytest.raises(ValueError, match="pageable"):
+        ServeEngine(model, params, slots=2, cache_len=64, impl="paged",
+                    macro_steps=2)
+
+
+def test_engine_owns_arena(recurrent_model):
+    cfg, model, params = recurrent_model
+    eng = _engine(model, params)
+    assert eng.arena is not None and eng._arena_buf is not None
+    assert eng.state_kind in ("recurrent", "hybrid")
+    s = eng.arena_stats()
+    assert s["state_kind"] == eng.state_kind
+    assert s["bytes_per_row"] > 0
+    # kv engines own no arena
+    kcfg = get_config("qwen3_0_6b").reduced()
+    kmodel = build_model(kcfg, jnp.float32)
+    keng = ServeEngine(kmodel, kmodel.init(jax.random.PRNGKey(0)),
+                       slots=2, cache_len=64, macro_steps=2)
+    assert keng.arena is None and keng.arena_stats() == {}
+
+
+def test_stream_identical_to_legacy_fallback(recurrent_model):
+    """Slot-scheduled macro-step serving over the arena must stream
+    byte-identically to the 1-slot per-request legacy loop."""
+    cfg, model, params = recurrent_model
+    prompts = _prompts(cfg)
+
+    def run(slots, macro):
+        eng = _engine(model, params, slots=slots, macro_steps=macro)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p))
+        out = {r.uid: r.tokens for r in eng.run()}
+        if eng.arena is not None:
+            eng.arena.check()
+            assert eng.arena.in_use == 0, eng.arena.stats()
+        return out
+
+    a = run(4, 4)
+    b = run(1, 0)
+    for uid in a:
+        np.testing.assert_array_equal(a[uid], b[uid])
+
+
+def test_macro_step_invariance(recurrent_model):
+    cfg, model, params = recurrent_model
+    prompts = _prompts(cfg, n=4, seed=1)
+
+    def run(macro):
+        eng = _engine(model, params, macro_steps=macro)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p))
+        return {r.uid: r.tokens for r in eng.run()}
+
+    a, b = run(1), run(6)
+    for uid in a:
+        np.testing.assert_array_equal(a[uid], b[uid])
+
+
+def test_arena_conservation_under_cancellation(recurrent_model):
+    cfg, model, params = recurrent_model
+    prompts = _prompts(cfg, n=6, seed=2)
+    eng = _engine(model, params, slots=2)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p))
+    eng._begin()
+    eng.cancel(1)            # live or pending
+    eng.cancel(5)            # queued, not yet prefilled
+    while eng._step():
+        pass
+    results = {r.uid: r for r in (eng._result(u) for u in eng._reqs)}
+    assert results[1].cancelled or results[1].tokens.size >= 0
+    eng.arena.check()
+    assert eng.arena.in_use == 0, eng.arena.stats()
+    assert eng.arena.alloc_count == eng.arena.free_count
+
+
+def test_arena_bounds_prefill_ahead(recurrent_model):
+    """Prefill-ahead may never outgrow the arena: rows in use stay
+    bounded by the arena size however many requests queue."""
+    cfg, model, params = recurrent_model
+    eng = _engine(model, params, slots=2)
+    prompts = _prompts(cfg, n=12, seed=3)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p))
+    res = eng.run()
+    assert len(res) == len(prompts)
+    s = eng.arena_stats()
+    assert s["max_in_use"] <= eng.arena.num_rows
+    assert s["in_use"] == 0
+    eng.arena.check()
+
+
+def test_masked_prefill_matches_per_row(recurrent_model):
+    """Batched prefill with ``lengths=`` must match per-row prefill on
+    logits and every recurrent-state leaf (allclose — chunk/scan shapes
+    differ with padded length, so bit-identity is out of scope and
+    ``supports_bucketed_prefill`` stays False). Local-attention KV ring
+    slots beyond a short row's ``pos`` are excluded: batched prefill
+    writes pads there that decode's validity mask rejects."""
+    cfg, model, params = recurrent_model
+    assert not model.supports_bucketed_prefill
+    rng = np.random.default_rng(4)
+    L, B = 12, 3
+    lens = np.array([12, 7, 4], np.int32)
+    toks = np.zeros((B, L), np.int32)
+    for i, n in enumerate(lens):
+        toks[i, :n] = rng.integers(2, cfg.vocab_size, n)
+
+    cache_b = model.make_cache(B, 32)
+    lg_b, _, cache_b = model.prefill(params, jnp.asarray(toks), cache_b,
+                                     lengths=jnp.asarray(lens))
+    for i, n in enumerate(lens):
+        cache_1 = model.make_cache(1, 32)
+        lg_1, _, cache_1 = model.prefill(
+            params, jnp.asarray(toks[i:i + 1, :n]), cache_1)
+        np.testing.assert_allclose(np.asarray(lg_b[i]), np.asarray(lg_1[0]),
+                                   rtol=2e-4, atol=2e-4)
+
+        def pick(tree, leaf_name):
+            out = []
+            for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+                names = [p.key for p in path
+                         if isinstance(p, jax.tree_util.DictKey)]
+                if leaf_name in names:
+                    out.append((path, leaf))
+            return out
+
+        for name in ("ssd", "conv", "h"):
+            big = pick(cache_b, name)
+            one = pick(cache_1, name)
+            assert len(big) == len(one)
+            for (pb, lb), (_, l1) in zip(big, one):
+                ax = 1 if any(
+                    isinstance(p, jax.tree_util.DictKey) and
+                    p.key in ("super", "self") for p in pb) else 0
+                row = np.take(np.asarray(lb), i, axis=ax)
+                ref = np.take(np.asarray(l1), 0, axis=ax)
+                np.testing.assert_allclose(row, ref, rtol=2e-4, atol=2e-4,
+                                           err_msg=f"{name} row {i}")
+        np.testing.assert_array_equal(
+            np.asarray(cache_b["pos"])[i], np.asarray(cache_1["pos"])[0])

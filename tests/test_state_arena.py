@@ -1,0 +1,114 @@
+"""StateArena unit tests: the fixed-stride recurrent-state allocator
+must mirror PagePool's disciplines — refcounted holds, shard-local LIFO
+free lists, fail-fast misuse errors, exact conservation."""
+import pytest
+
+from repro.serving.state_arena import StateArena, StateArenaError
+
+
+def test_alloc_free_roundtrip():
+    a = StateArena(8)
+    rows = a.alloc(3)
+    assert len(rows) == len(set(rows)) == 3
+    assert a.in_use == 3 and a.free_rows == 5
+    a.free(rows)
+    assert a.in_use == 0 and a.free_rows == 8
+    a.check()
+
+
+def test_lifo_reuse():
+    a = StateArena(8)
+    r1 = a.alloc(1)
+    a.free(r1)
+    r2 = a.alloc(1)
+    assert r1 == r2          # most-recently-freed row comes back first
+
+
+def test_share_refcounting():
+    a = StateArena(4)
+    rows = a.alloc(2)
+    a.share(rows)
+    a.free(rows)
+    assert a.in_use == 2     # second reference still holds
+    a.free(rows)
+    assert a.in_use == 0
+    a.check()
+
+
+def test_double_free_raises():
+    a = StateArena(4)
+    rows = a.alloc(1)
+    a.free(rows)
+    with pytest.raises(StateArenaError):
+        a.free(rows)
+
+
+def test_free_out_of_range_raises():
+    a = StateArena(4)
+    with pytest.raises(StateArenaError):
+        a.free([7])
+
+
+def test_share_of_free_row_raises():
+    a = StateArena(4)
+    with pytest.raises(StateArenaError):
+        a.share([0])
+
+
+def test_over_alloc_raises():
+    a = StateArena(4)
+    a.alloc(3)
+    with pytest.raises(StateArenaError):
+        a.alloc(2)
+
+
+def test_shards_are_local():
+    a = StateArena(8, num_shards=2)
+    assert a.rows_per_shard == 4
+    r0 = a.alloc(2, shard=0)
+    r1 = a.alloc(2, shard=1)
+    assert all(a.shard_of(r) == 0 for r in r0)
+    assert all(a.shard_of(r) == 1 for r in r1)
+    assert a.free_rows_in(0) == 2 and a.free_rows_in(1) == 2
+    # shard capacity is not fungible: shard 0 can't fund 3 more
+    with pytest.raises(StateArenaError):
+        a.alloc(3, shard=0)
+    a.free(r0)
+    a.free(r1)
+    a.check()
+
+
+def test_best_shard_balances():
+    a = StateArena(8, num_shards=2)
+    a.alloc(2, shard=0)
+    assert a.best_shard() == 1
+
+
+def test_invalid_sizing():
+    with pytest.raises(ValueError):
+        StateArena(0)
+    with pytest.raises(ValueError):
+        StateArena(7, num_shards=2)   # not a shard multiple
+
+
+def test_stats_and_reset():
+    a = StateArena(8)
+    rows = a.alloc(4)
+    a.free(rows[:2])
+    s = a.stats()
+    assert s["alloc_count"] == 4 and s["free_count"] == 2
+    assert s["max_in_use"] == 4 and s["in_use"] == 2
+    a.reset_stats()
+    s = a.stats()
+    assert s["alloc_count"] == 0 and s["free_count"] == 0
+    assert s["max_in_use"] == 2    # occupancy is state, not a counter
+    a.free(rows[2:])
+    a.check()
+
+
+def test_conservation_audit_catches_corruption():
+    a = StateArena(4)
+    a.alloc(1)
+    a._free[0].append(0)          # corrupt: held row also on free list
+    with pytest.raises(StateArenaError):
+        a.check()
